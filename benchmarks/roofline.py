@@ -1,0 +1,132 @@
+"""Roofline analysis per (arch x shape) cell on the single-pod 16x16 mesh.
+
+Three terms (seconds per step), per the assignment:
+
+  compute    = FLOPs            / (chips * 197e12  bf16 FLOP/s)
+  memory     = HBM bytes        / (chips * 819e9   B/s)
+  collective = collective bytes / (chips * 50e9    B/s per ICI link)
+
+Sources.  XLA's `cost_analysis()` on CPU counts `while` (lax.scan) bodies
+ONCE -- a 94-layer scan contributes one layer of FLOPs -- so the compiled
+artifact cannot supply step-accurate totals directly.  The terms therefore
+come from the analytic per-step model in `benchmarks/flops.py` (which
+counts exactly what the lowered HLO schedules: remat recompute, masked
+full-S attention, MoE dispatch einsums, per-microbatch weight gathers),
+and every cell is cross-checked against the dry-run JSON artifact
+(launch/dryrun.py): compiled FLOPs ~= analytic / (layers * microbatches),
+and the collective op *schedule* (which collectives, what group sizes)
+comes from the HLO parse.
+
+Output: benchmarks/results/roofline.csv + stdout rows for bench_output.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from benchmarks import flops as F
+from repro.configs import ARCH_IDS, get_config, supported_shapes
+from repro.models.config import SHAPES
+
+CHIPS = 256          # single-pod 16x16 (per assignment, roofline is 1-pod)
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _load(arch: str, shape: str, mesh: str = "16x16") -> Optional[dict]:
+    p = os.path.join(RESULTS, f"{arch}.{shape}.{mesh}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def cell_roofline(arch: str, shape_name: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cc = F.cell_cost(cfg, shape)
+
+    compute_s = cc.impl_flops / (CHIPS * F.PEAK_FLOPS)
+    memory_s = cc.hbm_bytes / (CHIPS * F.HBM_BW)
+    coll_s = (cc.coll_bytes_tp + cc.coll_bytes_dp) / (CHIPS * F.LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful compute time / bound time (how close the
+    # step is to the pure-compute roofline of its useful FLOPs)
+    ideal_s = cc.model_flops / (CHIPS * F.PEAK_FLOPS)
+    rec = {
+        "arch": arch, "shape": shape_name, "chips": CHIPS,
+        "model_flops": cc.model_flops, "impl_flops": cc.impl_flops,
+        "useful_ratio": cc.model_flops / cc.impl_flops,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "step_bound_s": bound,
+        "roofline_frac": ideal_s / bound,
+        "notes": cc.notes,
+    }
+    dj = _load(arch, shape_name)
+    if dj:
+        rec["hlo_flops"] = dj.get("cost", {}).get("flops", 0.0)
+        rec["hlo_temp_gib"] = dj.get("temp_size_in_bytes", 0) / 2**30
+        cols = dj.get("collectives", {})
+        rec["hlo_coll_counts"] = {
+            k: v["count"] for k, v in cols.items()
+            if isinstance(v, dict) and v.get("count")}
+        rec["compile_s"] = dj.get("compile_s")
+    return rec
+
+
+def all_cells():
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for s in supported_shapes(cfg):
+            rows.append(cell_roofline(arch, s))
+    return rows
+
+
+def bench_rows():
+    """name,value,derived rows for benchmarks.run."""
+    out = []
+    for r in all_cells():
+        out.append((
+            f"roofline.{r['arch']}.{r['shape']}",
+            round(r["roofline_frac"], 4),
+            f"dom={r['dominant']};compute_s={r['compute_s']:.4f};"
+            f"memory_s={r['memory_s']:.4f};coll_s={r['collective_s']:.4f};"
+            f"useful={r['useful_ratio']:.2f}"))
+    return out
+
+
+def write_csv(path=None):
+    rows = all_cells()
+    path = path or os.path.join(RESULTS, "roofline.csv")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    cols = ["arch", "shape", "dominant", "roofline_frac", "useful_ratio",
+            "compute_s", "memory_s", "collective_s", "step_bound_s",
+            "model_flops", "impl_flops", "hlo_flops", "hlo_temp_gib",
+            "compile_s", "notes"]
+    with open(path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    return path, rows
+
+
+def main():
+    path, rows = write_csv()
+    print(f"# wrote {path}")
+    hdr = f"{'arch':24s} {'shape':12s} {'dom':10s} {'roofline':>8s} " \
+          f"{'useful':>6s} {'comp_s':>8s} {'mem_s':>8s} {'coll_s':>8s}"
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['dominant']:10s} "
+              f"{r['roofline_frac']:8.3f} {r['useful_ratio']:6.2f} "
+              f"{r['compute_s']:8.4f} {r['memory_s']:8.4f} "
+              f"{r['collective_s']:8.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point: one section per paper table/figure plus
+the wall-clock microbenchmarks and the (arch x shape) roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --fast     # skip wallclock
+
+Output format: ``name,value,derived`` CSV rows (derived carries the
+paper's reference number so the reproduction delta is visible).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def _emit(rows):
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the wall-clock microbenchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as pt
+    print("# === paper tables (SASiML-lite analytical model) ===")
+    _emit(pt.fig3_zero_macs())
+    _emit(pt.fig8_input_grad_speedup())
+    _emit(pt.fig9_filter_grad_speedup())
+    _emit(pt.fig10_energy())
+    _emit(pt.table6_end2end_cnn())
+    _emit(pt.table8_gan())
+    print("# === beyond-paper ablations ===")
+    _emit(pt.ablation_stride_sweep())
+    _emit(pt.ablation_array_size())
+
+    if not args.fast:
+        print("# === wall-clock: zero-free vs materialized-zero (JAX) ===")
+        from benchmarks import wallclock
+        _emit(wallclock.run())
+
+    print("# === roofline per (arch x shape), single-pod 16x16 ===")
+    from benchmarks import roofline
+    _emit(roofline.bench_rows())
+    roofline.write_csv()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""EcoFlowConv: direct convolution whose backward pass uses the zero-free
+EcoFlow dataflows.
+
+`ecoflow_conv(x, w, stride, padding)` is a drop-in direct conv.  Its VJP
+computes:
+  * dL/dx with the zero-free *transposed* convolution (phase decomposition),
+  * dL/dw with the zero-free *dilated* convolution (per-tap strided gathers),
+exactly the two backward kernels the paper accelerates.  Forward/backward are
+bit-compatible with `jax.grad` of a plain `lax.conv_general_dilated` (up to
+fp accumulation order).
+
+`use_pallas=True` routes the backward through the Pallas TPU kernels in
+`repro.kernels` (interpret-mode on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ecoflow
+from repro.core.ecoflow import _pair
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def ecoflow_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
+                 use_pallas: bool = False) -> jax.Array:
+    """Direct conv (NHWC x HWIO -> NHWC) with EcoFlow zero-free backward."""
+    return ecoflow.direct_conv(x, w, stride, padding)
+
+
+def _fwd(x, w, stride, padding, use_pallas):
+    return ecoflow_conv(x, w, stride, padding, use_pallas), (x, w)
+
+
+def _bwd(stride, padding, use_pallas, res, g):
+    x, w = res
+    kh, kw = w.shape[0], w.shape[1]
+    if use_pallas:
+        from repro.kernels import ops as kops
+        dx = kops.tconv_phase(g, w, stride=_pair(stride),
+                              padding=_pair(padding),
+                              n_out=(x.shape[1], x.shape[2]))
+        dw = kops.dconv_filter_grad(x, g, stride=_pair(stride),
+                                    padding=_pair(padding), k=(kh, kw))
+    else:
+        dx = ecoflow.transposed_conv_zero_free(
+            g, w, stride=_pair(stride), padding=_pair(padding),
+            n_out=(x.shape[1], x.shape[2]))
+        dw = ecoflow.dilated_conv_filter_grad_zero_free(
+            x, g, stride=_pair(stride), padding=_pair(padding), k=(kh, kw))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+ecoflow_conv.defvjp(_fwd, _bwd)
+
+
+def ecoflow_conv_transpose(dy: jax.Array, w: jax.Array, stride=1, padding=0,
+                           n_out=None) -> jax.Array:
+    """Standalone zero-free transposed conv (e.g. GAN generator layers)."""
+    return ecoflow.transposed_conv_zero_free(
+        dy, w, stride=_pair(stride), padding=_pair(padding),
+        n_out=None if n_out is None else tuple(n_out))

@@ -1,0 +1,228 @@
+"""EcoFlow zero-free dataflows for transposed and dilated convolutions.
+
+This is the TPU-native adaptation of the paper's core contribution
+(Orosa et al., "EcoFlow", 2022).  The paper eliminates the zero padding that
+stride>1 introduces into (a) transposed convolutions (input-gradient
+computation / GAN generators) and (b) dilated convolutions (filter-gradient
+computation) by enumerating, at compile time, only the *useful* MACs and
+mapping them onto the PE array.
+
+On TPU the algebraic equivalent is *phase decomposition*:
+
+  Transposed conv (stride S):
+      dx[S*x+p, S*y+q] = sum_{a,b} dy[x-a, y-b] * W[a*S+p, b*S+q]
+  i.e. the output interleaves S*S dense stride-1 convolutions of the un-padded
+  error `dy` with 180deg-rotated *sub-filters* W_pq.  No zero is ever stored,
+  moved, or multiplied -- exactly the MAC set the paper's symbolic outer
+  product enumerates, regrouped into MXU-sized matmuls.
+
+  Dilated conv (rate S, filter-gradient form):
+      dW[kx,ky] = sum_{b,i,j} x[b, i*S+kx-P, j*S+ky-P] * dy[b,i,j]
+  i.e. one strided gather of x per filter tap, contracted with dy as a
+  (Cin x B*O*O) @ (B*O*O x Cout) matmul.  The dilated (zero-inserted) error
+  tensor is never materialized.
+
+Layouts: NHWC activations, HWIO filters (forward filter maps Cin->Cout).
+All functions are jit-compatible with static stride/shape arguments.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# Dimension numbers for NHWC/HWIO direct convolutions.
+DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _pair(v) -> tuple[int, int]:
+    if isinstance(v, (tuple, list)):
+        assert len(v) == 2
+        return (int(v[0]), int(v[1]))
+    return (int(v), int(v))
+
+
+def direct_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
+                *, preferred_dtype=jnp.float32) -> jax.Array:
+    """Plain direct (forward) convolution, NHWC x HWIO -> NHWC."""
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    return lax.conv_general_dilated(
+        x, w, window_strides=(sh, sw), padding=[(ph, ph), (pw, pw)],
+        dimension_numbers=DN, preferred_element_type=preferred_dtype,
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Zero-free transposed convolution (input gradients / GAN generator layers)
+# ---------------------------------------------------------------------------
+
+def phase_subfilters(w: jax.Array, stride) -> list[list[jax.Array]]:
+    """Split filter (K,K,Cin,Cout) into S*S rotated sub-filters.
+
+    Sub-filter (p,q) has entries W[a*S+p, b*S+q] and is spatially flipped so
+    that each phase becomes a stride-1 *correlation* (lax conv) of dy.
+    Returned with channels transposed to map Cout->Cin (HWIO with I=Cout).
+    """
+    sh, sw = _pair(stride)
+    out = []
+    for p in range(sh):
+        row = []
+        for q in range(sw):
+            sub = w[p::sh, q::sw]                      # (Kp, Kq, Cin, Cout)
+            sub = jnp.flip(sub, axis=(0, 1))           # rotate 180deg
+            sub = jnp.swapaxes(sub, 2, 3)              # (Kp, Kq, Cout, Cin)
+            row.append(sub)
+        out.append(row)
+    return out
+
+
+def transposed_conv_input_size(out_size: int, k: int, stride: int,
+                               padding: int) -> int:
+    """Forward-conv input length N given output length O (exact fit)."""
+    return stride * (out_size - 1) + k - 2 * padding
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out"))
+def transposed_conv_zero_free(dy: jax.Array, w: jax.Array, *, stride,
+                              padding=0, n_out: tuple[int, int] | None = None
+                              ) -> jax.Array:
+    """Zero-free transposed convolution (EcoFlow dataflow, dense form).
+
+    Computes the gradient w.r.t. the input of `direct_conv(x, w, stride,
+    padding)`, equivalently a transposed conv / deconvolution upsampling `dy`.
+
+    Args:
+      dy:  (B, Oh, Ow, Cout) error / generator input.
+      w:   (Kh, Kw, Cin, Cout) forward filter.
+      stride: forward stride S (upsampling factor).
+      padding: forward padding P.
+      n_out: (Nh, Nw) output (= forward input) spatial size.  Defaults to the
+        exact-fit size S*(O-1)+K-2P.
+    Returns: (B, Nh, Nw, Cin).
+    """
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    B, Oh, Ow, Cout = dy.shape
+    Kh, Kw, Cin, _ = w.shape
+    if n_out is None:
+        n_out = (transposed_conv_input_size(Oh, Kh, sh, ph),
+                 transposed_conv_input_size(Ow, Kw, sw, pw))
+    Nh, Nw = n_out
+    # Full (pre-padding-slice) output size.
+    Fh, Fw = sh * (Oh - 1) + Kh, sw * (Ow - 1) + Kw
+
+    subs = phase_subfilters(w, (sh, sw))
+    dx_full = jnp.zeros((B, Fh, Fw, Cin), dtype=dy.dtype)
+    for p in range(sh):
+        for q in range(sw):
+            sub = subs[p][q]
+            kp, kq = sub.shape[0], sub.shape[1]
+            if kp == 0 or kq == 0:
+                continue
+            # Stride-1 "full" correlation of dy with the rotated sub-filter.
+            part = lax.conv_general_dilated(
+                dy, sub, window_strides=(1, 1),
+                padding=[(kp - 1, kp - 1), (kq - 1, kq - 1)],
+                dimension_numbers=DN,
+                preferred_element_type=jnp.float32,
+            ).astype(dy.dtype)
+            # Number of output rows/cols congruent to p/q (mod S).
+            xp = -(-(Fh - p) // sh)   # ceil((Fh-p)/S)
+            xq = -(-(Fw - q) // sw)
+            dx_full = dx_full.at[:, p::sh, q::sw, :].set(part[:, :xp, :xq, :])
+    # Non-exact-fit inputs (forward ignored tail rows/cols): zero-pad tail.
+    eh = max(0, ph + Nh - Fh)
+    ew = max(0, pw + Nw - Fw)
+    if eh or ew:
+        dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
+    return dx_full[:, ph:ph + Nh, pw:pw + Nw, :]
+
+
+# ---------------------------------------------------------------------------
+# Zero-free dilated convolution (filter gradients)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "k"))
+def dilated_conv_filter_grad_zero_free(x: jax.Array, dy: jax.Array, *,
+                                       stride, padding=0,
+                                       k: tuple[int, int] | None = None
+                                       ) -> jax.Array:
+    """Zero-free dilated convolution computing dW (EcoFlow dataflow).
+
+    Gradient w.r.t. the HWIO filter of `direct_conv(x, w, stride, padding)`:
+    for each filter tap (kx, ky), a strided slice of x is contracted with dy.
+    Equals `conv(x, dy_dilated_by_S)` but never materializes the dilation
+    zeros.
+
+    Args:
+      x:  (B, Nh, Nw, Cin) forward input.
+      dy: (B, Oh, Ow, Cout) output error.
+      stride: forward stride S (== dilation rate of the gradient conv).
+      padding: forward padding P.
+      k: (Kh, Kw) filter spatial size.
+    Returns: (Kh, Kw, Cin, Cout).
+    """
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    B, Nh, Nw, Cin = x.shape
+    _, Oh, Ow, Cout = dy.shape
+    assert k is not None, "filter size k=(Kh,Kw) is required"
+    Kh, Kw = k
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    dy32 = dy.astype(jnp.float32)
+    taps = []
+    for kx in range(Kh):
+        for ky in range(Kw):
+            # x[b, i*S+kx, j*S+ky, ci] for i<Oh, j<Ow -- a zero-free gather.
+            xs = lax.slice(xp, (0, kx, ky, 0),
+                           (B, kx + (Oh - 1) * sh + 1, ky + (Ow - 1) * sw + 1,
+                            Cin), (1, sh, sw, 1))
+            # (Cin, Cout) matmul with contraction over B*Oh*Ow.
+            taps.append(jnp.einsum("bijc,bijd->cd", xs.astype(jnp.float32),
+                                   dy32, preferred_element_type=jnp.float32))
+    dw = jnp.stack(taps).reshape(Kh, Kw, Cin, Cout)
+    return dw.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Padding bookkeeping (paper Sec. 3.1 closed forms) -- used by the dataflow
+# simulator and by tests.
+# ---------------------------------------------------------------------------
+
+def tconv_inner_padding(n: int, stride: int) -> int:
+    """# of internal zeros inserted into an N x N error map at stride S."""
+    return (stride * (n - 1) + 1) ** 2 - n ** 2
+
+
+def tconv_outer_padding(n: int, k: int, stride: int) -> int:
+    """# of border zeros for an N x N error map, K x K filter, stride S."""
+    return 4 * (k - 1) * (stride * (n - 1) + 1) + 4 * (k - 1) ** 2
+
+
+def dconv_inner_padding(n: int, stride: int) -> int:
+    """# of internal zeros inserted into an N x N error map (dilated conv)."""
+    return (stride * (n - 1) + 1) ** 2 - n ** 2
+
+
+def tconv_zero_mac_fraction(n: int, k: int, stride: int) -> float:
+    """Fraction of MACs that touch an inserted zero in the naive transposed
+    conv (sliding K x K window over the padded error map)."""
+    padded = stride * (n - 1) + 1 + 2 * (k - 1)
+    total_elems = padded * padded
+    useful_elems = n * n
+    # Each window position performs K*K MACs; expected fraction of zero MACs
+    # equals the zero density of the padded map (windows tile it uniformly).
+    return 1.0 - useful_elems / total_elems
+
+
+def dconv_zero_mac_fraction(n: int, stride: int) -> float:
+    """Fraction of zero MACs in the naive dilated conv (zero-dilated error
+    used as the filter)."""
+    dil = stride * (n - 1) + 1
+    return 1.0 - (n * n) / (dil * dil)

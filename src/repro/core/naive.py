@@ -1,0 +1,82 @@
+"""Naive (materialized-zero) baselines for transposed and dilated convs.
+
+These reproduce what a CNN-inference accelerator does when handed a
+transposed/dilated convolution (paper Sec. 3.1): insert `S-1` zero rows/cols
+into the error map (inner padding), add `K-1` border zeros (outer padding),
+then run a plain direct convolution.  The zero multiplications are real work
+on the array (the paper's baselines clock-gate them for energy but still
+spend the cycles).
+
+They serve as (a) correctness oracles for the zero-free EcoFlow path and
+(b) the MAC/cycle baselines for the dataflow simulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.ecoflow import DN, _pair
+
+
+def dilate_insert_zeros(x: jax.Array, stride) -> jax.Array:
+    """Insert (S-1) zeros between spatial elements of NHWC x."""
+    sh, sw = _pair(stride)
+    if sh == 1 and sw == 1:
+        return x
+    B, H, W, C = x.shape
+    out = jnp.zeros((B, sh * (H - 1) + 1, sw * (W - 1) + 1, C), x.dtype)
+    return out.at[:, ::sh, ::sw, :].set(x)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out"))
+def transposed_conv_naive(dy: jax.Array, w: jax.Array, *, stride, padding=0,
+                          n_out=None) -> jax.Array:
+    """Transposed conv via explicit zero insertion + border padding + direct
+    conv with the 180deg-rotated filter.  (B,O,O,Cout) -> (B,N,N,Cin)."""
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    B, Oh, Ow, Cout = dy.shape
+    Kh, Kw, Cin, _ = w.shape
+    if n_out is None:
+        n_out = (sh * (Oh - 1) + Kh - 2 * ph, sw * (Ow - 1) + Kw - 2 * pw)
+    Nh, Nw = n_out
+    dy_dil = dilate_insert_zeros(dy, (sh, sw))
+    # 180deg-rotated filter, channels swapped to map Cout -> Cin.
+    w_rot = jnp.swapaxes(jnp.flip(w, axis=(0, 1)), 2, 3)
+    full = lax.conv_general_dilated(
+        dy_dil, w_rot, window_strides=(1, 1),
+        padding=[(Kh - 1, Kh - 1), (Kw - 1, Kw - 1)],
+        dimension_numbers=DN, preferred_element_type=jnp.float32,
+    ).astype(dy.dtype)
+    eh = max(0, ph + Nh - full.shape[1])
+    ew = max(0, pw + Nw - full.shape[2])
+    if eh or ew:
+        full = jnp.pad(full, ((0, 0), (0, eh), (0, ew), (0, 0)))
+    return full[:, ph:ph + Nh, pw:pw + Nw, :]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "k"))
+def dilated_conv_filter_grad_naive(x: jax.Array, dy: jax.Array, *, stride,
+                                   padding=0, k=None) -> jax.Array:
+    """Filter gradient via explicit zero-dilation of dy used as the filter of
+    a direct convolution over (padded) x."""
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    Kh, Kw = k
+    B, Nh, Nw, Cin = x.shape
+    dy_dil = dilate_insert_zeros(dy, (sh, sw))          # (B, Dh, Dw, Cout)
+    # Treat x as a batch-of-channel images and dy_dil as filters:
+    # dW[kx,ky,ci,co] = sum_b conv(x[..,ci], dy_dil[b,..,co]) at offset kx,ky.
+    # Express with conv_general_dilated: lhs (Cin, Nh, Nw, B) "N"=Cin feature
+    # maps, rhs (Dh, Dw, B, Cout) -- contraction over batch.
+    lhs = jnp.transpose(x, (3, 1, 2, 0))                 # Cin,H,W,B
+    rhs = jnp.transpose(dy_dil, (1, 2, 0, 3))            # Dh,Dw,B,Cout
+    out = lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding=[(ph, ph), (pw, pw)],
+        dimension_numbers=DN, preferred_element_type=jnp.float32,
+    )                                                    # Cin,Kh,Kw,Cout
+    out = jnp.transpose(out, (1, 2, 0, 3))[:Kh, :Kw]
+    return out.astype(x.dtype)

@@ -1,0 +1,89 @@
+"""Sharded data pipeline: deterministic synthetic + memory-mapped file
+token streams, background prefetch, and skip-ahead for restart/straggler
+recovery.
+
+Determinism contract: batch contents are a pure function of (seed, step),
+independent of worker count or restart position -- the property elastic
+restarts and straggler-skipping rely on (DESIGN.md Sec. 6).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class TokenDataset:
+    """Deterministic token stream.  Synthetic (hash-based) by default, or
+    backed by a memory-mapped uint16/uint32 token file."""
+
+    def __init__(self, *, vocab: int, seq_len: int, global_batch: int,
+                 seed: int = 0, token_file: Optional[str] = None,
+                 embed_dim: Optional[int] = None):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.embed_dim = embed_dim
+        self._tokens = None
+        if token_file is not None:
+            self._tokens = np.memmap(token_file, dtype=np.uint32, mode="r")
+
+    def batch(self, step: int) -> dict:
+        """Batch for a global step -- pure function of (seed, step)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        B, S = self.global_batch, self.seq_len
+        if self._tokens is not None:
+            n = len(self._tokens) - (S + 1)
+            starts = rng.integers(0, n, size=B)
+            toks = np.stack([self._tokens[s:s + S + 1] for s in starts])
+            toks = toks.astype(np.int32)
+        else:
+            toks = rng.integers(0, self.vocab, size=(B, S + 1),
+                                dtype=np.int32)
+        out = {"labels": toks[:, 1:]}
+        if self.embed_dim is not None:  # audio/vlm stub frontends
+            out["inputs"] = rng.standard_normal(
+                (B, S, self.embed_dim)).astype(np.float32)
+        else:
+            out["inputs"] = toks[:, :-1]
+        return out
+
+    def iterate(self, start_step: int = 0) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch (depth-bounded) with device put hook."""
+
+    def __init__(self, dataset: TokenDataset, start_step: int = 0,
+                 depth: int = 2, put=None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._put = put or (lambda x: x)
+
+        def worker():
+            for batch in dataset.iterate(start_step):
+                if self._stop.is_set():
+                    return
+                self._q.put(self._put(batch))
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: zero-free dilated-convolution filter gradient.
+
+EcoFlow's filter-gradient dataflow (paper Sec. 4.2): one PE per filter
+gradient element, each accumulating  sum_{b,i,j} x[b,iS+kx,jS+ky] * dy[b,i,j]
+locally, with the ifmap delivered via per-tap multicast groups.
+
+TPU mapping: the per-tap multicast group is a strided gather of x (built
+once in the wrapper -- `x_taps[t] = x[:, kx::S, ky::S]`), and each PE-column
+accumulation becomes one (Cin x B*O*O) @ (B*O*O x Cout) MXU matmul.  The
+batch dimension is the innermost (sequential) grid axis so partial products
+accumulate into the fp32 output tile across grid steps -- the Pallas
+equivalent of the paper's local psum register.
+
+BlockSpec tiling: grid (T, Cin_tiles, Cout_tiles, B); per step the kernel
+holds x_tap (1,1,Oh,Ow,Ci_t), dy (1,Oh,Ow,Co_t) and out (1,Ci_t,Co_t) in
+VMEM.  Ci_t = Co_t = 128 aligns the matmul to the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fg_kernel(x_ref, dy_ref, out_ref):
+    b = pl.program_id(3)
+    oh, ow = x_ref.shape[2], x_ref.shape[3]
+    lhs = x_ref[0, 0].reshape(oh * ow, x_ref.shape[-1]).astype(jnp.float32)
+    rhs = dy_ref[0].reshape(oh * ow, dy_ref.shape[-1]).astype(jnp.float32)
+    prod = jax.lax.dot_general(lhs, rhs, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[0] = prod.astype(out_ref.dtype)
+
+    @pl.when(b > 0)
+    def _acc():
+        out_ref[0] += prod.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "k",
+                                             "tile", "interpret"))
+def dconv_filter_grad_pallas(x: jax.Array, dy: jax.Array, *, stride,
+                             padding, k, tile: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """dW (Kh,Kw,Cin,Cout) for direct_conv(x, w, stride, padding)."""
+    sh, sw = stride
+    ph, pw = padding
+    Kh, Kw = k
+    B, Nh, Nw, Cin = x.shape
+    _, Oh, Ow, Cout = dy.shape
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    # Per-tap strided gathers = the paper's ifmap multicast groups.
+    taps = []
+    for kx in range(Kh):
+        for ky in range(Kw):
+            taps.append(jax.lax.slice(
+                xp, (0, kx, ky, 0),
+                (B, kx + (Oh - 1) * sh + 1, ky + (Ow - 1) * sw + 1, Cin),
+                (1, sh, sw, 1)))
+    x_taps = jnp.stack(taps)                      # (T, B, Oh, Ow, Cin)
+    T = Kh * Kw
+    ci_t, co_t = min(tile, Cin), min(tile, Cout)
+    n_ci, n_co = -(-Cin // ci_t), -(-Cout // co_t)
+    if Cin % ci_t:
+        x_taps = jnp.pad(x_taps, ((0, 0),) * 4 + ((0, n_ci * ci_t - Cin),))
+    if Cout % co_t:
+        dy = jnp.pad(dy, ((0, 0),) * 3 + ((0, n_co * co_t - Cout),))
+    out = pl.pallas_call(
+        _fg_kernel,
+        grid=(T, n_ci, n_co, B),
+        in_specs=[
+            pl.BlockSpec((1, 1, Oh, Ow, ci_t),
+                         lambda t, ci, co, b: (t, b, 0, 0, ci)),
+            pl.BlockSpec((1, Oh, Ow, co_t),
+                         lambda t, ci, co, b: (b, 0, 0, co)),
+        ],
+        out_specs=pl.BlockSpec((1, ci_t, co_t),
+                               lambda t, ci, co, b: (t, ci, co)),
+        out_shape=jax.ShapeDtypeStruct((T, n_ci * ci_t, n_co * co_t),
+                                       jnp.float32),
+        interpret=interpret,
+    )(x_taps, dy)
+    dw = out[:, :Cin, :Cout].reshape(Kh, Kw, Cin, Cout)
+    return dw.astype(x.dtype)

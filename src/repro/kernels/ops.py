@@ -1,0 +1,66 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+`tconv_phase` assembles the full zero-free transposed convolution from S*S
+phase kernels (interleaving is a pure layout operation); `dconv_filter_grad`
+is the zero-free filter gradient.  Both run the kernels in interpret mode on
+CPU (the container target) and compiled mode on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import flash_attention_pallas
+from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
+from repro.kernels.tconv_phase import tconv_phase_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
+def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128):
+    """Blockwise causal GQA attention via the Pallas flash kernel."""
+    return flash_attention_pallas(q, k, v, causal=causal, blk_q=blk_q,
+                                  blk_k=blk_k, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out"))
+def tconv_phase(dy: jax.Array, w: jax.Array, *, stride, padding,
+                n_out) -> jax.Array:
+    """Zero-free transposed conv via S*S Pallas phase kernels.
+
+    dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout) -> dx (B,Nh,Nw,Cin).
+    """
+    sh, sw = stride
+    ph, pw = padding
+    B, Oh, Ow, Cout = dy.shape
+    Kh, Kw, Cin, _ = w.shape
+    Nh, Nw = n_out
+    Fh, Fw = sh * (Oh - 1) + Kh, sw * (Ow - 1) + Kw
+    dx_full = jnp.zeros((B, Fh, Fw, Cin), dtype=dy.dtype)
+    for p in range(sh):
+        for q in range(sw):
+            sub = w[p::sh, q::sw]
+            kp, kq = sub.shape[0], sub.shape[1]
+            if kp == 0 or kq == 0:
+                continue
+            sub = jnp.swapaxes(jnp.flip(sub, axis=(0, 1)), 2, 3)
+            part = tconv_phase_pallas(dy, sub, interpret=_INTERPRET)
+            xp = -(-(Fh - p) // sh)
+            xq = -(-(Fw - q) // sw)
+            dx_full = dx_full.at[:, p::sh, q::sw, :].set(part[:, :xp, :xq, :])
+    eh, ew = max(0, ph + Nh - Fh), max(0, pw + Nw - Fw)
+    if eh or ew:
+        dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
+    return dx_full[:, ph:ph + Nh, pw:pw + Nw, :]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "k"))
+def dconv_filter_grad(x: jax.Array, dy: jax.Array, *, stride, padding,
+                      k) -> jax.Array:
+    """Zero-free filter gradient via the Pallas tap-matmul kernel."""
+    return dconv_filter_grad_pallas(x, dy, stride=tuple(stride),
+                                    padding=tuple(padding), k=tuple(k),
+                                    interpret=_INTERPRET)

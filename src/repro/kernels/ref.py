@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the mathematical specification of one kernel, written with
+plain jnp/lax ops (these are themselves validated against `jax.vjp` of a
+plain convolution in tests/test_core_conv.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ecoflow
+
+
+def tconv_phase_ref(dy, w, *, stride, padding, n_out):
+    """Oracle for the phase-decomposed transposed convolution kernel."""
+    return ecoflow.transposed_conv_zero_free(
+        dy, w, stride=stride, padding=padding, n_out=tuple(n_out))
+
+
+def dconv_filter_grad_ref(x, dy, *, stride, padding, k):
+    """Oracle for the zero-free filter-gradient kernel."""
+    return ecoflow.dilated_conv_filter_grad_zero_free(
+        x, dy, stride=stride, padding=padding, k=tuple(k))
+
+
+def stride1_full_corr_ref(dy, w_sub):
+    """Oracle for the inner stride-1 'full' correlation each phase runs:
+    dy (B,Oh,Ow,Cout) * w_sub (kp,kq,Cout,Cin) -> (B, Oh+kp-1, Ow+kq-1, Cin).
+    """
+    kp, kq = w_sub.shape[0], w_sub.shape[1]
+    return jax.lax.conv_general_dilated(
+        dy, w_sub, window_strides=(1, 1),
+        padding=[(kp - 1, kp - 1), (kq - 1, kq - 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(dy.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """Oracle for the flash-attention kernel: (B,S,H,D) GQA attention."""
+    Bq, Sq, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    rep = Hq // Hk
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        ki = jnp.arange(Sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: phase-decomposed (zero-free) transposed convolution.
+
+One `pallas_call` computes one *phase* of the EcoFlow transposed conv: a
+stride-1 "full" correlation of the un-padded error map `dy` with a rotated
+sub-filter `w_pq`.  The wrapper in `ops.py` launches S*S phases and
+interleaves the results.
+
+TPU mapping (the EcoFlow->MXU translation, see DESIGN.md Sec. 2):
+  * the paper's per-PE MAC schedule (one weight broadcast per cycle, one
+    error element per PE) becomes a static tap loop of
+    (spatial x Cout) @ (Cout x Cin) MXU matmuls;
+  * the paper's multicast groups become the shifted static slices of the
+    VMEM-resident dy block;
+  * the paper's vertical psum chains become the fp32 accumulator tile.
+
+BlockSpec tiling: grid (B, Cin_tiles).  Per grid step the kernel holds
+  dy block   (1, Hp, Wp, Cout)          -- zero-padded by (kp-1, kq-1)
+  w block    (kp, kq, Cout, Cin_t)
+  out block  (1, Ho, Wo, Cin_t)         -- fp32 accumulate, cast on store
+in VMEM.  Channel tile Cin_t (default 128) keeps the working set within
+VMEM for the layer sizes the paper evaluates (<=130x130 spatial); matmul
+dims are multiples of 128 whenever Cout/Cin are, which is MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _phase_kernel(dy_ref, w_ref, out_ref, *, kp: int, kq: int,
+                  ho: int, wo: int):
+    """out[0,x,y,ci] = sum_{a,b,co} dy_pad[0, x+a', y+b', co] w[a,b,co,ci]
+    as a static tap loop of MXU matmuls with an fp32 VMEM accumulator."""
+    acc = jnp.zeros((ho * wo, out_ref.shape[-1]), dtype=jnp.float32)
+    for a in range(kp):
+        for b in range(kq):
+            # Shifted window of the padded dy block: (ho, wo, Cout).
+            win = dy_ref[0, a:a + ho, b:b + wo, :]
+            lhs = win.reshape(ho * wo, win.shape[-1]).astype(jnp.float32)
+            rhs = w_ref[a, b].astype(jnp.float32)
+            acc += jax.lax.dot(lhs, rhs,
+                               preferred_element_type=jnp.float32)
+    out_ref[0] = acc.reshape(ho, wo, out_ref.shape[-1]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cin_tile", "interpret"))
+def tconv_phase_pallas(dy: jax.Array, w_sub: jax.Array, *,
+                       cin_tile: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """Stride-1 full correlation of dy with one rotated sub-filter.
+
+    dy:    (B, Oh, Ow, Cout)
+    w_sub: (kp, kq, Cout, Cin)  already rotated/selected by the wrapper
+    returns (B, Oh+kp-1, Ow+kq-1, Cin)
+    """
+    B, Oh, Ow, Cout = dy.shape
+    kp, kq, _, Cin = w_sub.shape
+    ho, wo = Oh + kp - 1, Ow + kq - 1
+    # "Full" correlation: pad dy once on the host side of the kernel.
+    dy_pad = jnp.pad(dy, ((0, 0), (kp - 1, kp - 1), (kq - 1, kq - 1), (0, 0)))
+    hp, wp = dy_pad.shape[1], dy_pad.shape[2]
+    ct = min(cin_tile, Cin)
+    n_ct = -(-Cin // ct)
+    if Cin % ct:
+        w_sub = jnp.pad(w_sub, ((0, 0), (0, 0), (0, 0), (0, n_ct * ct - Cin)))
+    kern = functools.partial(_phase_kernel, kp=kp, kq=kq, ho=ho, wo=wo)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, n_ct),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, Cout), lambda b, c: (b, 0, 0, 0)),
+            pl.BlockSpec((kp, kq, Cout, ct), lambda b, c: (0, 0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, ct), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, ho, wo, n_ct * ct), dy.dtype),
+        interpret=interpret,
+    )(dy_pad, w_sub)
+    return out[..., :Cin]

@@ -1,0 +1,203 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and record memory / cost / collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+      --shape train_4k [--multi-pod] [--out benchmarks/results]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell
+
+The per-cell JSON artifacts feed benchmarks/roofline.py and
+EXPERIMENTS.md Sec. Dry-run / Sec. Roofline.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, supported_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.models.config import SHAPES
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO,
+    keyed by op kind; also record per-op replica-group sizes."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    group_sizes = []
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"^[%\w.\-]*\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        result_sig, opname = m.group(1), m.group(2)
+        kind = None
+        for k in COLLECTIVES:
+            # match sync ops, versioned ops ("all-gather.1") and async
+            # starts; skip "-done" halves so async pairs count once.
+            if opname == k or opname.startswith(k + ".") or \
+                    opname == k + "-start":
+                kind = k
+                break
+        if opname.endswith("-done"):
+            continue
+        if kind is None:
+            continue
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(result_sig)
+        gm = re.search(r"replica_groups=\{\{([\d,]+)\}", ls)
+        if gm:
+            group_sizes.append(len(gm.group(1).split(",")))
+    out["group_sizes"] = sorted(set(group_sizes))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False, *, serve_sharding: str = "train",
+             n_micro=None, remat=None, bf16_params: bool = False,
+             moe_ffn_data: bool = False, kv_quant: bool = False,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = cfg.scaled(kv_quant=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, serve_sharding=serve_sharding,
+                         n_micro=n_micro, remat=remat,
+                         bf16_params=bf16_params,
+                         moe_ffn_data=moe_ffn_data)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "variant": {"serve_sharding": serve_sharding, "n_micro": n_micro,
+                    "remat": remat},
+    }
+    if tag:
+        shape_name = f"{shape_name}.{tag}"
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+    except Exception as e:  # pragma: no cover - backend specific
+        rec["memory_analysis_error"] = str(e)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       ("flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = str(e)
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["hlo_bytes"] = len(hlo)
+    os.makedirs(out_dir, exist_ok=True)
+    if save_hlo:
+        with open(os.path.join(out_dir, f"{arch}.{shape_name}."
+                               f"{rec['mesh']}.hlo"), "w") as f:
+            f.write(hlo)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}.{shape_name}.{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=[a.replace("_", "-") for a in ARCH_IDS]
+                    + ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--serve-sharding", choices=("train", "tp"),
+                    default="train",
+                    help="'tp' = serve-time resharded weights (Sec. Perf)")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--remat", choices=("none", "full"), default=None)
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="bf16 storage params + fp32 master in opt state")
+    ap.add_argument("--moe-ffn-shard", action="store_true",
+                    help="shard expert FFN dim (not D) over the data axis")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache for decode cells (Perf A3)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output artifact filename")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in supported_shapes(get_config(arch)):
+                cells.append((arch, s, False))
+                cells.append((arch, s, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, s, mp in cells:
+        tag = f"{arch} x {s} x {'2x16x16' if mp else '16x16'}"
+        try:
+            rec = run_cell(arch, s, mp, args.out, args.save_hlo,
+                           serve_sharding=args.serve_sharding,
+                           n_micro=args.n_micro, remat=args.remat,
+                           bf16_params=args.bf16_params,
+                           moe_ffn_data=args.moe_ffn_shard,
+                           kv_quant=args.kv_quant, tag=args.tag)
+            flops = rec.get("cost", {}).get("flops", -1)
+            print(f"OK   {tag}: compile={rec['compile_s']}s "
+                  f"flops={flops:.3e} "
+                  f"temp={rec.get('temp_size_in_bytes', -1)/2**30:.2f}GiB")
+        except Exception:
+            failures += 1
+            print(f"FAIL {tag}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

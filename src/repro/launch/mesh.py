@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod : 2 x 16 x 16 = 512 chips, axes ("pod", "data", "model"); the
+"pod" axis carries only data parallelism + gradient all-reduce, so the
+cross-pod (DCN-class) link never sees layer-granular collectives.
+
+Defined as functions so importing the module never touches jax device
+state (device count is locked on first jax init; the dry-run sets
+XLA_FLAGS before any import).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, found {len(devices)}; the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
+    """Tiny mesh over however many devices exist (CPU tests)."""
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

@@ -1,0 +1,290 @@
+"""jit-able train / prefill / decode steps + abstract input specs.
+
+These are the exact functions the dry-run lowers and compiles for every
+(architecture x input-shape x mesh) cell, and the trainer/server execute
+for real.  All sharding decisions live here + parallel/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+from repro.models.lm import LM
+from repro.optim.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.parallel import sharding as sh
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for one shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.embed_input:
+            inputs = sds((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            inputs = sds((B, S), jnp.int32)
+        return {"inputs": inputs, "labels": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.embed_input:
+            return {"inputs": sds((B, S, cfg.d_model), jnp.bfloat16)}
+        return {"inputs": sds((B, S), jnp.int32)}
+    # decode: one new token against a seq_len-deep cache
+    lm = LM(cfg)
+    cache = jax.eval_shape(functools.partial(lm.init_cache, B, S))
+    return {"tokens": sds((B, 1), jnp.int32), "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cache_shapes, mesh: Mesh):
+    la = sh.logical_axes(mesh)
+    dp, tp = la["dp"], la["tp"]
+
+    def spec(path, leaf):
+        name = sh._path_str(path).split("/")[-1]
+        r = len(leaf.shape)
+        if name in ("k", "v"):
+            # KV cache: batch over data, SEQUENCE over model.  Sharding
+            # the (few) kv heads never divides 16, and leaving the cache
+            # replicated makes GSPMD gather the whole (B,S,H,D) tensor per
+            # decode step; sequence sharding turns that into per-step
+            # all-reduces of (B,1,H) softmax stats + (B,1,H,D) partial
+            # outputs (flash-decoding style) -- see EXPERIMENTS.md Perf.
+            entries = [None] * (r - 4) + [dp, tp, None, None]
+        elif name in ("k_scale", "v_scale"):
+            entries = [None] * (r - 3) + [dp, tp, None]
+        elif name == "conv":
+            entries = [None] * (r - 3) + [dp, None, tp]
+        elif name == "state":
+            entries = [None] * (r - 4) + [dp, tp, None, None]
+        elif name.startswith("x_prev"):
+            entries = [None] * (r - 3) + [dp, None, None]
+        else:
+            entries = [None] * r
+        return sh._guard(mesh, entries, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def batch_shardings(cfg, shape, mesh):
+    specs = {}
+    for k, v in input_specs(cfg, shape).items():
+        if k == "cache":
+            specs[k] = cache_pspecs(v, mesh)
+        else:
+            specs[k] = sh.batch_pspec(mesh, len(v.shape), 0, v.shape[0])
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        specs, is_leaf=lambda s: isinstance(s, P))
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None):
+    """(params, opt_state) as ShapeDtypeStructs -- no allocation."""
+    lm = LM(cfg)
+    params = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    opt = None
+    if opt_cfg is not None:
+        opt = jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg),
+                             params)
+    return params, opt
+
+
+def effective_microbatches(cfg: ModelConfig, global_batch: int,
+                           mesh: Optional[Mesh]) -> int:
+    """Clamp cfg.microbatch so each microbatch still divides the data
+    axes (otherwise activations fall back to replicated)."""
+    n = max(1, cfg.microbatch)
+    dp = 1
+    if mesh is not None:
+        la = sh.logical_axes(mesh)
+        dp = sh._axis_size(mesh, la["dp"])
+    while n > 1 and (global_batch % n or (global_batch // n) % dp):
+        n -= 1
+    return n
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    n_micro: int = 1):
+    lm = LM(cfg)
+    cdt = cfg.compute_dtype
+
+    def _precast(p):
+        # Cast weight matrices to the compute dtype BEFORE the FSDP
+        # all-gathers and PIN the bf16 copy to the parameter sharding:
+        # without the constraint XLA sinks the convert into the layer
+        # loop and the partitioner gathers the fp32 master instead
+        # (measured, EXPERIMENTS.md Sec. Perf change T2).  Norm scales /
+        # biases (ndim < 2) stay fp32; gradients flow through the cast
+        # and accumulate in fp32.
+        mesh = sh._state().mesh
+
+        def cast(path, a):
+            if a.ndim < 2 or a.dtype != jnp.float32:
+                return a
+            c = a.astype(cdt)
+            if mesh is not None:
+                spec = sh.leaf_pspec(sh._path_str(path), a.shape, mesh)
+                c = jax.lax.with_sharding_constraint(
+                    c, NamedSharding(mesh, spec))
+            return c
+
+        return jax.tree_util.tree_map_with_path(cast, p)
+
+    def grads_of(params, inputs, labels):
+        def loss_fn(p):
+            return lm.loss(_precast(p), inputs, labels)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, aux), grads = grads_of(params, batch["inputs"],
+                                          batch["labels"])
+        else:
+            # Gradient accumulation: scan over microbatches keeps the
+            # per-layer activation stash 1/n_micro as large.
+            def split(t):
+                return t.reshape(n_micro, t.shape[0] // n_micro,
+                                 *t.shape[1:])
+            mb = jax.tree.map(split, {"inputs": batch["inputs"],
+                                      "labels": batch["labels"]})
+
+            def acc_fn(carry, mbatch):
+                g_acc, l_acc = carry
+                (loss, _), grads = grads_of(params, mbatch["inputs"],
+                                            mbatch["labels"])
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                     g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = lax_scan_named(acc_fn, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            aux = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+        params, opt_state, om = adamw_update(grads, opt_state, params,
+                                             opt_cfg)
+        metrics = {"loss": loss, **aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def lax_scan_named(f, init, xs):
+    import jax.lax as lax
+    return lax.scan(f, init, xs)
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    lm = LM(cfg)
+
+    def prefill_step(params, inputs):
+        return lm.prefill(params, inputs, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    lm = LM(cfg)
+
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Lowering helper used by the dry-run and the launchers
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               opt_cfg: Optional[AdamWConfig] = None, *,
+               serve_sharding: str = "train",
+               n_micro: Optional[int] = None,
+               remat: Optional[str] = None,
+               bf16_params: bool = False,
+               moe_ffn_data: bool = False):
+    """Lower the step function for one (arch x shape) cell on `mesh`.
+
+    Perf-iteration knobs (Sec. Perf of EXPERIMENTS.md):
+      serve_sharding="tp" : serve-time resharded weights (fold the data
+        axes into TP; no per-step weight all-gathers) for prefill/decode.
+      n_micro : override the config's gradient-accumulation count.
+      remat   : override the config's remat policy ("none" | "full").
+
+    Returns the jax `Lowered` object (call .compile() on it).
+    """
+    if remat is not None:
+        cfg = cfg.scaled(remat=remat)
+    opt_cfg = opt_cfg or AdamWConfig(
+        moment_dtype="bfloat16" if cfg.name == "qwen3-moe-235b-a22b"
+        else "float32")
+    if bf16_params:
+        import dataclasses as _dc
+        opt_cfg = _dc.replace(opt_cfg, bf16_params=True)
+    serve = (serve_sharding == "tp" and shape.kind != "train")
+    specs = input_specs(cfg, shape)
+    params_abs, opt_abs = abstract_state(
+        cfg, opt_cfg if shape.kind == "train" else None)
+    if bf16_params:
+        # working params stored bf16; fp32 master lives in opt state
+        params_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32 and len(s.shape) >= 2 else s,
+            params_abs)
+    p_sh = _named(sh.tree_pspecs(params_abs, mesh, serve=serve,
+                                 moe_ffn_data=moe_ffn_data), mesh)
+    b_sh = batch_shardings(cfg, shape, mesh)
+
+    with mesh, sh.use_mesh(mesh):
+        if shape.kind == "train":
+            o_sh = _named(sh.tree_pspecs(opt_abs, mesh,
+                                         moe_ffn_data=moe_ffn_data), mesh)
+            if n_micro is not None:
+                cfg = cfg.scaled(microbatch=n_micro)
+            n_micro = effective_microbatches(cfg, shape.global_batch, mesh)
+            step = make_train_step(cfg, opt_cfg, n_micro)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, {"inputs": b_sh["inputs"],
+                                           "labels": b_sh["labels"]}),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1))
+            return jitted.lower(params_abs, opt_abs, specs)
+        if shape.kind == "prefill":
+            step = make_prefill_step(cfg, shape.seq_len)
+            c_abs = jax.eval_shape(
+                functools.partial(LM(cfg).init_cache, shape.global_batch,
+                                  shape.seq_len))
+            c_sh = _named(cache_pspecs(c_abs, mesh), mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh["inputs"]),
+                             out_shardings=(None, c_sh))
+            return jitted.lower(params_abs, specs["inputs"])
+        # decode
+        step = make_decode_step(cfg)
+        c_sh = _named(cache_pspecs(specs["cache"], mesh), mesh)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, c_sh, b_sh["tokens"]),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,))
+        return jitted.lower(params_abs, specs["cache"], specs["tokens"])

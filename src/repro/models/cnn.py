@@ -1,0 +1,53 @@
+"""CNN models for the paper's training evaluation domain.
+
+Every convolution routes through `ecoflow_conv`, so the backward pass uses
+the paper's zero-free transposed (input-grad) and dilated (filter-grad)
+dataflows.  The `strided` variant replaces pooling with larger-stride convs
+(paper Sec. 6.1.1 optimization).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import ecoflow_conv
+
+
+def _conv_init(rng, k, cin, cout):
+    scale = 1.0 / math.sqrt(k * k * cin)
+    return scale * jax.random.truncated_normal(rng, -2., 2.,
+                                               (k, k, cin, cout), jnp.float32)
+
+
+def simple_cnn_init(rng, *, in_ch=3, widths=(32, 64, 128), n_classes=10,
+                    k=3):
+    """AllConvNet-style CNN: stride-2 convs instead of pooling."""
+    keys = jax.random.split(rng, len(widths) + 1)
+    params = {"convs": []}
+    c = in_ch
+    for i, w in enumerate(widths):
+        params["convs"].append(_conv_init(keys[i], k, c, w))
+        c = w
+    params["head"] = (1.0 / math.sqrt(c)) * jax.random.truncated_normal(
+        keys[-1], -2., 2., (c, n_classes), jnp.float32)
+    return params
+
+
+def simple_cnn_apply(params, x, *, stride=2, use_pallas=False):
+    """x (B,H,W,Cin) -> logits (B,n_classes)."""
+    for w in params["convs"]:
+        x = ecoflow_conv(x, w, stride, 1, use_pallas)
+        x = jax.nn.relu(x)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]
+
+
+def cnn_loss(params, x, labels, *, stride=2, use_pallas=False):
+    logits = simple_cnn_apply(params, x, stride=stride,
+                              use_pallas=use_pallas)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()

@@ -1,0 +1,78 @@
+"""DCGAN-style generator/discriminator (the paper's GAN evaluation domain).
+
+The generator upsamples with `ecoflow_conv_transpose` (the paper's
+zero-free transposed-conv dataflow is its *forward* pass); the
+discriminator downsamples with strided `ecoflow_conv` (zero-free backward).
+Together they exercise every dataflow the paper evaluates in Sec. 6.3.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import ecoflow_conv, ecoflow_conv_transpose
+
+
+def _w(rng, k, cin, cout):
+    return (1.0 / math.sqrt(k * k * cin)) * jax.random.truncated_normal(
+        rng, -2., 2., (k, k, cin, cout), jnp.float32)
+
+
+def generator_init(rng, *, z_dim=64, base=64, out_ch=3):
+    ks = jax.random.split(rng, 4)
+    return {
+        "proj": (1.0 / math.sqrt(z_dim)) * jax.random.truncated_normal(
+            ks[0], -2., 2., (z_dim, 4 * 4 * base * 2), jnp.float32),
+        # conv filters are stored in *direct-conv* orientation (K,K,Cin,Cout)
+        # where Cin is the upsampled (output) side, matching the
+        # transposed-conv-as-input-gradient formulation.
+        "t1": _w(ks[1], 4, base, base * 2),     # 4x4 -> 8x8
+        "t2": _w(ks[2], 4, base // 2, base),    # 8x8 -> 16x16
+        "t3": _w(ks[3], 4, out_ch, base // 2),  # 16x16 -> 32x32
+    }
+
+
+def generator_apply(params, z):
+    B = z.shape[0]
+    x = (z @ params["proj"]).reshape(B, 4, 4, -1)
+    x = jax.nn.relu(x)
+    x = jax.nn.relu(ecoflow_conv_transpose(x, params["t1"], 2, 1,
+                                           n_out=(8, 8)))
+    x = jax.nn.relu(ecoflow_conv_transpose(x, params["t2"], 2, 1,
+                                           n_out=(16, 16)))
+    x = jnp.tanh(ecoflow_conv_transpose(x, params["t3"], 2, 1,
+                                        n_out=(32, 32)))
+    return x
+
+
+def discriminator_init(rng, *, in_ch=3, base=64):
+    ks = jax.random.split(rng, 4)
+    return {
+        "c1": _w(ks[0], 4, in_ch, base // 2),
+        "c2": _w(ks[1], 4, base // 2, base),
+        "c3": _w(ks[2], 4, base, base * 2),
+        "head": (1.0 / math.sqrt(4 * 4 * base * 2)) *
+        jax.random.truncated_normal(ks[3], -2., 2.,
+                                    (4 * 4 * base * 2, 1), jnp.float32),
+    }
+
+
+def discriminator_apply(params, x):
+    a = lambda t: jax.nn.leaky_relu(t, 0.2)
+    x = a(ecoflow_conv(x, params["c1"], 2, 1))   # 32 -> 16
+    x = a(ecoflow_conv(x, params["c2"], 2, 1))   # 16 -> 8
+    x = a(ecoflow_conv(x, params["c3"], 2, 1))   # 8 -> 4
+    return x.reshape(x.shape[0], -1) @ params["head"]
+
+
+def gan_losses(g_params, d_params, z, real):
+    """Non-saturating GAN losses (g_loss, d_loss)."""
+    fake = generator_apply(g_params, z)
+    d_fake = discriminator_apply(d_params, fake)
+    d_real = discriminator_apply(d_params, real)
+    sp = jax.nn.softplus
+    d_loss = sp(-d_real).mean() + sp(d_fake).mean()
+    g_loss = sp(-d_fake).mean()
+    return g_loss, d_loss

@@ -1,0 +1,332 @@
+"""Shared transformer layers: norms, rope, attention, MLPs, embeddings.
+
+All functions are pure (params passed explicitly as dict pytrees), bf16
+compute / fp32 params, and compile-friendly for 94-layer scans at 512
+SPMD partitions: attention is chunked (flash-style online softmax) so the
+S x S score matrix never materializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard  # activation-sharding helper
+
+
+def _init(rng, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else (1.0 / math.sqrt(shape[0]))
+    return scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape,
+                                               dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    # f32 accumulation via einsum, but x itself stays bf16: a wholesale
+    # x.astype(f32) here becomes, under the layer scan's backward pass, a
+    # hoisted f32 copy of the entire (L,B,S,D) activation stash (XLA moves
+    # `convert` above the per-layer dynamic-slice), tripling activation
+    # memory.  Measured: internvl2-76b train cell 19.5 -> 9.5 GiB/device.
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    var = ss[..., None] / x.shape[-1]
+    scale = lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return x * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B,S,H,D), positions (B,S) -> rotated x."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, flash-style chunked causal; decode path over a KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_init(rng, cfg: ModelConfig):
+    k = jax.random.split(rng, 5)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": _init(k[0], (d, qd)),
+        "wk": _init(k[1], (d, kvd)),
+        "wv": _init(k[2], (d, kvd)),
+        "wo": _init(k[3], (qd, d), scale=1.0 / math.sqrt(qd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                    q_offset: int = 0):
+    """Chunked online-softmax attention; never materializes S x S scores.
+
+    q (B,Sq,Hq,D), k/v (B,Sk,Hk,D) with Hq % Hk == 0.  `q_offset` is the
+    absolute position of q[0] relative to k[0] (for decode: Sk - Sq).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    g = Hq // Hk
+    scale = D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hk, g, D)
+    nkc = -(-Sk // chunk)
+    pad = nkc * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nkc, chunk, Hk, D)
+    vc = v.reshape(B, nkc, chunk, Hk, D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kb, vb, ci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kb.astype(jnp.float32))
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+            (k_pos[None, :] < Sk) | jnp.zeros((Sq, 1), bool)
+        mask = mask & (k_pos[None, :] < Sk)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, Hk, g, D), jnp.float32)
+    m0 = jnp.full((B, Sq, Hk, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hk, g), jnp.float32)
+    (acc, m, l), _ = lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nkc)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention_block(params, x, cfg: ModelConfig, positions):
+    """Training / prefill attention.  Returns (out, (k, v)) for caching."""
+    q, k, v = _qkv(params, x, cfg, positions)
+    q = shard(q, "dp", None, "tp", None)
+    k = shard(k, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+    out = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    B, S, _, _ = out.shape
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def attention_decode(params, x, cfg: ModelConfig, cache_k, cache_v,
+                     cache_len):
+    """Single-token decode against a KV cache.
+
+    x (B,1,D); cache_k/v (B,Smax,Hk,D); cache_len scalar int32 (tokens
+    already in the cache).  Returns (out, new_k, new_v).
+    """
+    B, S, _ = x.shape
+    positions = (cache_len + jnp.arange(S))[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (B, S))
+    q, k, v = _qkv(params, x, cfg, positions)
+    ck = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                  (0, cache_len, 0, 0))
+    cv = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                  (0, cache_len, 0, 0))
+    Smax = ck.shape[1]
+    g = cfg.n_heads // cfg.n_kv_heads
+    # Keep the cache in its storage dtype and accumulate in f32 via
+    # preferred_element_type: materializing ck.astype(f32) doubles the
+    # dominant HBM stream of the decode step AND forces GSPMD to gather
+    # the converted copy (measured: 2 x 50 GB f32 all-gathers per step on
+    # qwen3-moe-235b decode_32k -- see EXPERIMENTS.md Sec. Perf, change 1).
+    qf = (q.astype(jnp.float32) * cfg.head_dim ** -0.5).astype(ck.dtype)
+    qf = qf.reshape(B, S, cfg.n_kv_heads, g, cfg.head_dim)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, ck,
+                   preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(Smax)[None, :]
+    q_pos = (cache_len + jnp.arange(S))[:, None]
+    mask = k_pos <= q_pos
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, S, cfg.q_dim).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), ck, cv
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (serving)
+# ---------------------------------------------------------------------------
+
+def kv_quantize(k: jax.Array):
+    """(.., S, H, D) bf16 -> (int8 values, f32 scales (.., S, H)).
+    Per (position, head) max-abs scaling."""
+    amax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_decode_quant(params, x, cfg: ModelConfig, cache_k, cache_v,
+                           k_scale, v_scale, cache_len):
+    """attention_decode against an int8-quantized KV cache.
+
+    cache_k/v (B,Smax,Hk,D) int8; k_scale/v_scale (B,Smax,Hk) f32.
+    Returns (out, ck, cv, ks, vs).
+    """
+    B, S, _ = x.shape
+    positions = (cache_len + jnp.arange(S))[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (B, S))
+    q, k, v = _qkv(params, x, cfg, positions)
+    kq, ks_new = kv_quantize(k)
+    vq, vs_new = kv_quantize(v)
+    ck = lax.dynamic_update_slice(cache_k, kq, (0, cache_len, 0, 0))
+    cv = lax.dynamic_update_slice(cache_v, vq, (0, cache_len, 0, 0))
+    ks = lax.dynamic_update_slice(k_scale, ks_new, (0, cache_len, 0))
+    vs = lax.dynamic_update_slice(v_scale, vs_new, (0, cache_len, 0))
+    Smax = ck.shape[1]
+    g = cfg.n_heads // cfg.n_kv_heads
+    qf = (q.astype(jnp.float32) * cfg.head_dim ** -0.5
+          ).reshape(B, S, cfg.n_kv_heads, g, cfg.head_dim)
+    # int8 contraction with late scale application: the D-contraction runs
+    # on the int8 stream (s8 x f32 accumulate); the per-(pos,head) scale
+    # multiplies the (B,q,h,g,k) scores -- no dequantized cache copy.
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, ck.astype(jnp.float32))
+    s = s * jnp.moveaxis(ks, 1, -1)[:, None, :, None, :]   # (B,1,h,1,Smax)
+    k_pos = jnp.arange(Smax)[None, :]
+    q_pos = (cache_len + jnp.arange(S))[:, None]
+    mask = k_pos <= q_pos
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    pv = p * jnp.moveaxis(vs, 1, -1)[:, None, :, None, :]
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", pv, cv.astype(jnp.float32))
+    out = out.reshape(B, S, cfg.q_dim).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), ck, cv, ks, vs
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k = jax.random.split(rng, 3)
+    if cfg.act == "gelu":
+        return {"wi": _init(k[0], (d, f)), "wo": _init(k[1], (f, d))}
+    return {"wi": _init(k[0], (d, f)), "wg": _init(k[1], (d, f)),
+            "wo": _init(k[2], (f, d))}
+
+
+def mlp_block(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    if cfg.act == "gelu":
+        h = jax.nn.gelu(x @ params["wi"].astype(dt))
+    else:
+        gate_fn = jax.nn.silu if cfg.act == "swiglu" else \
+            (lambda t: jax.nn.gelu(t, approximate=True))
+        h = gate_fn(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    h = shard(h, "dp", None, "tp")
+    return h @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy head
+# ---------------------------------------------------------------------------
+
+def embedding_init(rng, cfg: ModelConfig):
+    p = {"tok": _init(rng, (cfg.vocab, cfg.d_model), scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = _init(jax.random.fold_in(rng, 1),
+                          (cfg.d_model, cfg.vocab))
+    return p
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return params["tok"].astype(cfg.compute_dtype)[tokens]
+
+
+def logits_head(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return (x @ params["tok"].T.astype(x.dtype)).astype(jnp.float32)
+    return (x @ params["head"].astype(x.dtype)).astype(jnp.float32)
+
+
+def chunked_xent(params, x, labels, cfg: ModelConfig):
+    """Cross-entropy without materializing (B,S,V) logits: scan over
+    sequence chunks, rematerializing logits in the backward pass."""
+    B, S, D = x.shape
+    c = min(cfg.loss_chunk, S)
+    nc = S // c if S % c == 0 else -(-S // c)
+    pad = nc * c - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = jnp.moveaxis(x.reshape(B, nc, c, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        xb, lb = inp
+        logits = logits_head(params, xb, cfg)          # (B,c,V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        valid = (lb >= 0).astype(jnp.float32)
+        nll = (logz - gold) * valid
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = lax.scan(chunk_loss, (0.0, 0.0), (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

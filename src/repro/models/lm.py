@@ -1,0 +1,448 @@
+"""GenericLM: one model class covering all 10 assigned architectures.
+
+Families:
+  dense / moe / audio / vlm : pre-norm transformer decoder (GQA attention,
+      gated MLP or MoE).  audio/vlm take precomputed frontend embeddings
+      (`cfg.embed_input`) per the assignment (frontend is a stub).
+  ssm    : RWKV6 (time-mix + channel-mix blocks).
+  hybrid : Zamba2-style -- Mamba2 blocks with one *shared-weight* attention
+      block applied every `attn_every` Mamba blocks.
+
+Layers are stacked and executed with `lax.scan` (per-layer remat), so the
+94-layer MoE compiles as a single block body.  Decode carries an explicit
+cache pytree (KV for attention, conv+SSM state for ssm/hybrid).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+def _stack_init(block_init, rng, n):
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(block_init)(rngs)
+
+
+# ---------------------------------------------------------------------------
+# Per-family block definitions
+# ---------------------------------------------------------------------------
+
+def _tf_block_init(cfg: ModelConfig):
+    def init(rng):
+        k = jax.random.split(rng, 2)
+        p = {"ln1": L.rmsnorm_init(cfg.d_model),
+             "attn": L.attention_init(k[0], cfg),
+             "ln2": L.rmsnorm_init(cfg.d_model)}
+        if cfg.n_experts:
+            p["moe"] = M.moe_init(k[1], cfg)
+        else:
+            p["mlp"] = L.mlp_init(k[1], cfg)
+        return p
+    return init
+
+
+def _tf_block_apply(p, x, cfg: ModelConfig, positions):
+    h, _ = L.attention_block(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                             cfg, positions)
+    x = x + h
+    x = shard(x, "dp", None, None)
+    hin = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        if hin.shape[1] == 1:  # decode: group over batch instead of seq
+            h2, aux = M.moe_block(p["moe"], hin.transpose(1, 0, 2), cfg)
+            h2 = h2.transpose(1, 0, 2)
+        else:
+            h2, aux = M.moe_block(p["moe"], hin, cfg)
+    else:
+        h2, aux = L.mlp_block(p["mlp"], hin, cfg), 0.0
+    return x + h2, aux
+
+
+def _rwkv_block_init(cfg: ModelConfig):
+    def init(rng):
+        return {"ln1": L.rmsnorm_init(cfg.d_model),
+                "ln2": L.rmsnorm_init(cfg.d_model),
+                "mix": S.rwkv6_init(rng, cfg)}
+    return init
+
+
+def _mamba_block_init(cfg: ModelConfig):
+    def init(rng):
+        return {"ln": L.rmsnorm_init(cfg.d_model),
+                "mamba": S.mamba2_init(rng, cfg)}
+    return init
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        ke, kb, ks = jax.random.split(rng, 3)
+        params = {"embed": L.embedding_init(ke, cfg),
+                  "final_norm": L.rmsnorm_init(cfg.d_model)}
+        if cfg.family == "ssm":
+            params["blocks"] = _stack_init(_rwkv_block_init(cfg), kb,
+                                           cfg.n_layers)
+        elif cfg.family == "hybrid":
+            params["blocks"] = _stack_init(_mamba_block_init(cfg), kb,
+                                           cfg.n_layers)
+            params["shared_attn"] = _tf_block_init(cfg)(ks)
+        else:
+            params["blocks"] = _stack_init(_tf_block_init(cfg), kb,
+                                           cfg.n_layers)
+        return params
+
+    # -- shared -------------------------------------------------------------
+    def _embed_in(self, params, inputs):
+        cfg = self.cfg
+        if cfg.embed_input:
+            return inputs.astype(cfg.compute_dtype)
+        return L.embed(params["embed"], inputs, cfg)
+
+    def _groups(self):
+        cfg = self.cfg
+        assert cfg.attn_every and cfg.n_layers % cfg.attn_every == 0
+        return cfg.n_layers // cfg.attn_every, cfg.attn_every
+
+    # -- forward (training) --------------------------------------------------
+    def forward(self, params, inputs, positions=None):
+        """inputs: tokens (B,S) int32 or embeddings (B,S,D).  Returns
+        (hidden (B,S,D), aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_in(params, inputs)
+        B, Ssz, D = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(Ssz)[None], (B, Ssz))
+        x = shard(x, "dp", None, None)
+
+        if cfg.family == "ssm":
+            def body(x, p):
+                h, _, _ = S.rwkv6_time_mix(
+                    p["mix"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg)
+                x = x + h
+                h2, _ = S.rwkv6_channel_mix(
+                    p["mix"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+                return x + h2, 0.0
+        elif cfg.family == "hybrid":
+            def mamba_body(x, p):
+                return x + S.mamba2_block(
+                    p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg), 0.0
+
+            def body(x, pg):  # one group: shared attn + attn_every mambas
+                x, aux = _tf_block_apply(params["shared_attn"], x, cfg,
+                                         positions)
+                mb = mamba_body
+                if cfg.remat == "full":
+                    mb = jax.checkpoint(mamba_body)
+                x, _ = lax.scan(lambda c, p: (mb(c, p)[0], None), x, pg)
+                return x, aux
+        else:
+            def body(x, p):
+                return _tf_block_apply(p, x, cfg, positions)
+
+        if cfg.remat == "full":
+            inner = body
+
+            def body(x, p, _inner=inner):
+                # Barrier INSIDE the remat region: during the backward
+                # recompute the first op on the stashed bf16 activations
+                # becomes barrier->convert, which XLA cannot hoist above
+                # the per-layer dynamic-slice.  Without it the whole
+                # (L,B,S,D) stash is converted to f32 wholesale, tripling
+                # resident activation memory.
+                return _inner(lax.optimization_barrier(x), p)
+
+            body = jax.checkpoint(body)
+
+        blocks = params["blocks"]
+        if cfg.family == "hybrid":
+            G, per = self._groups()
+            blocks = jax.tree.map(
+                lambda a: a.reshape(G, per, *a.shape[1:]), blocks)
+
+        def scan_fn(x, p):
+            x, a = body(x, p)
+            return x, a
+
+        x, aux_stack = lax.scan(scan_fn, x, blocks)
+        aux = jnp.sum(aux_stack) if cfg.n_experts else 0.0
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def loss(self, params, inputs, labels):
+        x, aux = self.forward(params, inputs)
+        nll = L.chunked_xent(params["embed"], x, labels, self.cfg)
+        return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+    # -- cache --------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        """Abstract-safe cache construction (jnp.zeros only)."""
+        cfg = self.cfg
+        dt = dtype or cfg.compute_dtype
+        if cfg.family == "ssm":
+            H = cfg.d_model // cfg.ssm_head_dim
+            return {
+                "x_prev_t": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dt),
+                "x_prev_c": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dt),
+                "state": jnp.zeros((cfg.n_layers, batch, H,
+                                    cfg.ssm_head_dim, cfg.ssm_head_dim),
+                                   jnp.float32),
+                "len": jnp.zeros((), jnp.int32),
+            }
+        if cfg.family == "hybrid":
+            G, per = self._groups()
+            H = cfg.d_inner // cfg.ssm_head_dim
+            C = cfg.d_inner + 2 * cfg.ssm_state
+            return {
+                "conv": jnp.zeros((G, per, batch, cfg.ssm_conv - 1, C), dt),
+                "state": jnp.zeros((G, per, batch, H, cfg.ssm_state,
+                                    cfg.ssm_head_dim), jnp.float32),
+                "k": jnp.zeros((G, batch, max_len, cfg.n_kv_heads,
+                                cfg.head_dim), dt),
+                "v": jnp.zeros((G, batch, max_len, cfg.n_kv_heads,
+                                cfg.head_dim), dt),
+                "len": jnp.zeros((), jnp.int32),
+            }
+        if cfg.kv_quant:
+            return {
+                "k": jnp.zeros((cfg.n_layers, batch, max_len,
+                                cfg.n_kv_heads, cfg.head_dim), jnp.int8),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len,
+                                cfg.n_kv_heads, cfg.head_dim), jnp.int8),
+                "k_scale": jnp.zeros((cfg.n_layers, batch, max_len,
+                                      cfg.n_kv_heads), jnp.float32),
+                "v_scale": jnp.zeros((cfg.n_layers, batch, max_len,
+                                      cfg.n_kv_heads), jnp.float32),
+                "len": jnp.zeros((), jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+
+    # -- prefill ------------------------------------------------------------
+    def prefill(self, params, inputs, max_len: int):
+        """Process a prompt, return (last-token logits, cache)."""
+        cfg = self.cfg
+        x = self._embed_in(params, inputs)
+        B, Ssz, D = x.shape
+        positions = jnp.broadcast_to(jnp.arange(Ssz)[None], (B, Ssz))
+        x = shard(x, "dp", None, None)
+        cache = self.init_cache(B, max_len)
+
+        if cfg.family == "ssm":
+            def body(x, p):
+                xin = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+                h, xt, st = S.rwkv6_time_mix(p["mix"], xin, cfg)
+                x = x + h
+                xc = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+                h2, xcl = S.rwkv6_channel_mix(p["mix"], xc, cfg)
+                return x + h2, (xt, xcl, st)
+
+            x, per_layer = lax.scan(body, x, params["blocks"])
+            cache["x_prev_t"], cache["x_prev_c"], cache["state"] = per_layer
+        elif cfg.family == "hybrid":
+            G, per = self._groups()
+            blocks = jax.tree.map(
+                lambda a: a.reshape(G, per, *a.shape[1:]), params["blocks"])
+
+            def mamba_prefill(x, p):
+                xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+                z, xbc, dt_raw, di, n, H = S._mamba_parts(p["mamba"], xin, cfg)
+                xbc_c = S.causal_conv1d(xbc, p["mamba"]["conv_w"])
+                xbc_a = jax.nn.silu(xbc_c)
+                xs, q, k, v, lw = S._mamba_ssm_inputs(
+                    p["mamba"], xbc_a, dt_raw, cfg, di, n, H)
+                y, st = S.chunked_linear_attention(q, k, v, lw,
+                                                   chunk=cfg.chunk_size)
+                y = y + p["mamba"]["D"].astype(x.dtype)[:, None] * xs
+                y = y.reshape(*xin.shape[:-1], di)
+                y = L.rmsnorm({"scale": p["mamba"]["norm_scale"]}, y,
+                              cfg.norm_eps)
+                y = y * jax.nn.silu(z)
+                out = x + y @ p["mamba"]["out_proj"].astype(x.dtype)
+                conv_tail = xbc[:, -(cfg.ssm_conv - 1):]
+                return out, (conv_tail, st)
+
+            def group(x, pg):
+                xin = L.rmsnorm(params["shared_attn"]["ln1"], x, cfg.norm_eps)
+                h, (kk, vv) = L.attention_block(
+                    params["shared_attn"]["attn"], xin, cfg, positions)
+                x = x + h
+                x = x + L.mlp_block(
+                    params["shared_attn"]["mlp"],
+                    L.rmsnorm(params["shared_attn"]["ln2"], x, cfg.norm_eps),
+                    cfg)
+                x, (conv, st) = lax.scan(mamba_prefill, x, pg)
+                kk = _pad_cache(kk, max_len)
+                vv = _pad_cache(vv, max_len)
+                return x, (conv, st, kk, vv)
+
+            x, (conv, st, kk, vv) = lax.scan(group, x, blocks)
+            cache["conv"], cache["state"] = conv, st
+            cache["k"], cache["v"] = kk, vv
+        else:
+            def body(x, p):
+                h, (kk, vv) = L.attention_block(
+                    p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                    positions)
+                x = x + h
+                hin = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+                if cfg.n_experts:
+                    h2, _ = M.moe_block(p["moe"], hin, cfg)
+                else:
+                    h2 = L.mlp_block(p["mlp"], hin, cfg)
+                if cfg.kv_quant:
+                    kq, ks = L.kv_quantize(kk)
+                    vq, vs = L.kv_quantize(vv)
+                    return x + h2, (_pad_cache(kq, max_len),
+                                    _pad_cache(vq, max_len),
+                                    _pad_scale(ks, max_len),
+                                    _pad_scale(vs, max_len))
+                return x + h2, (_pad_cache(kk, max_len),
+                                _pad_cache(vv, max_len))
+
+            x, kvs = lax.scan(body, x, params["blocks"])
+            if cfg.kv_quant:
+                (cache["k"], cache["v"],
+                 cache["k_scale"], cache["v_scale"]) = kvs
+            else:
+                cache["k"], cache["v"] = kvs
+
+        cache["len"] = jnp.asarray(Ssz, jnp.int32)
+        x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        logits = L.logits_head(params["embed"], x, cfg)
+        return logits, cache
+
+    # -- decode -------------------------------------------------------------
+    def decode_step(self, params, cache, tokens):
+        """tokens (B,1) int32 -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg)
+        B = x.shape[0]
+        clen = cache["len"]
+
+        if cfg.family == "ssm":
+            def body(x, slc):
+                p, xt, xc, st = slc
+                xin = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+                h, xt2, st2 = S.rwkv6_time_mix_decode(p["mix"], xin, cfg,
+                                                      xt, st)
+                x = x + h
+                xcin = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+                h2, xc2 = S.rwkv6_channel_mix(p["mix"], xcin, cfg, xc)
+                return x + h2, (xt2, xc2, st2)
+
+            x, (xt, xc, st) = lax.scan(
+                body, x, (params["blocks"], cache["x_prev_t"],
+                          cache["x_prev_c"], cache["state"]))
+            cache = dict(cache, x_prev_t=xt, x_prev_c=xc, state=st,
+                         len=clen + 1)
+        elif cfg.family == "hybrid":
+            G, per = self._groups()
+            blocks = jax.tree.map(
+                lambda a: a.reshape(G, per, *a.shape[1:]), params["blocks"])
+
+            def mamba_step(x, slc):
+                p, conv, st = slc
+                xin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+                y, conv2, st2 = S.mamba2_decode(p["mamba"], xin, cfg, conv,
+                                                st)
+                return x + y, (conv2, st2)
+
+            def group(x, slc):
+                pg, conv, st, kk, vv = slc
+                sa = params["shared_attn"]
+                h, kk2, vv2 = L.attention_decode(
+                    sa["attn"], L.rmsnorm(sa["ln1"], x, cfg.norm_eps), cfg,
+                    kk, vv, clen)
+                x = x + h
+                x = x + L.mlp_block(
+                    sa["mlp"], L.rmsnorm(sa["ln2"], x, cfg.norm_eps), cfg)
+                x, (conv2, st2) = lax.scan(mamba_step, x, (pg, conv, st))
+                return x, (conv2, st2, kk2, vv2)
+
+            x, (conv, st, kk, vv) = lax.scan(
+                group, x, (blocks, cache["conv"], cache["state"],
+                           cache["k"], cache["v"]))
+            cache = dict(cache, conv=conv, state=st, k=kk, v=vv,
+                         len=clen + 1)
+        else:
+            def _ffn(x, p):
+                hin = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+                if cfg.n_experts:
+                    h2, _ = M.moe_block(p["moe"], hin.transpose(1, 0, 2),
+                                        cfg)
+                    return h2.transpose(1, 0, 2)
+                return L.mlp_block(p["mlp"], hin, cfg)
+
+            if cfg.kv_quant:
+                def body(x, slc):
+                    p, kk, vv, ks, vs = slc
+                    h, kk2, vv2, ks2, vs2 = L.attention_decode_quant(
+                        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        cfg, kk, vv, ks, vs, clen)
+                    x = x + h
+                    return x + _ffn(x, p), (kk2, vv2, ks2, vs2)
+
+                x, (kk, vv, ks, vs) = lax.scan(
+                    body, x, (params["blocks"], cache["k"], cache["v"],
+                              cache["k_scale"], cache["v_scale"]))
+                cache = dict(cache, k=kk, v=vv, k_scale=ks, v_scale=vs,
+                             len=clen + 1)
+            else:
+                def body(x, slc):
+                    p, kk, vv = slc
+                    h, kk2, vv2 = L.attention_decode(
+                        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        cfg, kk, vv, clen)
+                    x = x + h
+                    return x + _ffn(x, p), (kk2, vv2)
+
+                x, (kk, vv) = lax.scan(body, x,
+                                       (params["blocks"], cache["k"],
+                                        cache["v"]))
+                cache = dict(cache, k=kk, v=vv, len=clen + 1)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.logits_head(params["embed"], x, cfg)
+        return logits, cache
+
+
+def _pad_cache(k, max_len):
+    """(B,S,H,D) -> (B,max_len,H,D) zero-padded KV cache buffer."""
+    B, Ssz, H, D = k.shape
+    if Ssz == max_len:
+        return k
+    return jnp.pad(k, ((0, 0), (0, max_len - Ssz), (0, 0), (0, 0)))
+
+
+def _pad_scale(s, max_len):
+    """(B,S,H) -> (B,max_len,H) zero-padded scale buffer."""
+    B, Ssz, H = s.shape
+    if Ssz == max_len:
+        return s
+    return jnp.pad(s, ((0, 0), (0, max_len - Ssz), (0, 0)))
+
+

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts layer with capacity-based top-k dispatch (GShard
+style) and expert parallelism over the "model" mesh axis.
+
+Each batch row is a dispatch group (G=B, n=S tokens): one-hot dispatch /
+combine tensors of shape (B, S, E, C) with per-group capacity
+C = ceil(S * top_k / E * capacity_factor).  Dropped tokens pass through the
+residual (standard Switch behaviour).  Expert weights are stacked (E, ...)
+and sharded over "model" (EP); tokens therefore cross an all-to-all that
+GSPMD derives from the dispatch einsum.
+
+Optional shared experts (DeepSeek/Moonlight style) run densely on every
+token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+def _init(rng, shape, scale):
+    return scale * jax.random.truncated_normal(rng, -2., 2., shape,
+                                               dtype=jnp.float32)
+
+
+def moe_init(rng, cfg: ModelConfig):
+    k = jax.random.split(rng, 6)
+    d, f, e = cfg.d_model, cfg.moe_dff, cfg.n_experts
+    s_in, s_out = 1 / math.sqrt(d), 1 / math.sqrt(f)
+    p = {
+        "router": _init(k[0], (d, e), s_in),
+        "experts_wi": _init(k[1], (e, d, f), s_in),
+        "experts_wg": _init(k[2], (e, d, f), s_in),
+        "experts_wo": _init(k[3], (e, f, d), s_out),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_dff * cfg.n_shared_experts
+        p["shared_wi"] = _init(k[4], (d, fs), s_in)
+        p["shared_wg"] = _init(jax.random.fold_in(k[4], 1), (d, fs), s_in)
+        p["shared_wo"] = _init(k[5], (fs, d), s_out)
+    return p
+
+
+def capacity(cfg: ModelConfig, seq: int) -> int:
+    c = int(math.ceil(seq * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(4, -(-c // 4) * 4)  # pad to a multiple of 4 lanes
+
+
+def moe_block(params, x, cfg: ModelConfig):
+    """x (B,S,D) -> (B,S,D).  Returns (out, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+    dt = x.dtype
+
+    logits = (x @ params["router"].astype(dt)).astype(jnp.float32)  # B,S,E
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                   # B,S,K
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch): mean prob * mean assignment.
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(gate_idx, E).sum(2).mean(axis=(0, 1)) / K
+    aux = E * jnp.sum(me * ce)
+
+    # Position of each (token, k) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)           # B,S,K,E
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                            # B,SK,E
+    pos = pos.reshape(B, S, K, E)
+    in_cap = (pos < C) & (onehot > 0)
+    # dispatch[b,s,e,c] = 1 if token s goes to slot c of expert e.
+    disp = (jax.nn.one_hot(jnp.where(in_cap, pos, C), C, dtype=dt) *
+            in_cap[..., None].astype(dt)).sum(2)                     # B,S,E,C
+    comb = (jax.nn.one_hot(jnp.where(in_cap, pos, C), C,
+                           dtype=jnp.float32) *
+            (gate_vals[..., None] * in_cap.astype(jnp.float32)
+             )[..., None]).sum(2)                                    # B,S,E,C
+    disp = shard(disp, "dp", None, "tp", None)
+
+    xe = jnp.einsum("bsd,bsec->becd", x, disp)                       # B,E,C,D
+    xe = shard(xe, "dp", "tp", None, None)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe,
+                               params["experts_wg"].astype(dt)))
+    h = h * jnp.einsum("becd,edf->becf", xe,
+                       params["experts_wi"].astype(dt))
+    h = shard(h, "dp", "tp", None, None)
+    ye = jnp.einsum("becf,efd->becd", h, params["experts_wo"].astype(dt))
+    out = jnp.einsum("becd,bsec->bsd", ye.astype(jnp.float32), comb)
+    out = out.astype(dt)
+
+    if cfg.n_shared_experts:
+        hs = jax.nn.silu(x @ params["shared_wg"].astype(dt)) * \
+            (x @ params["shared_wi"].astype(dt))
+        out = out + hs @ params["shared_wo"].astype(dt)
+    return out, aux

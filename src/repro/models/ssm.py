@@ -1,0 +1,338 @@
+"""Linear-attention / SSM substrate: chunked training scan + recurrent
+decode, shared by Mamba2 (SSD, per-head scalar decay) and RWKV6 (Finch,
+data-dependent per-channel decay).
+
+The recurrence (per head, state S in R^{dk x dv}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = q_t^T S_{t'}  (+ u-bonus diagonal term for RWKV)
+with t' = t (Mamba2 reads the post-update state) or t-1 (RWKV reads the
+pre-update state, the current token entering through the u bonus).
+
+Training uses the chunk-parallel form (GLA/SSD style): within a chunk of T
+tokens the strictly-lower-triangular part is a dense attention matmul with
+relative decay exp(A_i - A_j); across chunks a lax.scan carries the state.
+All exponentials are bounded by clamping per-step log-decay to
+LOG_DECAY_MIN = -80/T (industry practice in chunked linear-attention
+kernels; see DESIGN.md numerics note).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+
+
+def log_decay_min(chunk: int) -> float:
+    return -80.0 / chunk
+
+
+def chunked_linear_attention(q, k, v, log_w, *, chunk: int,
+                             u: Optional[jax.Array] = None,
+                             state0: Optional[jax.Array] = None,
+                             pre_update_read: bool = False):
+    """q,k,log_w (B,S,H,dk); v (B,S,H,dv); u (H,dk) or None.
+
+    Returns (y (B,S,H,dv), final_state (B,H,dk,dv)).
+    pre_update_read=True gives the RWKV semantics (y reads S_{t-1}; the
+    diagonal term is weighted by u), False the Mamba2/SSD semantics
+    (y reads S_t; diagonal weight 1).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    T = min(chunk, S)
+    pad = (-S) % T
+    if pad:
+        # Zero k/v and log_w=0 (w=1) leave the carried state untouched.
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) *
+                                 (t.ndim - 2))
+        q, k, v, log_w = zpad(q), zpad(k), zpad(v), zpad(log_w)
+    S_pad = S + pad
+    nc = S_pad // T
+    log_w = jnp.clip(log_w.astype(jnp.float32), log_decay_min(T), 0.0)
+
+    def rs(x):  # (B,S_pad,...) -> (nc,B,T,...)
+        return jnp.moveaxis(x.reshape(B, nc, T, *x.shape[2:]), 1, 0)
+
+    qc, kc, vc, wc = rs(q.astype(jnp.float32)), rs(k.astype(jnp.float32)), \
+        rs(v.astype(jnp.float32)), rs(log_w)
+
+    if u is None:
+        dcoef = jnp.ones((H, dk), jnp.float32)
+    else:
+        dcoef = u.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((T, T), jnp.float32), k=-1)
+
+    def body(state, inp):
+        qb, kb, vb, wb = inp                      # (B,T,H,*)
+        A = jnp.cumsum(wb, axis=1)                # inclusive cumlog decay
+        A_q = A - wb if pre_update_read else A
+        q_s = qb * jnp.exp(A_q)                   # exp <= 1
+        k_s = kb * jnp.exp(-A)                    # exp <= e^{80}
+        att = jnp.einsum("bihd,bjhd->bhij", q_s, k_s) * tri
+        y = jnp.einsum("bhij,bjhe->bihe", att, vb)
+        diag = jnp.einsum("bihd,bihd,hd->bih", qb, kb, dcoef)
+        y = y + diag[..., None] * vb
+        y = y + jnp.einsum("bihd,bhde->bihe", q_s, state)
+        A_last = A[:, -1:]                        # (B,1,H,dk)
+        k_T = kb * jnp.exp(A_last - A)            # exp <= 1
+        state = state * jnp.exp(A_last[:, 0])[..., None] + \
+            jnp.einsum("bjhd,bjhe->bhde", k_T, vb)
+        return state, y
+
+    s0 = state0.astype(jnp.float32) if state0 is not None else \
+        jnp.zeros((B, H, dk, dv), jnp.float32)
+    state, ys = lax.scan(body, s0, (qc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S_pad, H, dv)[:, :S]
+    return y.astype(q.dtype), state
+
+
+def linear_attention_decode(q, k, v, log_w, state, *, u=None,
+                            pre_update_read: bool = False):
+    """One-token recurrent step.  q,k,log_w (B,H,dk), v (B,H,dv),
+    state (B,H,dk,dv) -> (y (B,H,dv), new_state)."""
+    log_w = jnp.clip(log_w.astype(jnp.float32), -80.0, 0.0)
+    w = jnp.exp(log_w)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    new_state = state * w[..., None] + kf[..., None] * vf[..., None, :]
+    read = state if pre_update_read else new_state
+    y = jnp.einsum("bhd,bhde->bhe", qf, read)
+    dcoef = jnp.ones_like(kf) if u is None else u.astype(jnp.float32)
+    if pre_update_read:
+        y = y + jnp.einsum("bhd,bhd->bh", qf * dcoef, kf)[..., None] * vf
+    return y.astype(q.dtype), new_state
+
+
+def recurrent_reference(q, k, v, log_w, *, u=None, pre_update_read=False,
+                        state0=None):
+    """Step-by-step oracle for the chunked scan (tests)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    s = state0 if state0 is not None else jnp.zeros((B, H, dk, dv),
+                                                    jnp.float32)
+    ys = []
+    for t in range(S):
+        y, s = linear_attention_decode(q[:, t], k[:, t], v[:, t],
+                                       log_w[:, t], s, u=u,
+                                       pre_update_read=pre_update_read)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), s
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (Mamba's short conv).  Stride-1 => the EcoFlow
+# dataflow degenerates to the direct dataflow (no padding zeros exist); the
+# tap-sum below *is* the zero-free schedule.
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (B,S,C), w (K,C) depthwise causal: y[t] = sum_k w[k] x[t-K+1+k]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    S = x.shape[1]
+    for kk in range(K):
+        y = y + xp[:, kk:kk + S, :].astype(jnp.float32) * w[kk]
+    return y.astype(x.dtype)
+
+
+def causal_conv1d_step(x_t: jax.Array, conv_state: jax.Array,
+                       w: jax.Array):
+    """x_t (B,C), conv_state (B,K-1,C) of previous inputs."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (SSD)
+# ---------------------------------------------------------------------------
+
+def _init(rng, shape, scale):
+    return scale * jax.random.truncated_normal(rng, -2., 2., shape,
+                                               dtype=jnp.float32)
+
+
+def mamba2_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    ks = jax.random.split(rng, 4)
+    s = 1 / math.sqrt(d)
+    return {
+        # z, x, B, C, dt fused input projection
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * n + H), s),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, di + 2 * n), 0.5),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": _init(ks[2], (di, d), 1 / math.sqrt(di)),
+    }
+
+
+def _mamba_parts(params, x, cfg: ModelConfig):
+    di, n = cfg.d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    dt_ = x.dtype
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt_raw, di, n, H
+
+
+def _mamba_ssm_inputs(params, xbc, dt_raw, cfg, di, n, H):
+    xs, B_in, C_in = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = jnp.exp(params["A_log"])                   # (H,) positive
+    log_w = (-dt * A)[..., None]                   # (..., H, 1)
+    lead = xs.shape[:-1]
+    xs = xs.reshape(*lead, H, cfg.ssm_head_dim)
+    v = xs * dt[..., None].astype(xs.dtype)
+    k = jnp.broadcast_to(B_in[..., None, :], (*lead, H, n)).astype(xs.dtype)
+    q = jnp.broadcast_to(C_in[..., None, :], (*lead, H, n)).astype(xs.dtype)
+    log_w = jnp.broadcast_to(log_w, (*lead, H, n))
+    return xs, q, k, v, log_w
+
+
+def mamba2_block(params, x, cfg: ModelConfig):
+    """x (B,S,D) -> (B,S,D) (training / prefill)."""
+    from repro.models.layers import rmsnorm
+    B, S, D = x.shape
+    z, xbc, dt_raw, di, n, H = _mamba_parts(params, x, cfg)
+    xbc = causal_conv1d(xbc, params["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs, q, k, v, log_w = _mamba_ssm_inputs(params, xbc, dt_raw, cfg, di, n, H)
+    y, _ = chunked_linear_attention(q, k, v, log_w, chunk=cfg.chunk_size)
+    y = y + params["D"].astype(x.dtype)[:, None] * xs
+    y = y.reshape(B, S, di)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def mamba2_decode(params, x, cfg: ModelConfig, conv_state, ssm_state):
+    """x (B,1,D); conv_state (B,K-1,C); ssm_state (B,H,n,dh)."""
+    from repro.models.layers import rmsnorm
+    B, S, D = x.shape
+    z, xbc, dt_raw, di, n, H = _mamba_parts(params, x[:, 0], cfg)
+    xbc, conv_state = causal_conv1d_step(xbc, conv_state, params["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs, q, k, v, log_w = _mamba_ssm_inputs(params, xbc, dt_raw, cfg, di, n, H)
+    y, ssm_state = linear_attention_decode(q, k, v, log_w, ssm_state)
+    y = y + params["D"].astype(x.dtype)[:, None] * xs
+    y = y.reshape(B, di)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return (y @ params["out_proj"].astype(x.dtype))[:, None, :], \
+        conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (Finch): data-dependent per-channel decay
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    dk = cfg.ssm_head_dim
+    H = d // dk
+    low = 64  # decay LoRA rank
+    ks = jax.random.split(rng, 10)
+    s = 1 / math.sqrt(d)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),   # r,k,v,w,g token-shift
+        "wr": _init(ks[0], (d, d), s), "wk": _init(ks[1], (d, d), s),
+        "wv": _init(ks[2], (d, d), s), "wg": _init(ks[3], (d, d), s),
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),
+        "w1": _init(ks[4], (d, low), s),
+        "w2": _init(ks[5], (low, d), 1 / math.sqrt(low)),
+        "u": _init(ks[6], (H, dk), 1.0),
+        "ln_scale": jnp.zeros((d,), jnp.float32),
+        "wo": _init(ks[7], (d, d), s),
+        # channel mix
+        "mu_c": 0.5 * jnp.ones((2, d), jnp.float32),
+        "ck": _init(ks[8], (d, cfg.d_ff), s),
+        "cr": _init(jax.random.fold_in(ks[8], 1), (d, d), s),
+        "cv": _init(ks[9], (cfg.d_ff, d), 1 / math.sqrt(cfg.d_ff)),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x (B,S,D); x_prev (B,1,D) last token of the previous segment."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(params, x, xs):
+    mu = params["mu"]
+    mix = lambda i: (x + mu[i] * (xs - x)).astype(x.dtype)
+    return mix(0), mix(1), mix(2), mix(3), mix(4)
+
+
+def _rwkv_qkvwg(params, x, xs, cfg):
+    dt = x.dtype
+    d = x.shape[-1]
+    dk = cfg.ssm_head_dim
+    H = d // dk
+    xr, xk, xv, xw, xg = _rwkv_mix(params, x, xs)
+    lead = x.shape[:-1]
+    r = (xr @ params["wr"].astype(dt)).reshape(*lead, H, dk)
+    k = (xk @ params["wk"].astype(dt)).reshape(*lead, H, dk)
+    v = (xv @ params["wv"].astype(dt)).reshape(*lead, H, dk)
+    g = xg @ params["wg"].astype(dt)
+    # Data-dependent decay (the Finch contribution):
+    ww = params["w0"] + jnp.tanh(
+        xw.astype(jnp.float32) @ params["w1"]) @ params["w2"]
+    log_w = -jnp.exp(ww).reshape(*lead, H, dk)
+    return r, k, v, g, log_w
+
+
+def rwkv6_time_mix(params, x, cfg: ModelConfig, x_prev=None):
+    """Returns (out, x_last (B,1,D), state (B,H,dk,dk)) for caching."""
+    from repro.models.layers import rmsnorm
+    B, S, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, D), x.dtype)
+    xs = _token_shift(x, x_prev)
+    r, k, v, g, log_w = _rwkv_qkvwg(params, x, xs, cfg)
+    y, state = chunked_linear_attention(
+        r, k, v, log_w, chunk=cfg.chunk_size, u=params["u"],
+        pre_update_read=True)
+    y = y.reshape(B, S, D)
+    y = rmsnorm({"scale": params["ln_scale"]}, y, cfg.norm_eps)
+    out = (y * jax.nn.silu(g)) @ params["wo"].astype(x.dtype)
+    return out, x[:, -1:], state
+
+
+def rwkv6_time_mix_decode(params, x, cfg: ModelConfig, x_prev, state):
+    """x (B,1,D); x_prev (B,1,D); state (B,H,dk,dk)."""
+    from repro.models.layers import rmsnorm
+    B, S, D = x.shape
+    xs = x_prev
+    r, k, v, g, log_w = _rwkv_qkvwg(params, x[:, 0], xs[:, 0], cfg)
+    y, state = linear_attention_decode(r, k, v, log_w, state,
+                                       u=params["u"], pre_update_read=True)
+    y = y.reshape(B, D)
+    y = rmsnorm({"scale": params["ln_scale"]}, y, cfg.norm_eps)
+    out = (y * jax.nn.silu(g)) @ params["wo"].astype(x.dtype)
+    return out[:, None, :], x, state
+
+
+def rwkv6_channel_mix(params, x, cfg: ModelConfig, x_prev=None):
+    """Returns (out, x_last (B,1,D))."""
+    B, S, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, D), x.dtype)
+    xs = _token_shift(x, x_prev)
+    mu = params["mu_c"]
+    xk = (x + mu[0] * (xs - x)).astype(x.dtype)
+    xr = (x + mu[1] * (xs - x)).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"].astype(x.dtype)))
+    rr = jax.nn.sigmoid(xr @ params["cr"].astype(x.dtype))
+    return rr * (kk @ params["cv"].astype(x.dtype)), x[:, -1:]

@@ -1,0 +1,219 @@
+"""Sharding rules: FSDP + TP + EP + SP PartitionSpec inference.
+
+Mesh axes:
+  single-pod : ("data", "model")                   -- 16 x 16 = 256 chips
+  multi-pod  : ("pod", "data", "model")            -- 2 x 16 x 16 = 512
+
+Logical axes used throughout the model code:
+  "fsdp"  -> ("pod", "data")   parameter / optimizer-state sharding (ZeRO-3:
+             params, grads and Adam moments all carry the same specs, so the
+             optimizer is fully sharded)
+  "tp"    -> "model"           tensor parallelism: attention heads, ffn
+             hidden, vocab; also EP: the MoE expert dimension
+  "dp"    -> ("pod", "data")   batch dimension of activations
+  "sp"    -> "model"           sequence parallelism for long-context /
+             small-head archs
+
+Every axis assignment is guarded by divisibility: a dimension that does not
+divide by the mesh-axis size is left unsharded (e.g. gemma-2b's single KV
+head under 16-way TP), letting GSPMD pick the collectives instead of
+failing to lower.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def _state():
+    if not hasattr(_ctx, "mesh"):
+        _ctx.mesh = None
+    return _ctx
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Activate a mesh for `shard()` activation constraints."""
+    st = _state()
+    prev = st.mesh
+    st.mesh = mesh
+    try:
+        yield
+    finally:
+        st.mesh = prev
+
+
+def logical_axes(mesh: Mesh, *, serve: bool = False) -> dict:
+    """Logical -> mesh axis mapping.
+
+    serve=False (training layout): weights 2D-sharded over (fsdp, tp);
+    every pass all-gathers the data-axis weight shards -- fine when the
+    per-microbatch compute amortizes it.
+
+    serve=True (inference layout -- the Sec. Perf "serve-tp resharding"
+    optimization): the data axes are FOLDED INTO TP, so weights are fully
+    sharded over all chips and stay resident -- no per-step gathers.  The
+    batch is left unsharded on the weight side ("dp" still maps to the
+    data axes for activations/caches).
+    """
+    names = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    fsdp_ax = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    tp = "model" if "model" in names else None
+    if serve and tp is not None and fsdp:
+        tp_serve = ("model",) + fsdp
+        return {"fsdp": None, "dp": fsdp_ax, "tp": tp_serve,
+                "sp": tp_serve}
+    return {
+        "fsdp": fsdp_ax,
+        "dp": fsdp_ax,
+        "tp": tp,
+        "sp": tp,
+    }
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(mesh: Mesh, spec_entries, shape) -> P:
+    """Drop axes whose size does not divide the corresponding dim."""
+    out = []
+    for dim, ax in zip(shape, spec_entries):
+        if ax is None or dim % _axis_size(mesh, ax) != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical) -> jax.Array:
+    """Activation sharding constraint by logical axis names ("dp","tp",
+    "sp", None).  No-op outside a `use_mesh` context (CPU smoke tests)."""
+    mesh = _state().mesh
+    if mesh is None:
+        return x
+    la = logical_axes(mesh)
+    entries = [la.get(ax) if isinstance(ax, str) else ax for ax in logical]
+    spec = _guard(mesh, entries, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpec inference
+# ---------------------------------------------------------------------------
+
+# (leaf-name regex, spec for the *trailing* dims).  Leading dims (layer
+# stacking for scan, expert dim handled explicitly) default to None.
+_NAME_RULES = [
+    (r"^experts_w[ig]$", ("tp", "fsdp", None)),     # (E, D, F): EP + FSDP
+    (r"^experts_wo$",    ("tp", None, "fsdp")),     # (E, F, D)
+    (r"^tok$",           ("tp", "fsdp")),           # (V, D) vocab-sharded
+    (r"^head$",          ("fsdp", "tp")),           # (D, V)
+    (r"^(wq|wk|wv|wi|wg|w_in|in_proj|router)$", ("fsdp", "tp")),
+    (r"^(wo|w_out|out_proj)$", ("tp", "fsdp")),
+    (r"^conv_w$",        (None, "tp")),             # (K, C) depthwise conv
+    (r".*",              (None,)),                  # norms, biases, scalars
+]
+
+# Serve-time layout (Sec. Perf "serve-tp resharding"): weights fully
+# sharded over ALL chips ("tp" = model + data axes; experts keep E over
+# model ("ep") and shard the ffn dim over the data axes ("dax")) so they
+# stay resident -- no per-step data-axis all-gathers.
+_SERVE_RULES = [
+    (r"^experts_w[ig]$", ("ep", None, "dax")),      # (E, D, F)
+    (r"^experts_wo$",    ("ep", "dax", None)),      # (E, F, D)
+    (r"^tok$",           ("ep", "dax")),            # (V, D)
+    (r"^head$",          ("dax", "ep")),            # (D, V)
+    (r"^(wq|wk|wv|wi|wg|w_in|in_proj|router)$", (None, "tp")),
+    (r"^(wo|w_out|out_proj)$", ("tp", None)),
+    (r"^conv_w$",        (None, "tp")),
+    (r".*",              (None,)),
+]
+
+
+# Beyond-paper MoE-train variant (EXPERIMENTS.md Perf change B5): shard
+# the experts' FFN dim over the data axis instead of D.  The expert
+# matmuls then contract an UNSHARDED dim -- no per-pass weight
+# all-gathers; the cost moves to activation reductions, which scale with
+# tokens*top_k instead of with total expert bytes.
+_MOE_FFN_RULES = [
+    (r"^experts_w[ig]$", ("tp", None, "fsdp")),     # (E, D, F@data)
+    (r"^experts_wo$",    ("tp", "fsdp", None)),     # (E, F@data, D)
+]
+
+
+def leaf_pspec(path: str, shape, mesh: Mesh, *, serve: bool = False,
+               moe_ffn_data: bool = False) -> P:
+    la = logical_axes(mesh, serve=serve)
+    if serve:
+        names = mesh.axis_names
+        dax = tuple(a for a in ("pod", "data") if a in names)
+        la = dict(la, ep="model" if "model" in names else None,
+                  dax=dax if len(dax) > 1 else (dax[0] if dax else None))
+    rules = _SERVE_RULES if serve else _NAME_RULES
+    if moe_ffn_data and not serve:
+        rules = _MOE_FFN_RULES + rules
+    name = path.split("/")[-1]
+    for pat, spec in rules:
+        if re.match(pat, name):
+            entries = [la.get(s) if isinstance(s, str) else s for s in spec]
+            if len(entries) < len(shape):   # leading scan/stack dims
+                entries = [None] * (len(shape) - len(entries)) + entries
+            elif len(entries) > len(shape):
+                entries = entries[-len(shape):] if len(shape) else []
+            return _guard(mesh, entries, shape)
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_pspecs(tree, mesh: Mesh, *, serve: bool = False,
+                moe_ffn_data: bool = False):
+    """PartitionSpec pytree for a (shape-)pytree of parameters."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: leaf_pspec(_path_str(path), leaf.shape, mesh,
+                                      serve=serve,
+                                      moe_ffn_data=moe_ffn_data),
+        tree)
+
+
+def tree_shardings(tree, mesh: Mesh, *, serve: bool = False,
+                   moe_ffn_data: bool = False):
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        tree_pspecs(tree, mesh, serve=serve,
+                                    moe_ffn_data=moe_ffn_data))
+
+
+def batch_pspec(mesh: Mesh, rank: int, batch_dim: int = 0,
+                batch_size: Optional[int] = None) -> P:
+    """Shard the batch dim over ("pod","data"), guarded by divisibility."""
+    la = logical_axes(mesh)
+    dp = la["dp"]
+    entries = [None] * rank
+    if dp is not None and (batch_size is None or
+                           batch_size % _axis_size(mesh, dp) == 0):
+        entries[batch_dim] = dp
+    return P(*entries)

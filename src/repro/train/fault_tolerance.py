@@ -1,0 +1,47 @@
+"""Fault-tolerance utilities: elastic re-meshing and restart orchestration.
+
+The policies (DESIGN.md Sec. 6):
+  * node failure   -> restart from the latest atomic checkpoint; data
+    pipeline skip-ahead is free because batches are pure functions of step.
+  * shrink/grow    -> `elastic_mesh` builds the largest valid (data, model)
+    mesh from surviving devices; checkpoint restore re-shards every leaf
+    onto the new mesh (leaves are stored unsharded).
+  * stragglers     -> Trainer's step-timeout watchdog forces an early
+    checkpoint so a slow host can be evicted without losing work.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def elastic_mesh(devices: Optional[Sequence] = None, *,
+                 model_parallel: int = 16) -> Mesh:
+    """Largest (data, model) mesh from the surviving device set.
+
+    Keeps the model axis fixed (TP degree is a property of the sharded
+    weight layout) and shrinks the data axis, matching how elastic FSDP
+    deployments drain failed hosts.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    mp = model_parallel
+    while mp > 1 and len(devices) % mp:
+        mp //= 2
+    dp = len(devices) // mp
+    use = devices[:dp * mp]
+    return Mesh(np.asarray(use).reshape(dp, mp), ("data", "model"))
+
+
+def survivors(mesh: Mesh, failed_host_ids: Sequence[int],
+              devices_per_host: int = 8):
+    """Device list minus those on failed hosts (simulation helper)."""
+    out = []
+    for d in mesh.devices.flatten():
+        host = d.id // devices_per_host
+        if host not in failed_host_ids:
+            out.append(d)
+    return out

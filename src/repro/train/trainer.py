@@ -1,0 +1,140 @@
+"""Trainer: sharded train loop with checkpoint/restart, async saves,
+deterministic data skip-ahead, and failure injection hooks for tests.
+
+The loop is mesh-agnostic: pass any Mesh (the 16x16/2x16x16 production
+meshes from launch/mesh.py, or a 1-device debug mesh on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.data.pipeline import TokenDataset
+from repro.models.config import ModelConfig
+from repro.models.lm import LM
+from repro.optim.optimizer import AdamWConfig, adamw_init
+from repro.launch.steps import make_train_step
+from repro.parallel import sharding as sh
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_last: int = 3
+    log_every: int = 10
+    seed: int = 0
+    # fault tolerance
+    step_timeout_s: Optional[float] = None   # straggler watchdog
+    async_checkpoint: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, dataset: TokenDataset,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 tcfg: Optional[TrainerConfig] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dataset = dataset
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.tcfg = tcfg or TrainerConfig()
+        self.lm = LM(cfg)
+        self._ckptr = (ckpt.AsyncCheckpointer(self.tcfg.ckpt_dir,
+                                              self.tcfg.keep_last)
+                       if self.tcfg.ckpt_dir else None)
+
+        with mesh, sh.use_mesh(mesh):
+            params_abs = jax.eval_shape(self.lm.init,
+                                        jax.random.PRNGKey(self.tcfg.seed))
+            self.p_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                sh.tree_pspecs(params_abs, mesh),
+                is_leaf=lambda s: not isinstance(s, dict))
+            opt_abs = jax.eval_shape(
+                lambda p: adamw_init(p, self.opt_cfg), params_abs)
+            self.o_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                sh.tree_pspecs(opt_abs, mesh),
+                is_leaf=lambda s: not isinstance(s, dict))
+            self.step_fn = jax.jit(
+                make_train_step(cfg, self.opt_cfg),
+                in_shardings=(self.p_sh, self.o_sh, None),
+                out_shardings=(self.p_sh, self.o_sh, None),
+                donate_argnums=(0, 1))
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self):
+        with self.mesh, sh.use_mesh(self.mesh):
+            params = jax.jit(self.lm.init, out_shardings=self.p_sh)(
+                jax.random.PRNGKey(self.tcfg.seed))
+            opt = jax.jit(lambda p: adamw_init(p, self.opt_cfg),
+                          out_shardings=self.o_sh)(params)
+        return params, opt, 0
+
+    def maybe_restore(self):
+        """Restore the latest checkpoint if one exists (elastic: works on a
+        different mesh than the one that saved it)."""
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return self.init_state()
+        step = ckpt.latest_step(d)
+        if step is None:
+            return self.init_state()
+        params_abs = jax.eval_shape(self.lm.init,
+                                    jax.random.PRNGKey(self.tcfg.seed))
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, self.opt_cfg),
+                                 params_abs)
+        state = ckpt.restore(f"{d}/step_{step}" and d, step,
+                             {"params": params_abs, "opt": opt_abs},
+                             {"params": self.p_sh, "opt": self.o_sh})
+        return state["params"], state["opt"], step
+
+    def save(self, step, params, opt, blocking=False):
+        if not self._ckptr:
+            return
+        tree = {"params": params, "opt": opt}
+        if self.tcfg.async_checkpoint and not blocking:
+            self._ckptr.save_async(step, tree)
+        else:
+            ckpt.save(self.tcfg.ckpt_dir, step, tree,
+                      keep_last=self.tcfg.keep_last)
+
+    # -- loop ----------------------------------------------------------------
+    def run(self, *, fail_at_step: Optional[int] = None) -> Dict[str, Any]:
+        """Train to total_steps (resuming from the latest checkpoint).
+        `fail_at_step` raises after that step completes -- used by the
+        fault-tolerance tests to simulate a node failure."""
+        params, opt, start = self.maybe_restore()
+        history = []
+        t_last = time.time()
+        for step in range(start, self.tcfg.total_steps):
+            batch = self.dataset.batch(step)  # deterministic skip-ahead
+            with self.mesh, sh.use_mesh(self.mesh):
+                params, opt, metrics = self.step_fn(params, opt, batch)
+            if self.tcfg.step_timeout_s is not None:
+                dt = time.time() - t_last
+                if dt > self.tcfg.step_timeout_s:
+                    # Straggler watchdog: surface, checkpoint, continue.
+                    self.save(step + 1, params, opt, blocking=True)
+            t_last = time.time()
+            if (step + 1) % self.tcfg.log_every == 0 or \
+                    step + 1 == self.tcfg.total_steps:
+                history.append({"step": step + 1,
+                                "loss": float(metrics["loss"])})
+            if self.tcfg.ckpt_dir and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.save(step + 1, params, opt)
+            if fail_at_step is not None and step + 1 >= fail_at_step:
+                if self._ckptr:
+                    self._ckptr.wait()
+                raise RuntimeError(f"injected failure at step {step + 1}")
+        if self._ckptr:
+            self.save(self.tcfg.total_steps, params, opt, blocking=True)
+            self._ckptr.wait()
+        return {"params": params, "opt": opt, "history": history}

@@ -1,0 +1,22 @@
+"""Shared test fixtures/helpers.
+
+NOTE: tests must see the default single CPU device -- do NOT set
+XLA_FLAGS=--xla_force_host_platform_device_count here (the dry-run sets it
+in its own process).  Tests that need a multi-device mesh spawn a
+subprocess (see tests/test_multidevice.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_allclose(a, b, rtol=1e-4, atol=1e-4, err_msg=""):
+    np.testing.assert_allclose(np.asarray(a, np.float64),
+                               np.asarray(b, np.float64),
+                               rtol=rtol, atol=atol, err_msg=err_msg)

@@ -1,0 +1,128 @@
+"""SASiML-lite validation: the analytical cycle/energy model reproduces
+the paper's headline ratios (Fig. 3/8/9/10, Tables 6/8).
+
+The model cannot reproduce absolute milliseconds of a 200MHz 65nm ASIC --
+the paper's own simulator deviates 0.07-10% from the real chip -- so these
+tests pin the *ratios* the paper reports, with generous bands.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import dataflow_sim as ds
+
+
+def test_useful_macs_shared_across_ops():
+    l = ds.layer_by_name("resnet50-CONV3")
+    assert ds.useful_macs(l, "forward") == ds.useful_macs(l, "input_grad")
+    assert ds.useful_macs(l, "forward") == ds.useful_macs(l, "filter_grad")
+
+
+def test_zero_fraction_grows_with_stride():
+    """Paper Sec. 3.1: zero padding grows quadratically with stride."""
+    base = dict(c_in=64, n_in=57, k=3, m=64, batch=4)
+    fr = []
+    for s in (1, 2, 4, 8):
+        n_out = (57 - 3) // s + 1
+        l = ds.ConvLayer("t", n_out=n_out, stride=s, **base)
+        fr.append(ds.zero_mac_fraction(l, "input_grad"))
+    assert fr[0] < 0.5          # stride 1: only boundary halo zeros
+    assert fr[1] > 0.70         # paper: >70% at stride 2
+    assert fr[2] > 0.90
+    assert fr[3] > 0.97
+    assert fr == sorted(fr)
+
+
+def test_ecoflow_schedules_only_useful_macs():
+    for l in ds.TABLE5_LAYERS:
+        for op in ("input_grad", "filter_grad"):
+            assert ds.scheduled_macs(l, op, "ecoflow") == \
+                ds.useful_macs(l, op)
+
+
+def test_fig8_input_grad_speedup_bands():
+    """~4x @ stride 2, ~11x @ stride 4, ~52x @ stride 8 (vs TPU)."""
+    sp2 = ds.speedup(ds.layer_by_name("resnet50-CONV3"), "input_grad",
+                     "ecoflow")
+    assert 2.5 < sp2 < 6.0
+    sp4 = ds.speedup(ds.layer_by_name("alexnet-CONV1"), "input_grad",
+                     "ecoflow")
+    # paper measures ~11x; the analytical model yields the MAC-ratio upper
+    # bound (~16.6x = 224^2/55^2) since it does not model SASiML's
+    # cycle-level NoC contention -- see EXPERIMENTS.md Sec. Paper-tables.
+    assert 7.0 < sp4 < 17.0
+    sp8 = ds.speedup(ds.layer_by_name("alexnet-o-CONV1"), "input_grad",
+                     "ecoflow")
+    assert 30.0 < sp8 < 80.0
+
+
+def test_fig9_filter_grad_speedup_bands():
+    """>3x @ stride 2, ~15.6x @ stride 4, ~60x @ stride 8 (vs TPU)."""
+    sp2 = ds.speedup(ds.layer_by_name("resnet50-CONV3"), "filter_grad",
+                     "ecoflow")
+    assert sp2 > 2.5
+    sp4 = ds.speedup(ds.layer_by_name("alexnet-CONV1"), "filter_grad",
+                     "ecoflow")
+    assert 8.0 < sp4 < 25.0
+    sp8 = ds.speedup(ds.layer_by_name("alexnet-o-CONV1"), "filter_grad",
+                     "ecoflow")
+    assert 35.0 < sp8 < 100.0
+
+
+def test_stride1_near_parity():
+    """Paper: 0-10% gains at stride 1 (no padding zeros to remove)."""
+    l = ds.layer_by_name("alexnet-CONV2")
+    sp = ds.speedup(l, "input_grad", "ecoflow")
+    assert 0.8 < sp < 1.6
+
+
+def test_table6_end_to_end_bands():
+    """End-to-end CNN training 7-85% faster (paper Table 6)."""
+    paper = {"alexnet": 1.83, "resnet50": 1.07, "shufflenet": 1.08,
+             "inception": 1.08, "xception": 1.11, "mobilenet": 1.09}
+    for net, ref in paper.items():
+        v = ds.end_to_end_speedup(net, "ecoflow")
+        assert 1.05 <= v <= 2.0, (net, v)
+        # within ~25% of the paper's number
+        assert abs(v - ref) / ref < 0.25, (net, v, ref)
+
+
+def test_table8_gan_bands():
+    """GAN training 29-42% faster (paper Table 8)."""
+    for net, ref in {"pix2pix": 1.39, "cyclegan": 1.42}.items():
+        v = ds.gan_end_to_end_speedup(net, "ecoflow")
+        assert 1.25 <= v <= 1.55, (net, v)
+        assert abs(v - ref) / ref < 0.15, (net, v, ref)
+
+
+def test_energy_savings_in_spad_noc_not_dram():
+    """Paper Fig. 10/12: savings concentrated in SPAD+NoC; DRAM energy is
+    maintained across dataflows."""
+    l = ds.layer_by_name("resnet50-CONV3")
+    e_tpu = ds.energy_breakdown_pj(l, "input_grad", "tpu")
+    e_eco = ds.energy_breakdown_pj(l, "input_grad", "ecoflow")
+    assert e_eco["SPAD"] < 0.5 * e_tpu["SPAD"]
+    assert e_eco["NoC"] < 0.5 * e_tpu["NoC"]
+    assert e_eco["DRAM"] == e_tpu["DRAM"]
+    assert sum(e_eco.values()) < sum(e_tpu.values())
+
+
+def test_energy_max_savings_band():
+    """Max energy savings ~26x for alexnet-o-CONV1 input grads (paper)."""
+    l = ds.layer_by_name("alexnet-o-CONV1")
+    r = ds.energy_pj(l, "input_grad", "tpu") / \
+        ds.energy_pj(l, "input_grad", "ecoflow")
+    assert 8.0 < r < 40.0
+
+
+def test_rs_not_faster_than_ecoflow():
+    for l in ds.TABLE5_LAYERS:
+        for op in ("input_grad", "filter_grad"):
+            assert ds.cycles(l, op, "ecoflow") <= \
+                ds.cycles(l, op, "rs") * 1.05
+
+
+def test_padding_property_of_layers():
+    for l in ds.TABLE5_LAYERS + ds.TABLE7_GAN_LAYERS:
+        # ofmap geometry consistent: N_out = (N_in + 2P - K)//S + 1
+        assert (l.n_in + 2 * l.padding - l.k) // l.stride + 1 == l.n_out

@@ -1,0 +1,91 @@
+"""Unit tests for the dry-run HLO analysis tooling (collective parsing,
+shape-byte accounting) and the analytic roofline cost model."""
+from __future__ import annotations
+
+import pytest
+
+from repro.launch import dryrun
+from repro.models.config import SHAPES
+from repro.configs import ARCH_IDS, get_config
+from benchmarks import flops as F
+
+
+def test_shape_bytes():
+    assert dryrun._shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert dryrun._shape_bytes("bf16[2,4,8]") == 2 * 4 * 8 * 2
+    assert dryrun._shape_bytes("(f32[8], bf16[8])") == 8 * 4 + 8 * 2
+    assert dryrun._shape_bytes("s32[]") == 0 or True  # scalars: no dims
+    assert dryrun._shape_bytes("pred[16]") == 16
+
+
+def test_parse_collectives():
+    hlo = """
+  %ag = bf16[64,128] all-gather(bf16[8,128] %x), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = f32[256] all-reduce(f32[256] %y), replica_groups={{0,1},{2,3}}, to_apply=%add
+  %rs = f32[32,16] reduce-scatter(f32[256,16] %z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = bf16[4,64] all-to-all(bf16[4,64] %w), replica_groups={{0,1,2,3}}
+  %cp = f32[8] collective-permute(f32[8] %v), source_target_pairs={{0,1}}
+  %mm = f32[64,64] dot(f32[64,64] %a, f32[64,64] %b)
+"""
+    c = dryrun.parse_collectives(hlo)
+    assert c["all-gather"]["count"] == 1
+    assert c["all-gather"]["bytes"] == 64 * 128 * 2
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["bytes"] == 256 * 4
+    assert c["reduce-scatter"]["count"] == 1
+    assert c["all-to-all"]["count"] == 1
+    assert c["collective-permute"]["count"] == 1
+    assert 8 in c["group_sizes"] and 2 in c["group_sizes"]
+
+
+def test_parse_collectives_start_variants():
+    hlo = "%a = bf16[8] all-gather-start(bf16[1] %x), replica_groups={{0}}\n"
+    c = dryrun.parse_collectives(hlo)
+    # async variants (all-gather-start) must be counted once
+    assert c["all-gather"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model sanity
+# ---------------------------------------------------------------------------
+
+def test_total_params_match_known_sizes():
+    """Parameter counts within tolerance of the published model sizes."""
+    expect = {   # (billions, rtol)
+        "qwen3_moe_235b_a22b": (235, 0.10),
+        "rwkv6_7b": (7.6, 0.15),
+        "gemma_2b": (2.5, 0.20),    # 2B excluding/including embeddings
+        "gemma_7b": (8.5, 0.20),
+        "qwen2_1_5b": (1.5, 0.25),
+        "zamba2_2_7b": (2.7, 0.30),
+    }
+    for arch, (bn, tol) in expect.items():
+        n = F.total_params(get_config(arch)) / 1e9
+        assert abs(n - bn) / bn < tol, (arch, n, bn)
+
+
+def test_active_params_moe():
+    cfg = get_config("qwen3_moe_235b_a22b")
+    na = F.active_params(cfg) / 1e9
+    nt = F.total_params(cfg) / 1e9
+    assert 15 < na < 30      # A22B
+    assert na < nt / 5
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cell_cost_positive(arch):
+    cfg = get_config(arch)
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        cc = F.cell_cost(cfg, SHAPES[s])
+        assert cc.model_flops > 0
+        assert cc.impl_flops >= cc.model_flops * 0.9
+        assert cc.hbm_bytes > 0
+
+
+def test_train_flops_ratio_reasonable():
+    """model/impl FLOPs ratio (useful-compute fraction) in (0.3, 1.0] --
+    full remat costs ~1 extra forward of the 6N."""
+    for arch in ("gemma_2b", "qwen2_1_5b", "internvl2_76b"):
+        cc = F.cell_cost(get_config(arch), SHAPES["train_4k"])
+        r = cc.model_flops / cc.impl_flops
+        assert 0.3 < r <= 1.0, (arch, r)

@@ -1,0 +1,163 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret mode on
+CPU) against its pure-jnp oracle in kernels/ref.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.attention import flash_attention_pallas
+from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
+from repro.kernels.tconv_phase import tconv_phase_pallas
+
+from conftest import assert_allclose
+
+
+# ---------------------------------------------------------------------------
+# tconv_phase (phase-decomposed transposed conv)
+# ---------------------------------------------------------------------------
+
+TCONV_SWEEP = [
+    # (B, O, K, S, P, Ci, Co)
+    (1, 4, 3, 2, 0, 4, 4),
+    (2, 5, 3, 2, 1, 3, 5),
+    (2, 7, 4, 3, 0, 8, 2),
+    (1, 3, 11, 4, 2, 2, 3),
+    (1, 6, 2, 4, 0, 5, 5),       # K < S: empty phases exist
+    (2, 4, 1, 1, 0, 4, 4),       # pointwise stride 1
+    (1, 8, 5, 2, 2, 130, 7),     # Cin > default tile
+]
+
+
+@pytest.mark.parametrize("B,O,K,S,P,Ci,Co", TCONV_SWEEP)
+def test_tconv_phase_sweep(rng, B, O, K, S, P, Ci, Co):
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    N = S * (O - 1) + K - 2 * P
+    out = ops.tconv_phase(dy, w, stride=(S, S), padding=(P, P),
+                          n_out=(N, N))
+    want = ref.tconv_phase_ref(dy, w, stride=(S, S), padding=(P, P),
+                               n_out=(N, N))
+    assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_tconv_phase_dtypes(rng, dtype, tol):
+    B, O, K, S, Ci, Co = 2, 5, 3, 2, 4, 6
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), dtype)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), dtype)
+    N = S * (O - 1) + K
+    out = ops.tconv_phase(dy, w, stride=(S, S), padding=(0, 0),
+                          n_out=(N, N))
+    assert out.dtype == dtype
+    want = ref.tconv_phase_ref(dy, w, stride=(S, S), padding=(0, 0),
+                               n_out=(N, N))
+    assert_allclose(out, want, rtol=tol, atol=tol)
+
+
+def test_tconv_single_phase_kernel(rng):
+    """The inner stride-1 full correlation each phase computes."""
+    B, O, Ci, Co, kp, kq = 2, 6, 5, 4, 2, 3
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w_sub = jnp.asarray(rng.normal(size=(kp, kq, Co, Ci)), jnp.float32)
+    out = tconv_phase_pallas(dy, w_sub, interpret=True)
+    want = ref.stride1_full_corr_ref(dy, w_sub)
+    assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dconv_filtergrad (zero-free filter gradient)
+# ---------------------------------------------------------------------------
+
+DCONV_SWEEP = [
+    (1, 9, 3, 2, 0, 4, 4),
+    (2, 9, 3, 2, 1, 3, 5),
+    (3, 13, 4, 3, 0, 2, 7),
+    (1, 23, 11, 4, 2, 2, 3),
+    (2, 8, 1, 2, 0, 5, 6),
+    (1, 10, 3, 1, 1, 130, 3),    # Cin > default tile, stride 1
+]
+
+
+@pytest.mark.parametrize("B,N,K,S,P,Ci,Co", DCONV_SWEEP)
+def test_dconv_filtergrad_sweep(rng, B, N, K, S, P, Ci, Co):
+    O = (N + 2 * P - K) // S + 1
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    dw = ops.dconv_filter_grad(x, dy, stride=(S, S), padding=(P, P),
+                               k=(K, K))
+    want = ref.dconv_filter_grad_ref(x, dy, stride=(S, S), padding=(P, P),
+                                     k=(K, K))
+    assert_allclose(dw, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dconv_filtergrad_bf16(rng):
+    B, N, K, S, Ci, Co = 2, 9, 3, 2, 4, 4
+    O = (N - K) // S + 1
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.bfloat16)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.bfloat16)
+    dw = dconv_filter_grad_pallas(x, dy, stride=(S, S), padding=(0, 0),
+                                  k=(K, K), interpret=True)
+    want = ref.dconv_filter_grad_ref(x, dy, stride=(S, S), padding=(0, 0),
+                                     k=(K, K))
+    assert_allclose(dw, want, rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_SWEEP = [
+    # (B, Sq, Sk, Hq, Hk, D, causal, bq, bk)
+    (2, 64, 64, 4, 2, 32, True, 32, 32),
+    (1, 128, 128, 8, 8, 64, True, 64, 32),
+    (2, 48, 96, 4, 1, 32, True, 16, 32),    # MQA, decode-style suffix
+    (1, 33, 70, 8, 2, 16, False, 32, 32),   # ragged, non-causal
+    (1, 1, 40, 4, 4, 32, True, 8, 16),      # single-token decode
+    (2, 70, 70, 2, 2, 128, True, 32, 64),   # head_dim 128
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,Hq,Hk,D,causal,bq,bk", ATTN_SWEEP)
+def test_flash_attention_sweep(rng, B, Sq, Sk, Hq, Hk, D, causal, bq, bk):
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sk, Hk, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sk, Hk, D)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=causal, blk_q=bq,
+                                 blk_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    B, S, H, D = 2, 64, 4, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    out = flash_attention_pallas(q, k, v, blk_q=32, blk_k=32,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    assert_allclose(out, want, rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(sq=st.integers(1, 40), extra=st.integers(0, 40),
+       hk=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2]),
+       causal=st.booleans())
+def test_flash_attention_property(sq, extra, hk, g, causal):
+    """Any (Sq <= Sk, GQA group, mask) combination matches the oracle."""
+    rng = np.random.default_rng(sq * 1000 + extra * 10 + hk + g)
+    sk = sq + extra
+    B, D = 1, 16
+    q = jnp.asarray(rng.normal(size=(B, sq, hk * g, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, sk, hk, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, sk, hk, D)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=causal, blk_q=16,
+                                 blk_k=16, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    assert_allclose(out, want, rtol=3e-5, atol=3e-5)

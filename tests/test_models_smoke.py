@@ -1,0 +1,190 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of each family runs one forward/train step on CPU with correct output
+shapes and no NaNs, plus prefill->decode consistency (teacher forcing)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, \
+    supported_shapes
+from repro.models.config import SHAPES
+from repro.models.lm import LM
+from repro.launch.steps import input_specs, make_train_step
+from repro.optim.optimizer import AdamWConfig, adamw_init
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.embed_input:
+        inputs = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)),
+                             jnp.bfloat16)
+    else:
+        inputs = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    return {"inputs": inputs, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    b = _batch(cfg)
+    x, aux = jax.jit(lm.forward)(params, b["inputs"])
+    B = b["labels"].shape[0]
+    assert x.shape == (B, 32, cfg.d_model)
+    assert bool(jnp.isfinite(x.astype(jnp.float32)).all())
+    loss, parts = jax.jit(lm.loss)(params, b["inputs"], b["labels"])
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    assert float(loss) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_updates_params(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    opt = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    b = _batch(cfg)
+    p2, opt2, metrics = step(params, opt, b)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0.0
+    # at least one leaf actually changed
+    changed = any(
+        bool(jnp.any(a != b_)) for a, b_ in
+        zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert changed
+    assert int(opt2["count"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_teacher_forcing(arch):
+    """Prefill over [t0..tn] then decode tn+1 must equal a longer prefill:
+    the cache semantics (KV / conv / SSM state) are consistent."""
+    # float32 compute isolates cache *semantics* from bf16 rounding drift
+    # (bf16 drift through stacked layers is ~0.2 logits for the hybrid
+    # arch; verified numerics-only -- see test history).
+    cfg = get_smoke_config(arch).scaled(dtype="float32")
+    if cfg.embed_input:
+        pytest.skip("frontend-stub archs drive decode via token embeds")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (B, S + 1)), jnp.int32)
+    # Reference: prefill the full S+1 prompt; its last-token logits.
+    ref_logits, _ = jax.jit(lambda p, t: lm.prefill(p, t, S + 9))(
+        params, toks)
+    # Candidate: prefill S, then one decode step with token S.
+    _, cache = jax.jit(lambda p, t: lm.prefill(p, t, S + 9))(
+        params, toks[:, :S])
+    dec_logits, cache2 = jax.jit(lm.decode_step)(params, cache,
+                                                 toks[:, S:S + 1])
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(ref_logits[:, 0]),
+                               rtol=1e-3, atol=1e-3)
+    assert int(cache2["len"]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_all_cells(arch):
+    """input_specs() builds abstract inputs for every supported shape cell
+    of the FULL config without allocating."""
+    cfg = get_config(arch)
+    for s in supported_shapes(cfg):
+        shape = SHAPES[s]
+        specs = input_specs(cfg, shape)
+        assert specs, (arch, s)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+        if shape.kind == "train":
+            lead = specs["inputs"].shape[0]
+            assert lead == shape.global_batch
+        if shape.kind == "decode":
+            assert specs["tokens"].shape == (shape.global_batch, 1)
+
+
+def test_long_500k_only_subquadratic():
+    """Assignment rule: long_500k runs for SSM/hybrid only."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = supported_shapes(cfg)
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in shapes, arch
+        else:
+            assert "long_500k" not in shapes, arch
+
+
+def test_full_configs_match_assignment():
+    """Pin the exact assigned architecture hyperparameters."""
+    want = {
+        "qwen3_moe_235b_a22b": dict(n_layers=94, d_model=4096, n_heads=64,
+                                    n_kv_heads=4, d_ff=1536, vocab=151936,
+                                    n_experts=128, top_k=8),
+        "moonshot_v1_16b_a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                    n_kv_heads=16, d_ff=1408, vocab=163840,
+                                    n_experts=64, top_k=6),
+        "rwkv6_7b": dict(n_layers=32, d_model=4096, d_ff=14336,
+                         vocab=65536),
+        "qwen3_0_6b": dict(n_layers=28, d_model=1024, n_heads=16,
+                           n_kv_heads=8, d_ff=3072, vocab=151936,
+                           qk_norm=True),
+        "qwen2_1_5b": dict(n_layers=28, d_model=1536, n_heads=12,
+                           n_kv_heads=2, d_ff=8960, vocab=151936,
+                           qkv_bias=True),
+        "gemma_2b": dict(n_layers=18, d_model=2048, n_heads=8,
+                         n_kv_heads=1, d_ff=16384, vocab=256000,
+                         head_dim=256),
+        "gemma_7b": dict(n_layers=28, d_model=3072, n_heads=16,
+                         n_kv_heads=16, d_ff=24576, vocab=256000,
+                         head_dim=256),
+        "musicgen_medium": dict(n_layers=48, d_model=1536, n_heads=24,
+                                n_kv_heads=24, d_ff=6144, vocab=2048),
+        "internvl2_76b": dict(n_layers=80, d_model=8192, n_heads=64,
+                              n_kv_heads=8, d_ff=28672, vocab=128256),
+        "zamba2_2_7b": dict(n_layers=54, d_model=2560, n_heads=32,
+                            n_kv_heads=32, d_ff=10240, vocab=32000,
+                            ssm_state=64),
+    }
+    for arch, fields in want.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "qwen3_moe_235b_a22b",
+                                  "gemma_2b"])
+def test_int8_kv_cache_decode(arch):
+    """Perf A3: int8 KV cache -- decode distributions match the bf16
+    cache to quantization tolerance, and the cache really is int8."""
+    cfg = get_smoke_config(arch).scaled(dtype="float32", kv_quant=True)
+    cfg_ref = get_smoke_config(arch).scaled(dtype="float32")
+    lm, lmr = LM(cfg), LM(cfg_ref)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (B, S + 1)), jnp.int32)
+    ref_logits, _ = jax.jit(lambda p, t: lmr.prefill(p, t, S + 9))(
+        params, toks)
+    _, cache = jax.jit(lambda p, t: lm.prefill(p, t, S + 9))(
+        params, toks[:, :S])
+    assert cache["k"].dtype == jnp.int8
+    assert cache["k_scale"].dtype == jnp.float32
+    dec, cache2 = jax.jit(lm.decode_step)(params, cache, toks[:, S:S + 1])
+    diff = jnp.abs(jax.nn.softmax(dec[:, 0]) -
+                   jax.nn.softmax(ref_logits[:, 0])).max()
+    assert float(diff) < 0.05, float(diff)
+    assert int(cache2["len"]) == S + 1
+    # multi-step decode stays finite and consistent
+    for _ in range(3):
+        dec, cache2 = jax.jit(lm.decode_step)(
+            params, cache2, jnp.argmax(dec[:, 0], -1)[:, None]
+            .astype(jnp.int32))
+    assert bool(jnp.isfinite(dec).all())

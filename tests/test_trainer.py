@@ -1,0 +1,88 @@
+"""End-to-end trainer tests on a 1-device debug mesh: loss goes down,
+checkpoint/restart resumes bit-identically (fault tolerance), straggler
+watchdog, serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import TokenDataset
+from repro.launch.mesh import make_debug_mesh
+from repro.models.lm import LM
+from repro.optim.optimizer import AdamWConfig
+from repro.serve.engine import Request, ServeEngine
+from repro.train.fault_tolerance import elastic_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _trainer(tmp_dir=None, total=8, arch="qwen3_0_6b", **tkw):
+    cfg = get_smoke_config(arch)
+    mesh = make_debug_mesh()
+    ds = TokenDataset(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=0)
+    tcfg = TrainerConfig(total_steps=total, ckpt_dir=tmp_dir, ckpt_every=4,
+                         log_every=2, **tkw)
+    opt = AdamWConfig(lr=3e-3, warmup_steps=0, total_steps=total)
+    return Trainer(cfg, mesh, ds, opt, tcfg)
+
+
+def test_loss_decreases():
+    t = _trainer(total=12)
+    out = t.run()
+    hist = out["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_checkpoint_restart_bit_identical(tmp_path):
+    """Train 8 steps straight vs train->crash at 5->restart: identical
+    final params (determinism contract of the data pipeline + optimizer)."""
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    ref = _trainer(d1, total=8, async_checkpoint=False).run()
+
+    t2 = _trainer(d2, total=8, async_checkpoint=False)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        t2.run(fail_at_step=5)
+    # "restart": a fresh Trainer on the same dir resumes from step 4 ckpt
+    t3 = _trainer(d2, total=8, async_checkpoint=False)
+    out = t3.run()
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_watchdog_checkpoints(tmp_path):
+    d = str(tmp_path)
+    t = _trainer(d, total=3, step_timeout_s=0.0, async_checkpoint=False)
+    t.run()   # every step "times out" -> forced checkpoints, still finishes
+    from repro.train import checkpoint as ckpt
+    assert ckpt.latest_step(d) == 3
+
+
+def test_elastic_mesh_shrink():
+    m = elastic_mesh(jax.devices()[:1], model_parallel=16)
+    assert m.shape["model"] == 1 and m.shape["data"] == 1
+    # with 1 device nothing else is possible; the policy logic is exercised
+    # at 8 devices in tests/test_multidevice.py
+
+
+def test_serve_engine_greedy_matches_manual():
+    cfg = get_smoke_config("qwen2_1_5b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch=2, max_len=48)
+    prompts = [np.asarray([5, 7, 11], np.int32),
+               np.asarray([3, 1], np.int32)]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    results = eng.generate(reqs)
+    assert set(results) == {0, 1}
+    assert all(len(v) == 4 for v in results.values())
+    # continuous batching: a third request queues behind the batch of 2
+    reqs = [Request(uid=i, prompt=prompts[i % 2], max_new_tokens=3)
+            for i in range(3)]
+    results = eng.generate(reqs)
+    assert set(results) == {0, 1, 2}
+    assert results[0] == results[2]   # same prompt -> same greedy output
