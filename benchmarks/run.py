@@ -39,6 +39,9 @@ def main() -> None:
         print("# === wall-clock: zero-free vs materialized-zero (JAX) ===")
         from benchmarks import wallclock
         _emit(wallclock.run())
+        print("# === wall-clock: conv backends (xla_zero_free vs fused "
+              "pallas) ===")
+        _emit(wallclock.conv_backend_bench())
 
     print("# === roofline per (arch x shape), single-pod 16x16 ===")
     from benchmarks import roofline

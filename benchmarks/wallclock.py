@@ -1,12 +1,17 @@
 """Wall-clock microbenchmarks: zero-free EcoFlow vs materialized-zero
 naive dataflows, executed for real in JAX on this host (CPU here; the same
-code paths compile for TPU).
+code paths compile for TPU) -- plus the conv *backend* comparison
+(multi-launch `xla_zero_free` vs fused single-launch `pallas`) across the
+paper's Table 5/7 layer geometries, emitted to BENCH_conv.json so future
+PRs have a perf trajectory.
 
 Reported as name,us_per_call,derived -- `derived` carries the speedup and
 the useful-MAC fraction from the analytical model for cross-checking.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -14,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ecoflow, naive
+from repro.core.spec import ConvSpec, resolve_backend
 
 
 def _time(fn, *args, iters=5, warmup=2):
@@ -73,3 +79,74 @@ def run():
         rows.append((f"wallclock.filtergrad.naive.{name}",
                      round(t_nai, 1), ""))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Conv backend comparison: multi-launch xla_zero_free vs fused pallas
+# ---------------------------------------------------------------------------
+
+# Table 5/7 layer geometries (name, O, K, S, Ci, Co): filter/stride are the
+# paper's; error-map spatial size and channels are capped so the
+# interpret-mode Pallas path (CPU CI) finishes in seconds -- the phase
+# structure (the thing the fused kernel changes) depends only on (K, S).
+# On a real TPU the same code paths compile and the caps can be lifted.
+CONV_BACKEND_CASES = [
+    ("alexnet-CONV1",    14, 11, 4, 3, 16),
+    ("resnet50-CONV3",   14, 3, 2, 32, 32),
+    ("shufflenet-CONV2", 14, 3, 2, 29, 29),
+    ("inception-CONV3",   8, 3, 2, 32, 32),
+    ("alexnet-o-CONV1",   7, 11, 8, 3, 16),
+    ("cyclegan-gen-TCONV1", 14, 3, 2, 32, 32),
+    ("pix2pix-gen-TCONV4",  16, 4, 2, 32, 32),
+]
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_conv.json"
+
+
+def conv_backend_bench(iters=3, warmup=1, write_json=True):
+    """Time tconv + filter-grad through the xla_zero_free and pallas
+    backends for each geometry; write BENCH_conv.json and return CSV rows.
+    """
+    rows, records = [], []
+    rng = np.random.default_rng(0)
+    backends = ("xla_zero_free", "pallas")
+    for name, O, K, S, Ci, Co in CONV_BACKEND_CASES:
+        B, P = 1, 0
+        spec = ConvSpec.make(stride=S, padding=P, filter_shape=K)
+        N = spec.input_size((O, O))[0]
+        dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+        rec = {"layer": name, "error_map": O, "k": K, "stride": S,
+               "c_in": Ci, "c_out": Co, "batch": B,
+               "interpret_mode": jax.default_backend() != "tpu",
+               "tconv_us": {}, "filter_grad_us": {}}
+        for bname in backends:
+            be = resolve_backend(bname)
+            f_t = jax.jit(lambda dy_, w_, be=be: be.input_grad(
+                dy_, w_, spec, (N, N)))
+            f_g = jax.jit(lambda x_, dy_, be=be: be.filter_grad(
+                x_, dy_, spec))
+            t_t = _time(f_t, dy, w, iters=iters, warmup=warmup)
+            t_g = _time(f_g, x, dy, iters=iters, warmup=warmup)
+            rec["tconv_us"][bname] = round(t_t, 1)
+            rec["filter_grad_us"][bname] = round(t_g, 1)
+            rows.append((f"wallclock.tconv.{bname}.{name}", round(t_t, 1),
+                         ""))
+            rows.append((f"wallclock.filtergrad.{bname}.{name}",
+                         round(t_g, 1), ""))
+        records.append(rec)
+    if write_json:
+        BENCH_JSON.write_text(json.dumps(
+            {"note": "conv backend wall-clock (us/call); pallas runs in "
+                     "interpret mode off-TPU, so absolute numbers are only "
+                     "comparable within a backend+host class",
+             "cases": records}, indent=2) + "\n")
+        rows.append(("wallclock.conv_backend.json", str(BENCH_JSON), ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run() + conv_backend_bench():
+        print(",".join(str(c) for c in r))

@@ -40,6 +40,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--backend", default="xla_zero_free",
+                    choices=("reference", "xla_zero_free", "pallas"),
+                    help="conv dispatch backend (repro.core.spec)")
     args = ap.parse_args()
 
     params = cnn.simple_cnn_init(jax.random.PRNGKey(0),
@@ -51,10 +54,12 @@ def main():
     @jax.jit
     def step_fn(params, opt, x, y):
         loss, grads = jax.value_and_grad(
-            lambda p: cnn.cnn_loss(p, x, y, stride=2))(params)
+            lambda p: cnn.cnn_loss(p, x, y, stride=2,
+                                   backend=args.backend))(params)
         params, opt, om = adamw_update(grads, opt, params, ocfg)
         acc = jnp.mean(
-            jnp.argmax(cnn.simple_cnn_apply(params, x, stride=2), -1) == y)
+            jnp.argmax(cnn.simple_cnn_apply(params, x, stride=2,
+                                            backend=args.backend), -1) == y)
         return params, opt, loss, acc
 
     t0 = time.time()

@@ -36,6 +36,9 @@ def real_batch(step, *, batch=16, size=32):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--backend", default="xla_zero_free",
+                    choices=("reference", "xla_zero_free", "pallas"),
+                    help="conv dispatch backend (repro.core.spec)")
     args = ap.parse_args()
     Z, BASE, B = 32, 16, 16
 
@@ -49,11 +52,12 @@ def main():
 
     @jax.jit
     def step_fn(gp, dp, g_opt, d_opt, z, real):
+        be = args.backend
         d_loss, d_grads = jax.value_and_grad(
-            lambda d: gan.gan_losses(gp, d, z, real)[1])(dp)
+            lambda d: gan.gan_losses(gp, d, z, real, backend=be)[1])(dp)
         dp, d_opt, _ = adamw_update(d_grads, d_opt, dp, dcfg)
         g_loss, g_grads = jax.value_and_grad(
-            lambda g: gan.gan_losses(g, dp, z, real)[0])(gp)
+            lambda g: gan.gan_losses(g, dp, z, real, backend=be)[0])(gp)
         gp, g_opt, _ = adamw_update(g_grads, g_opt, gp, gcfg)
         return gp, dp, g_opt, d_opt, g_loss, d_loss
 

@@ -1,65 +1,106 @@
 """EcoFlowConv: direct convolution whose backward pass uses the zero-free
-EcoFlow dataflows.
+EcoFlow dataflows, dispatched through the conv backend registry.
 
-`ecoflow_conv(x, w, stride, padding)` is a drop-in direct conv.  Its VJP
-computes:
+`ecoflow_conv(x, w, stride, padding, backend)` is a drop-in direct conv.
+Its VJP computes:
   * dL/dx with the zero-free *transposed* convolution (phase decomposition),
-  * dL/dw with the zero-free *dilated* convolution (per-tap strided gathers),
-exactly the two backward kernels the paper accelerates.  Forward/backward are
-bit-compatible with `jax.grad` of a plain `lax.conv_general_dilated` (up to
-fp accumulation order).
+  * dL/dw with the zero-free *dilated* convolution (per-tap gathers),
+exactly the two backward kernels the paper accelerates.  Forward/backward
+are bit-compatible with `jax.grad` of a plain `lax.conv_general_dilated`
+(up to fp accumulation order).
 
-`use_pallas=True` routes the backward through the Pallas TPU kernels in
-`repro.kernels` (interpret-mode on CPU).
+`backend` selects the implementation from `repro.core.spec`:
+  * "xla_zero_free" (default) -- dense XLA phase decomposition,
+  * "pallas"                  -- fused single-launch Pallas TPU kernels
+                                 (interpret mode off-TPU),
+  * "reference"               -- jax's own conv gradients (ground truth).
+Legacy `use_pallas` booleans are still accepted (True -> "pallas").
 """
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import ecoflow
-from repro.core.ecoflow import _pair
+from repro.core.spec import ConvSpec, resolve_backend
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def ecoflow_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
-                 use_pallas: bool = False) -> jax.Array:
+                 backend=None) -> jax.Array:
     """Direct conv (NHWC x HWIO -> NHWC) with EcoFlow zero-free backward."""
-    return ecoflow.direct_conv(x, w, stride, padding)
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2])
+    return resolve_backend(backend).forward(x, w, spec)
 
 
-def _fwd(x, w, stride, padding, use_pallas):
-    return ecoflow_conv(x, w, stride, padding, use_pallas), (x, w)
+def _fwd(x, w, stride, padding, backend):
+    return ecoflow_conv(x, w, stride, padding, backend), (x, w)
 
 
-def _bwd(stride, padding, use_pallas, res, g):
+def _bwd(stride, padding, backend, res, g):
     x, w = res
-    kh, kw = w.shape[0], w.shape[1]
-    if use_pallas:
-        from repro.kernels import ops as kops
-        dx = kops.tconv_phase(g, w, stride=_pair(stride),
-                              padding=_pair(padding),
-                              n_out=(x.shape[1], x.shape[2]))
-        dw = kops.dconv_filter_grad(x, g, stride=_pair(stride),
-                                    padding=_pair(padding), k=(kh, kw))
-    else:
-        dx = ecoflow.transposed_conv_zero_free(
-            g, w, stride=_pair(stride), padding=_pair(padding),
-            n_out=(x.shape[1], x.shape[2]))
-        dw = ecoflow.dilated_conv_filter_grad_zero_free(
-            x, g, stride=_pair(stride), padding=_pair(padding), k=(kh, kw))
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2])
+    be = resolve_backend(backend)
+    dx = be.input_grad(g, w, spec, (x.shape[1], x.shape[2]))
+    dw = be.filter_grad(x, g, spec)
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
 ecoflow_conv.defvjp(_fwd, _bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _conv_transpose(dy, w, stride, padding, n_out, backend):
+    spec = ConvSpec(stride=stride, padding=padding,
+                    filter_shape=w.shape[:2])
+    return resolve_backend(backend).input_grad(dy, w, spec, n_out)
+
+
+def _ct_fwd(dy, w, stride, padding, n_out, backend):
+    return _conv_transpose(dy, w, stride, padding, n_out, backend), (dy, w)
+
+
+def _ct_bwd(stride, padding, n_out, backend, res, g):
+    """VJP of the transposed conv, itself zero-free.
+
+    The transposed conv is the adjoint of the direct conv's linear map, so
+    the pullback of a cotangent g w.r.t. `dy` is the *direct* conv of g,
+    and w.r.t. `w` it is the same zero-free dilated filter gradient with g
+    in the input role.  This keeps the GAN generator differentiable
+    through every backend (the Pallas kernels have no autodiff rule of
+    their own) and routes its backward through the paper's dataflows."""
+    dy, w = res
+    spec = ConvSpec(stride=stride, padding=padding,
+                    filter_shape=w.shape[:2])
+    be = resolve_backend(backend)
+    ddy = be.forward(g, w, spec)
+    dw = be.filter_grad(g, dy, spec)
+    return ddy.astype(dy.dtype), dw.astype(w.dtype)
+
+
+_conv_transpose.defvjp(_ct_fwd, _ct_bwd)
+
+
 def ecoflow_conv_transpose(dy: jax.Array, w: jax.Array, stride=1, padding=0,
-                           n_out=None) -> jax.Array:
-    """Standalone zero-free transposed conv (e.g. GAN generator layers)."""
-    return ecoflow.transposed_conv_zero_free(
-        dy, w, stride=_pair(stride), padding=_pair(padding),
-        n_out=None if n_out is None else tuple(n_out))
+                           n_out=None, backend=None) -> jax.Array:
+    """Standalone zero-free transposed conv (e.g. GAN generator layers),
+    dispatched through the backend registry."""
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2])
+    if n_out is None:
+        n_out = spec.input_size((dy.shape[1], dy.shape[2]))
+    n_out = tuple(int(n) for n in n_out)
+    # The geometry contract: dy must be the forward-conv output of an
+    # n_out-sized input.  Reject inconsistent sizes here with a clear
+    # error -- otherwise the custom VJP's adjoint conv would produce a
+    # cotangent shape mismatch deep inside autodiff.
+    if spec.out_size(n_out) != (dy.shape[1], dy.shape[2]):
+        raise ValueError(
+            f"n_out={n_out} is inconsistent with dy spatial size "
+            f"{dy.shape[1:3]} for stride={spec.stride}, "
+            f"padding={spec.padding}, filter={spec.filter_shape}: a "
+            f"forward conv over n_out yields {spec.out_size(n_out)}")
+    return _conv_transpose(dy, w, spec.stride, spec.padding,
+                           n_out, backend)

@@ -81,8 +81,11 @@ def scheduled_macs(layer: ConvLayer, op: Op, dataflow: Dataflow) -> int:
     padding zeros for the naive dataflows -- the PEs spend the cycles even if
     the multiplier is clock-gated, paper Sec. 3.1)."""
     if dataflow == "ecoflow" or op == "forward" or layer.stride == 1:
-        if op == "forward" or dataflow == "ecoflow":
-            return useful_macs(layer, op)
+        # Stride 1 inserts no dilation zeros, so EVERY dataflow schedules
+        # exactly the useful MACs (zero_mac_fraction == 0) -- previously
+        # the stride==1 case for tpu/rs gradient ops fell through to the
+        # padded-MAC formulas below.
+        return useful_macs(layer, op)
     s, k, n_err = layer.stride, layer.k, layer.n_out
     if op == "input_grad":
         # Direct conv over the zero-dilated + border-padded error map:

@@ -36,15 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.spec import ConvSpec, _pair  # geometry lives in spec.py
+
 # Dimension numbers for NHWC/HWIO direct convolutions.
 DN = ("NHWC", "HWIO", "NHWC")
-
-
-def _pair(v) -> tuple[int, int]:
-    if isinstance(v, (tuple, list)):
-        assert len(v) == 2
-        return (int(v[0]), int(v[1]))
-    return (int(v), int(v))
 
 
 def direct_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
@@ -84,8 +79,11 @@ def phase_subfilters(w: jax.Array, stride) -> list[list[jax.Array]]:
 
 def transposed_conv_input_size(out_size: int, k: int, stride: int,
                                padding: int) -> int:
-    """Forward-conv input length N given output length O (exact fit)."""
-    return stride * (out_size - 1) + k - 2 * padding
+    """Forward-conv input length N given output length O (exact fit).
+    Thin wrapper over `ConvSpec.input_size` (kept for callers that think
+    in scalars)."""
+    spec = ConvSpec.make(stride=stride, padding=padding, filter_shape=k)
+    return spec.input_size((out_size, out_size))[0]
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out"))

@@ -1,0 +1,248 @@
+"""ConvSpec: normalized convolution geometry + the conv backend registry.
+
+Every convolution in the repo (forward, zero-free input-gradient /
+transposed, zero-free filter-gradient / dilated) is described by one
+`ConvSpec` -- stride/padding/filter/dilation pairs plus the derived phase
+bookkeeping the EcoFlow decomposition needs (sub-filter shapes, full/output
+sizes).  This absorbs the `_pair` / `transposed_conv_input_size` helpers
+previously duplicated across `core/ecoflow.py` and `kernels/ops.py`.
+
+Backends implement the three ops behind a uniform interface and register
+under a name:
+
+  * ``reference``      -- `jax.vjp` of `lax.conv_general_dilated`
+                          (ground truth; materializes dilation zeros).
+  * ``xla_zero_free``  -- the EcoFlow phase decomposition expressed as
+                          dense XLA ops (S*S stride-1 convs + scatters,
+                          per-tap strided gathers).  This is the
+                          multi-launch path the fused kernels replace; it
+                          is kept as a backend both as a fallback and as
+                          the baseline the benchmarks compare against.
+  * ``pallas``         -- the fused single-launch Pallas TPU kernels
+                          (`kernels/tconv_phase.py`,
+                          `kernels/dconv_filtergrad.py`); interpret mode
+                          off-TPU.
+
+`resolve_backend` also accepts the legacy `use_pallas` booleans
+(False -> xla_zero_free, True -> pallas) so old call sites keep working.
+
+See DESIGN.md Sec. 2 for the EcoFlow -> MXU mapping the backends realize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Sequence, Union
+
+BackendLike = Union[None, bool, str, "ConvBackend"]
+
+DEFAULT_BACKEND = "xla_zero_free"
+
+
+def _pair(v) -> tuple[int, int]:
+    """Normalize an int-or-2-sequence to an (int, int) tuple."""
+    if isinstance(v, (tuple, list)):
+        assert len(v) == 2, f"expected 2 elements, got {v!r}"
+        return (int(v[0]), int(v[1]))
+    return (int(v), int(v))
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Static geometry of one convolution (NHWC x HWIO).
+
+    All fields are per-axis (h, w) pairs; construct with `ConvSpec.make`
+    to get int -> pair normalization.  The spec is hashable, so it can be
+    a static argument of jit'd functions.
+    """
+    stride: tuple[int, int] = (1, 1)
+    padding: tuple[int, int] = (0, 0)
+    filter_shape: tuple[int, int] = (1, 1)   # (Kh, Kw)
+    dilation: tuple[int, int] = (1, 1)       # forward filter dilation
+
+    @classmethod
+    def make(cls, *, stride=1, padding=0, filter_shape=1,
+             dilation=1) -> "ConvSpec":
+        dilation = _pair(dilation)
+        if dilation != (1, 1):
+            raise NotImplementedError(
+                "forward filter dilation is reserved geometry: no backend "
+                "implements it yet")
+        return cls(_pair(stride), _pair(padding), _pair(filter_shape),
+                   dilation)
+
+    # -- forward geometry ---------------------------------------------------
+
+    def out_size(self, in_size: Sequence[int]) -> tuple[int, int]:
+        """Forward output spatial size O = floor((N + 2P - K)/S) + 1."""
+        n = _pair(in_size)
+        return tuple((n[i] + 2 * self.padding[i] - self.filter_shape[i])
+                     // self.stride[i] + 1 for i in range(2))
+
+    def input_size(self, out_size: Sequence[int]) -> tuple[int, int]:
+        """Exact-fit forward input size N = S*(O-1) + K - 2P (the default
+        `n_out` of the transposed conv)."""
+        o = _pair(out_size)
+        return tuple(self.stride[i] * (o[i] - 1) + self.filter_shape[i]
+                     - 2 * self.padding[i] for i in range(2))
+
+    def full_size(self, out_size: Sequence[int]) -> tuple[int, int]:
+        """Pre-padding-slice transposed-conv output size F = S*(O-1) + K."""
+        o = _pair(out_size)
+        return tuple(self.stride[i] * (o[i] - 1) + self.filter_shape[i]
+                     for i in range(2))
+
+    # -- phase (EcoFlow) bookkeeping ----------------------------------------
+
+    @property
+    def n_phases(self) -> int:
+        """Number of stride phases S_h * S_w of the transposed conv."""
+        return self.stride[0] * self.stride[1]
+
+    def phase_index(self, p: int, q: int) -> int:
+        """Linear index of phase (p, q) in the packed phase-major layout."""
+        return p * self.stride[1] + q
+
+    def phase_filter_shape(self, p: int, q: int) -> tuple[int, int]:
+        """Sub-filter taps of phase (p, q): ceil((K - p)/S) per axis.
+        Zero for phases beyond the filter extent (stride > K)."""
+        return (max(0, -(-(self.filter_shape[0] - p) // self.stride[0])),
+                max(0, -(-(self.filter_shape[1] - q) // self.stride[1])))
+
+    @property
+    def packed_phase_shape(self) -> tuple[int, int]:
+        """Uniform (zero-padded) sub-filter shape ceil(K/S) per axis --
+        the tap extent of the packed all-phase filter tensor."""
+        return (-(-self.filter_shape[0] // self.stride[0]),
+                -(-self.filter_shape[1] // self.stride[1]))
+
+    def useful_taps(self) -> int:
+        """Total taps over all phases == Kh*Kw (every tap in exactly one
+        phase; the zero-free property)."""
+        return sum(kp * kq
+                   for p in range(self.stride[0])
+                   for q in range(self.stride[1])
+                   for kp, kq in [self.phase_filter_shape(p, q)])
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvBackend:
+    """One implementation of the three conv ops.
+
+    forward(x, w, spec)                -> y     (B,N,N,Cin)x(K,K,Cin,Cout)
+    input_grad(dy, w, spec, n_out)     -> dx    zero-free transposed conv
+    filter_grad(x, dy, spec)           -> dw    zero-free dilated conv
+    """
+    name: str
+    forward: Callable
+    input_grad: Callable
+    filter_grad: Callable
+
+
+_BACKENDS: Dict[str, ConvBackend] = {}
+
+
+def register_backend(backend: ConvBackend) -> ConvBackend:
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def available_backends() -> tuple[str, ...]:
+    _ensure_default_backends()
+    return tuple(sorted(_BACKENDS))
+
+
+def resolve_backend(backend: BackendLike) -> ConvBackend:
+    """Name / bool / None / ConvBackend -> ConvBackend."""
+    _ensure_default_backends()
+    if isinstance(backend, ConvBackend):
+        return backend
+    if backend is None:
+        name = DEFAULT_BACKEND
+    elif isinstance(backend, bool):  # legacy use_pallas flag
+        name = "pallas" if backend else "xla_zero_free"
+    else:
+        name = str(backend)
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown conv backend {name!r}; available: "
+            f"{', '.join(available_backends())}") from None
+
+
+# ---------------------------------------------------------------------------
+# Default backends.  Registered lazily to avoid import cycles
+# (core.ecoflow / kernels.ops import this module for ConvSpec).
+# ---------------------------------------------------------------------------
+
+_DEFAULTS_REGISTERED = False
+
+
+def _ensure_default_backends() -> None:
+    global _DEFAULTS_REGISTERED
+    if _DEFAULTS_REGISTERED:
+        return
+
+    import jax
+
+    from repro.core import ecoflow
+
+    # -- reference: jax's own conv gradients (materializes zeros) ----------
+    def _ref_forward(x, w, spec: ConvSpec):
+        return ecoflow.direct_conv(x, w, spec.stride, spec.padding)
+
+    def _ref_input_grad(dy, w, spec: ConvSpec, n_out):
+        nh, nw = _pair(n_out)
+        x_shape = (dy.shape[0], nh, nw, w.shape[2])
+        f = lambda x_: ecoflow.direct_conv(x_, w, spec.stride, spec.padding)
+        import jax.numpy as jnp
+        _, vjp = jax.vjp(f, jnp.zeros(x_shape, dy.dtype))
+        return vjp(dy)[0]
+
+    def _ref_filter_grad(x, dy, spec: ConvSpec):
+        kh, kw = spec.filter_shape
+        w_shape = (kh, kw, x.shape[3], dy.shape[3])
+        f = lambda w_: ecoflow.direct_conv(x, w_, spec.stride, spec.padding)
+        import jax.numpy as jnp
+        _, vjp = jax.vjp(f, jnp.zeros(w_shape, x.dtype))
+        return vjp(dy)[0]
+
+    register_backend(ConvBackend("reference", _ref_forward,
+                                 _ref_input_grad, _ref_filter_grad))
+
+    # -- xla_zero_free: EcoFlow phase decomposition in dense XLA -----------
+    def _xla_input_grad(dy, w, spec: ConvSpec, n_out):
+        return ecoflow.transposed_conv_zero_free(
+            dy, w, stride=spec.stride, padding=spec.padding,
+            n_out=_pair(n_out))
+
+    def _xla_filter_grad(x, dy, spec: ConvSpec):
+        return ecoflow.dilated_conv_filter_grad_zero_free(
+            x, dy, stride=spec.stride, padding=spec.padding,
+            k=spec.filter_shape)
+
+    register_backend(ConvBackend("xla_zero_free", _ref_forward,
+                                 _xla_input_grad, _xla_filter_grad))
+
+    # -- pallas: fused single-launch kernels -------------------------------
+    def _pl_input_grad(dy, w, spec: ConvSpec, n_out):
+        from repro.kernels import ops as kops
+        return kops.tconv_phase(dy, w, stride=spec.stride,
+                                padding=spec.padding, n_out=_pair(n_out))
+
+    def _pl_filter_grad(x, dy, spec: ConvSpec):
+        from repro.kernels import ops as kops
+        return kops.dconv_filter_grad(x, dy, stride=spec.stride,
+                                      padding=spec.padding,
+                                      k=spec.filter_shape)
+
+    register_backend(ConvBackend("pallas", _ref_forward,
+                                 _pl_input_grad, _pl_filter_grad))
+
+    # Only mark done once every default registered -- a failure above
+    # surfaces on the next call instead of poisoning the registry.
+    _DEFAULTS_REGISTERED = True

@@ -4,16 +4,21 @@ EcoFlow's filter-gradient dataflow (paper Sec. 4.2): one PE per filter
 gradient element, each accumulating  sum_{b,i,j} x[b,iS+kx,jS+ky] * dy[b,i,j]
 locally, with the ifmap delivered via per-tap multicast groups.
 
-TPU mapping: the per-tap multicast group is a strided gather of x (built
-once in the wrapper -- `x_taps[t] = x[:, kx::S, ky::S]`), and each PE-column
-accumulation becomes one (Cin x B*O*O) @ (B*O*O x Cout) MXU matmul.  The
-batch dimension is the innermost (sequential) grid axis so partial products
-accumulate into the fp32 output tile across grid steps -- the Pallas
-equivalent of the paper's local psum register.
+TPU mapping: the per-tap multicast group is realized INSIDE the kernel --
+the padded input block is VMEM-resident and each grid step dynamic-slices
+its tap window (kx, ky) out of it and subsamples by the stride, so the
+K_h*K_w-replicated `x_taps` gather of the old formulation is never
+materialized (peak memory: one padded input, not K^2 copies).  Each
+PE-column accumulation becomes one (Cin x B*O*O) @ (B*O*O x Cout) MXU
+matmul.  The batch dimension is the innermost (sequential) grid axis so
+partial products accumulate into the fp32 output tile across grid steps --
+the Pallas equivalent of the paper's local psum register.
 
 BlockSpec tiling: grid (T, Cin_tiles, Cout_tiles, B); per step the kernel
-holds x_tap (1,1,Oh,Ow,Ci_t), dy (1,Oh,Ow,Co_t) and out (1,Ci_t,Co_t) in
-VMEM.  Ci_t = Co_t = 128 aligns the matmul to the MXU.
+holds x_pad (1,Hp,Wp,Ci_t), dy (1,Oh,Ow,Co_t) and out (1,Ci_t,Co_t) in
+VMEM.  The x block's index map depends only on (b, ci), so it is NOT
+re-fetched across the tap/Cout grid axes.  Ci_t = Co_t = 128 aligns the
+matmul to the MXU.  See DESIGN.md Sec. 2.
 """
 from __future__ import annotations
 
@@ -24,10 +29,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _fg_kernel(x_ref, dy_ref, out_ref):
+def _fg_kernel(x_ref, dy_ref, out_ref, *, sh: int, sw: int,
+               oh: int, ow: int, kw: int):
+    t = pl.program_id(0)
     b = pl.program_id(3)
-    oh, ow = x_ref.shape[2], x_ref.shape[3]
-    lhs = x_ref[0, 0].reshape(oh * ow, x_ref.shape[-1]).astype(jnp.float32)
+    kx, ky = t // kw, t % kw
+    ci_t = x_ref.shape[-1]
+    # In-kernel tap gather: dynamic tap offset, then static-stride
+    # subsample -- x[b, kx + i*S_h, ky + j*S_w, :] for i < Oh, j < Ow.
+    win = jax.lax.dynamic_slice(
+        x_ref[0], (kx, ky, 0),
+        ((oh - 1) * sh + 1, (ow - 1) * sw + 1, ci_t))
+    tap = win[::sh, ::sw]                            # (oh, ow, ci_t)
+    lhs = tap.reshape(oh * ow, ci_t).astype(jnp.float32)
     rhs = dy_ref[0].reshape(oh * ow, dy_ref.shape[-1]).astype(jnp.float32)
     prod = jax.lax.dot_general(lhs, rhs, (((0,), (0,)), ((), ())),
                                preferred_element_type=jnp.float32)
@@ -46,35 +60,39 @@ def _fg_kernel(x_ref, dy_ref, out_ref):
 def dconv_filter_grad_pallas(x: jax.Array, dy: jax.Array, *, stride,
                              padding, k, tile: int = 128,
                              interpret: bool = True) -> jax.Array:
-    """dW (Kh,Kw,Cin,Cout) for direct_conv(x, w, stride, padding)."""
+    """dW (Kh,Kw,Cin,Cout) for direct_conv(x, w, stride, padding).
+
+    SINGLE `pallas_call`; the input is padded once and tap windows are
+    sliced inside the kernel (no K^2 input replication on the host side).
+    """
     sh, sw = stride
     ph, pw = padding
     Kh, Kw = k
     B, Nh, Nw, Cin = x.shape
     _, Oh, Ow, Cout = dy.shape
     xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
-    # Per-tap strided gathers = the paper's ifmap multicast groups.
-    taps = []
-    for kx in range(Kh):
-        for ky in range(Kw):
-            taps.append(jax.lax.slice(
-                xp, (0, kx, ky, 0),
-                (B, kx + (Oh - 1) * sh + 1, ky + (Ow - 1) * sw + 1, Cin),
-                (1, sh, sw, 1)))
-    x_taps = jnp.stack(taps)                      # (T, B, Oh, Ow, Cin)
+    # Tap windows must fit for every (kx, ky); non-exact-fit inputs already
+    # satisfy Hp >= (Oh-1)*S_h + Kh, but guard with an explicit tail pad.
+    need_h = (Oh - 1) * sh + Kh
+    need_w = (Ow - 1) * sw + Kw
+    if xp.shape[1] < need_h or xp.shape[2] < need_w:
+        xp = jnp.pad(xp, ((0, 0), (0, max(0, need_h - xp.shape[1])),
+                          (0, max(0, need_w - xp.shape[2])), (0, 0)))
+    hp, wp = xp.shape[1], xp.shape[2]
     T = Kh * Kw
     ci_t, co_t = min(tile, Cin), min(tile, Cout)
     n_ci, n_co = -(-Cin // ci_t), -(-Cout // co_t)
     if Cin % ci_t:
-        x_taps = jnp.pad(x_taps, ((0, 0),) * 4 + ((0, n_ci * ci_t - Cin),))
+        xp = jnp.pad(xp, ((0, 0),) * 3 + ((0, n_ci * ci_t - Cin),))
     if Cout % co_t:
         dy = jnp.pad(dy, ((0, 0),) * 3 + ((0, n_co * co_t - Cout),))
+    kern = functools.partial(_fg_kernel, sh=sh, sw=sw, oh=Oh, ow=Ow, kw=Kw)
     out = pl.pallas_call(
-        _fg_kernel,
+        kern,
         grid=(T, n_ci, n_co, B),
         in_specs=[
-            pl.BlockSpec((1, 1, Oh, Ow, ci_t),
-                         lambda t, ci, co, b: (t, b, 0, 0, ci)),
+            pl.BlockSpec((1, hp, wp, ci_t),
+                         lambda t, ci, co, b: (b, 0, 0, ci)),
             pl.BlockSpec((1, Oh, Ow, co_t),
                          lambda t, ci, co, b: (b, 0, 0, co)),
         ],
@@ -83,6 +101,6 @@ def dconv_filter_grad_pallas(x: jax.Array, dy: jax.Array, *, stride,
         out_shape=jax.ShapeDtypeStruct((T, n_ci * ci_t, n_co * co_t),
                                        jnp.float32),
         interpret=interpret,
-    )(x_taps, dy)
+    )(xp, dy)
     dw = out[:, :Cin, :Cout].reshape(Kh, Kw, Cin, Cout)
     return dw.astype(x.dtype)

@@ -1,20 +1,22 @@
 """jit'd public wrappers around the Pallas kernels.
 
-`tconv_phase` assembles the full zero-free transposed convolution from S*S
-phase kernels (interleaving is a pure layout operation); `dconv_filter_grad`
-is the zero-free filter gradient.  Both run the kernels in interpret mode on
-CPU (the container target) and compiled mode on real TPUs.
+`tconv_phase` is the fused zero-free transposed convolution -- ONE
+`pallas_call` computes all S*S stride phases (phase interleaving is a pure
+reshape/transpose); `dconv_filter_grad` is the zero-free filter gradient
+with in-kernel tap gathering (no K^2 input replication).  Both run the
+kernels in interpret mode on CPU (the container target) and compiled mode
+on real TPUs.  These are the `pallas` conv backend
+(`repro.core.spec.resolve_backend("pallas")`).
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.attention import flash_attention_pallas
 from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
-from repro.kernels.tconv_phase import tconv_phase_pallas
+from repro.kernels.tconv_phase import tconv_fused_pallas
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -29,38 +31,19 @@ def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128):
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out"))
 def tconv_phase(dy: jax.Array, w: jax.Array, *, stride, padding,
                 n_out) -> jax.Array:
-    """Zero-free transposed conv via S*S Pallas phase kernels.
+    """Fused zero-free transposed conv: one Pallas launch for all phases.
 
     dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout) -> dx (B,Nh,Nw,Cin).
     """
-    sh, sw = stride
-    ph, pw = padding
-    B, Oh, Ow, Cout = dy.shape
-    Kh, Kw, Cin, _ = w.shape
-    Nh, Nw = n_out
-    Fh, Fw = sh * (Oh - 1) + Kh, sw * (Ow - 1) + Kw
-    dx_full = jnp.zeros((B, Fh, Fw, Cin), dtype=dy.dtype)
-    for p in range(sh):
-        for q in range(sw):
-            sub = w[p::sh, q::sw]
-            kp, kq = sub.shape[0], sub.shape[1]
-            if kp == 0 or kq == 0:
-                continue
-            sub = jnp.swapaxes(jnp.flip(sub, axis=(0, 1)), 2, 3)
-            part = tconv_phase_pallas(dy, sub, interpret=_INTERPRET)
-            xp = -(-(Fh - p) // sh)
-            xq = -(-(Fw - q) // sw)
-            dx_full = dx_full.at[:, p::sh, q::sw, :].set(part[:, :xp, :xq, :])
-    eh, ew = max(0, ph + Nh - Fh), max(0, pw + Nw - Fw)
-    if eh or ew:
-        dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
-    return dx_full[:, ph:ph + Nh, pw:pw + Nw, :]
+    return tconv_fused_pallas(dy, w, stride=tuple(stride),
+                              padding=tuple(padding), n_out=tuple(n_out),
+                              interpret=_INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "k"))
 def dconv_filter_grad(x: jax.Array, dy: jax.Array, *, stride, padding,
                       k) -> jax.Array:
-    """Zero-free filter gradient via the Pallas tap-matmul kernel."""
+    """Zero-free filter gradient via the in-kernel tap-gather matmul."""
     return dconv_filter_grad_pallas(x, dy, stride=tuple(stride),
                                     padding=tuple(padding), k=tuple(k),
                                     interpret=_INTERPRET)

@@ -24,18 +24,6 @@ def dconv_filter_grad_ref(x, dy, *, stride, padding, k):
         x, dy, stride=stride, padding=padding, k=tuple(k))
 
 
-def stride1_full_corr_ref(dy, w_sub):
-    """Oracle for the inner stride-1 'full' correlation each phase runs:
-    dy (B,Oh,Ow,Cout) * w_sub (kp,kq,Cout,Cin) -> (B, Oh+kp-1, Ow+kq-1, Cin).
-    """
-    kp, kq = w_sub.shape[0], w_sub.shape[1]
-    return jax.lax.conv_general_dilated(
-        dy, w_sub, window_strides=(1, 1),
-        padding=[(kp - 1, kp - 1), (kq - 1, kq - 1)],
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        preferred_element_type=jnp.float32).astype(dy.dtype)
-
-
 def flash_attention_ref(q, k, v, *, causal=True, scale=None):
     """Oracle for the flash-attention kernel: (B,S,H,D) GQA attention."""
     Bq, Sq, Hq, D = q.shape

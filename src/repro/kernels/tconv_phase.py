@@ -1,22 +1,36 @@
-"""Pallas TPU kernel: phase-decomposed (zero-free) transposed convolution.
+"""Pallas TPU kernel: fused phase-decomposed (zero-free) transposed conv.
 
-One `pallas_call` computes one *phase* of the EcoFlow transposed conv: a
-stride-1 "full" correlation of the un-padded error map `dy` with a rotated
-sub-filter `w_pq`.  The wrapper in `ops.py` launches S*S phases and
-interleaves the results.
+ONE `pallas_call` computes all S_h*S_w phases of the EcoFlow transposed
+convolution.  The rotated sub-filters are packed into a single
 
-TPU mapping (the EcoFlow->MXU translation, see DESIGN.md Sec. 2):
+    w_packed : (S_h*S_w, KP, KQ, Cout, Cin)      KP = ceil(Kh/S_h), ...
+
+tensor (ragged phases zero-padded at the tail taps before rotation), the
+phase index is a grid dimension, and each grid step writes its phase's
+output block into a *phase-major* output `(B, S_h*S_w, ho, wo, Cin)`.
+Host-side assembly is then a pure reshape/transpose -- the strided
+interleave `dx[p::S, q::S] = phase_pq` falls out of
+
+    (B, ho, S_h, wo, S_w, Cin) -> (B, ho*S_h, wo*S_w, Cin)
+
+because ho = ceil(F_h/S_h) exactly (F = S*(O-1)+K, the pre-slice output).
+`dy` is padded ONCE by (KP-1, KQ-1) -- not once per phase -- and the
+S*S scatter-writes of the multi-launch formulation disappear entirely.
+
+TPU mapping (the EcoFlow -> MXU translation, see DESIGN.md Sec. 2):
   * the paper's per-PE MAC schedule (one weight broadcast per cycle, one
     error element per PE) becomes a static tap loop of
     (spatial x Cout) @ (Cout x Cin) MXU matmuls;
   * the paper's multicast groups become the shifted static slices of the
     VMEM-resident dy block;
-  * the paper's vertical psum chains become the fp32 accumulator tile.
+  * the paper's vertical psum chains become the fp32 accumulator tile;
+  * the paper's phase enumeration (the symbolic outer product grouped by
+    output residue (p, q)) becomes the leading grid dimension.
 
-BlockSpec tiling: grid (B, Cin_tiles).  Per grid step the kernel holds
-  dy block   (1, Hp, Wp, Cout)          -- zero-padded by (kp-1, kq-1)
-  w block    (kp, kq, Cout, Cin_t)
-  out block  (1, Ho, Wo, Cin_t)         -- fp32 accumulate, cast on store
+BlockSpec tiling: grid (B, S*S, Cin_tiles).  Per grid step the kernel holds
+  dy block   (1, Hp, Wp, Cout)            -- padded once, reused over phases
+  w block    (1, KP, KQ, Cout, Cin_t)     -- this phase's packed sub-filter
+  out block  (1, 1, ho, wo, Cin_t)        -- fp32 accumulate, cast on store
 in VMEM.  Channel tile Cin_t (default 128) keeps the working set within
 VMEM for the layer sizes the paper evaluates (<=130x130 spatial); matmul
 dims are multiples of 128 whenever Cout/Cin are, which is MXU-aligned.
@@ -29,54 +43,124 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.spec import ConvSpec, _pair
 
-def _phase_kernel(dy_ref, w_ref, out_ref, *, kp: int, kq: int,
-                  ho: int, wo: int):
-    """out[0,x,y,ci] = sum_{a,b,co} dy_pad[0, x+a', y+b', co] w[a,b,co,ci]
-    as a static tap loop of MXU matmuls with an fp32 VMEM accumulator."""
+
+def pack_phase_filters(w: jax.Array, stride) -> jax.Array:
+    """Pack the S*S rotated sub-filters into one uniform tensor.
+
+    w: (Kh, Kw, Cin, Cout) forward filter ->
+    (S_h*S_w, KP, KQ, Cout, Cin) with KP = ceil(Kh/S_h), KQ = ceil(Kw/S_w).
+
+    Phase (p, q) holds W[a*S_h+p, b*S_w+q] zero-padded to (KP, KQ) taps,
+    then flipped 180deg (so each phase is a stride-1 *correlation* of dy)
+    and channel-transposed to map Cout -> Cin.  Only the
+    min(S_h,K_h) * min(S_w,K_w) NON-empty phases are packed: phases beyond
+    the filter extent (stride > K) are structural zeros of the upsampling
+    -- the wrapper zero-fills their output rows host-side instead of
+    spending grid steps on all-zero sub-filters.  The intra-phase tap
+    padding of ragged phases (K % S != 0) stays: it costs O(K^2) extra
+    weight words per phase, not the O(N^2 S^2) dilation zeros the
+    dataflow eliminates, and buys a uniform single-launch grid.
+    """
+    sh, sw = _pair(stride)
+    Kh, Kw, Cin, Cout = w.shape
+    KP, KQ = -(-Kh // sh), -(-Kw // sw)
+    phases = []
+    for p in range(min(sh, Kh)):
+        for q in range(min(sw, Kw)):
+            sub = w[p::sh, q::sw]                    # (kp, kq, Cin, Cout)
+            kp, kq = sub.shape[0], sub.shape[1]
+            sub = jnp.pad(sub, ((0, KP - kp), (0, KQ - kq), (0, 0), (0, 0)))
+            sub = jnp.flip(sub, axis=(0, 1))         # rotate 180deg
+            sub = jnp.swapaxes(sub, 2, 3)            # (KP, KQ, Cout, Cin)
+            phases.append(sub)
+    return jnp.stack(phases)
+
+
+def _fused_phase_kernel(dy_ref, w_ref, out_ref, *, kp: int, kq: int,
+                        ho: int, wo: int):
+    """One phase per grid step: a stride-1 full correlation of the padded
+    dy block with this phase's packed sub-filter, as a static tap loop of
+    MXU matmuls with an fp32 VMEM accumulator.  Zero-padded taps of ragged
+    phases multiply by zero -- the loop body is uniform across phases."""
     acc = jnp.zeros((ho * wo, out_ref.shape[-1]), dtype=jnp.float32)
     for a in range(kp):
         for b in range(kq):
             # Shifted window of the padded dy block: (ho, wo, Cout).
             win = dy_ref[0, a:a + ho, b:b + wo, :]
             lhs = win.reshape(ho * wo, win.shape[-1]).astype(jnp.float32)
-            rhs = w_ref[a, b].astype(jnp.float32)
+            rhs = w_ref[0, a, b].astype(jnp.float32)
             acc += jax.lax.dot(lhs, rhs,
                                preferred_element_type=jnp.float32)
-    out_ref[0] = acc.reshape(ho, wo, out_ref.shape[-1]).astype(out_ref.dtype)
+    out_ref[0, 0] = acc.reshape(ho, wo,
+                                out_ref.shape[-1]).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cin_tile", "interpret"))
-def tconv_phase_pallas(dy: jax.Array, w_sub: jax.Array, *,
-                       cin_tile: int = 128,
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out",
+                                             "cin_tile", "interpret"))
+def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
+                       n_out=None, cin_tile: int = 128,
                        interpret: bool = True) -> jax.Array:
-    """Stride-1 full correlation of dy with one rotated sub-filter.
+    """Zero-free transposed conv in a SINGLE `pallas_call`.
 
-    dy:    (B, Oh, Ow, Cout)
-    w_sub: (kp, kq, Cout, Cin)  already rotated/selected by the wrapper
-    returns (B, Oh+kp-1, Ow+kq-1, Cin)
+    dy: (B, Oh, Ow, Cout) error / generator input.
+    w:  (Kh, Kw, Cin, Cout) forward filter.
+    Returns (B, Nh, Nw, Cin) where (Nh, Nw) = n_out (default exact fit).
     """
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
     B, Oh, Ow, Cout = dy.shape
-    kp, kq, _, Cin = w_sub.shape
-    ho, wo = Oh + kp - 1, Ow + kq - 1
-    # "Full" correlation: pad dy once on the host side of the kernel.
-    dy_pad = jnp.pad(dy, ((0, 0), (kp - 1, kp - 1), (kq - 1, kq - 1), (0, 0)))
+    Kh, Kw, Cin, _ = w.shape
+    spec = ConvSpec.make(stride=(sh, sw), padding=(ph, pw),
+                         filter_shape=(Kh, Kw))
+    if n_out is None:
+        n_out = spec.input_size((Oh, Ow))
+    Nh, Nw = _pair(n_out)
+    Fh, Fw = spec.full_size((Oh, Ow))
+    KP, KQ = spec.packed_phase_shape
+    # Grid only the non-empty phases (stride > K leaves sh*sw - TPh*TPw
+    # structurally-zero phases whose rows are filled host-side).
+    TPh, TPw = min(sh, Kh), min(sw, Kw)
+    T = TPh * TPw
+
+    w_packed = pack_phase_filters(w, (sh, sw))       # (T, KP, KQ, Cout, Cin)
+    # "Full" correlation: pad dy ONCE (uniform across phases).
+    dy_pad = jnp.pad(dy, ((0, 0), (KP - 1, KP - 1), (KQ - 1, KQ - 1),
+                          (0, 0)))
     hp, wp = dy_pad.shape[1], dy_pad.shape[2]
+    ho, wo = Oh + KP - 1, Ow + KQ - 1                # == ceil(F/S) per axis
+
     ct = min(cin_tile, Cin)
     n_ct = -(-Cin // ct)
     if Cin % ct:
-        w_sub = jnp.pad(w_sub, ((0, 0), (0, 0), (0, 0), (0, n_ct * ct - Cin)))
-    kern = functools.partial(_phase_kernel, kp=kp, kq=kq, ho=ho, wo=wo)
+        w_packed = jnp.pad(w_packed,
+                           ((0, 0),) * 4 + ((0, n_ct * ct - Cin),))
+    kern = functools.partial(_fused_phase_kernel, kp=KP, kq=KQ, ho=ho, wo=wo)
     out = pl.pallas_call(
         kern,
-        grid=(B, n_ct),
+        grid=(B, T, n_ct),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, Cout), lambda b, c: (b, 0, 0, 0)),
-            pl.BlockSpec((kp, kq, Cout, ct), lambda b, c: (0, 0, 0, c)),
+            pl.BlockSpec((1, hp, wp, Cout), lambda b, t, c: (b, 0, 0, 0)),
+            pl.BlockSpec((1, KP, KQ, Cout, ct),
+                         lambda b, t, c: (t, 0, 0, 0, c)),
         ],
-        out_specs=pl.BlockSpec((1, ho, wo, ct), lambda b, c: (b, 0, 0, c)),
-        out_shape=jax.ShapeDtypeStruct((B, ho, wo, n_ct * ct), dy.dtype),
+        out_specs=pl.BlockSpec((1, 1, ho, wo, ct),
+                               lambda b, t, c: (b, t, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, T, ho, wo, n_ct * ct), dy.dtype),
         interpret=interpret,
-    )(dy_pad, w_sub)
-    return out[..., :Cin]
+    )(dy_pad, w_packed)
+
+    # Phase-major -> strided interleave as ONE reshape/transpose chain:
+    # rows of dx_full are r = x*S_h + p  <->  (x, p) of phase row x.
+    out = out[..., :Cin].reshape(B, TPh, TPw, ho, wo, Cin)
+    if TPh < sh or TPw < sw:   # stride > K: structural-zero phase rows
+        out = jnp.pad(out, ((0, 0), (0, sh - TPh), (0, sw - TPw),
+                            (0, 0), (0, 0), (0, 0)))
+    dx_full = out.transpose(0, 3, 1, 4, 2, 5).reshape(
+        B, ho * sh, wo * sw, Cin)[:, :Fh, :Fw, :]
+    # Non-exact-fit inputs (forward ignored tail rows/cols): zero-pad tail.
+    eh, ew = max(0, ph + Nh - Fh), max(0, pw + Nw - Fw)
+    if eh or ew:
+        dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
+    return dx_full[:, ph:ph + Nh, pw:pw + Nw, :]

@@ -36,18 +36,21 @@ def simple_cnn_init(rng, *, in_ch=3, widths=(32, 64, 128), n_classes=10,
     return params
 
 
-def simple_cnn_apply(params, x, *, stride=2, use_pallas=False):
-    """x (B,H,W,Cin) -> logits (B,n_classes)."""
+def simple_cnn_apply(params, x, *, stride=2, backend=None):
+    """x (B,H,W,Cin) -> logits (B,n_classes).
+
+    `backend` selects the conv dispatch backend
+    (reference | xla_zero_free | pallas, see repro.core.spec)."""
     for w in params["convs"]:
-        x = ecoflow_conv(x, w, stride, 1, use_pallas)
+        x = ecoflow_conv(x, w, stride, 1, backend)
         x = jax.nn.relu(x)
     x = x.mean(axis=(1, 2))
     return x @ params["head"]
 
 
-def cnn_loss(params, x, labels, *, stride=2, use_pallas=False):
+def cnn_loss(params, x, labels, *, stride=2, backend=None):
     logits = simple_cnn_apply(params, x, stride=stride,
-                              use_pallas=use_pallas)
+                              backend=backend)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return (logz - gold).mean()

@@ -34,16 +34,18 @@ def generator_init(rng, *, z_dim=64, base=64, out_ch=3):
     }
 
 
-def generator_apply(params, z):
+def generator_apply(params, z, *, backend=None):
+    """`backend` selects the conv dispatch backend (see repro.core.spec);
+    the zero-free transposed conv is the generator's *forward* pass."""
     B = z.shape[0]
     x = (z @ params["proj"]).reshape(B, 4, 4, -1)
     x = jax.nn.relu(x)
     x = jax.nn.relu(ecoflow_conv_transpose(x, params["t1"], 2, 1,
-                                           n_out=(8, 8)))
+                                           n_out=(8, 8), backend=backend))
     x = jax.nn.relu(ecoflow_conv_transpose(x, params["t2"], 2, 1,
-                                           n_out=(16, 16)))
+                                           n_out=(16, 16), backend=backend))
     x = jnp.tanh(ecoflow_conv_transpose(x, params["t3"], 2, 1,
-                                        n_out=(32, 32)))
+                                        n_out=(32, 32), backend=backend))
     return x
 
 
@@ -59,19 +61,19 @@ def discriminator_init(rng, *, in_ch=3, base=64):
     }
 
 
-def discriminator_apply(params, x):
+def discriminator_apply(params, x, *, backend=None):
     a = lambda t: jax.nn.leaky_relu(t, 0.2)
-    x = a(ecoflow_conv(x, params["c1"], 2, 1))   # 32 -> 16
-    x = a(ecoflow_conv(x, params["c2"], 2, 1))   # 16 -> 8
-    x = a(ecoflow_conv(x, params["c3"], 2, 1))   # 8 -> 4
+    x = a(ecoflow_conv(x, params["c1"], 2, 1, backend))   # 32 -> 16
+    x = a(ecoflow_conv(x, params["c2"], 2, 1, backend))   # 16 -> 8
+    x = a(ecoflow_conv(x, params["c3"], 2, 1, backend))   # 8 -> 4
     return x.reshape(x.shape[0], -1) @ params["head"]
 
 
-def gan_losses(g_params, d_params, z, real):
+def gan_losses(g_params, d_params, z, real, *, backend=None):
     """Non-saturating GAN losses (g_loss, d_loss)."""
-    fake = generator_apply(g_params, z)
-    d_fake = discriminator_apply(d_params, fake)
-    d_real = discriminator_apply(d_params, real)
+    fake = generator_apply(g_params, z, backend=backend)
+    d_fake = discriminator_apply(d_params, fake, backend=backend)
+    d_real = discriminator_apply(d_params, real, backend=backend)
     sp = jax.nn.softplus
     d_loss = sp(-d_real).mean() + sp(d_fake).mean()
     g_loss = sp(-d_fake).mean()

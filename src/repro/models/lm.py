@@ -34,6 +34,25 @@ def _stack_init(block_init, rng, n):
     return jax.vmap(block_init)(rngs)
 
 
+@jax.custom_vjp
+def _diff_barrier(x):
+    """`lax.optimization_barrier` with a differentiation rule (identity;
+    the cotangent is barriered too, preserving the hoisting fence in the
+    backward pass).  jax 0.4.x has no built-in rule for the primitive."""
+    return lax.optimization_barrier(x)
+
+
+def _diff_barrier_fwd(x):
+    return _diff_barrier(x), None
+
+
+def _diff_barrier_bwd(_, g):
+    return (lax.optimization_barrier(g),)
+
+
+_diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Per-family block definitions
 # ---------------------------------------------------------------------------
@@ -168,7 +187,7 @@ class LM:
                 # the per-layer dynamic-slice.  Without it the whole
                 # (L,B,S,D) stash is converted to f32 wholesale, tripling
                 # resident activation memory.
-                return _inner(lax.optimization_barrier(x), p)
+                return _inner(_diff_barrier(x), p)
 
             body = jax.checkpoint(body)
 

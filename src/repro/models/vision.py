@@ -27,8 +27,10 @@ def patchify_init(rng, *, patch=14, in_ch=3, d_model=1024):
     }
 
 
-def patchify_apply(params, images, *, patch=14, use_pallas=False):
-    """images (B,H,W,C) -> patch embeddings (B, H/p * W/p, D)."""
-    x = ecoflow_conv(images, params["proj"], patch, 0, use_pallas)
+def patchify_apply(params, images, *, patch=14, backend=None):
+    """images (B,H,W,C) -> patch embeddings (B, H/p * W/p, D).
+
+    `backend` selects the conv dispatch backend (see repro.core.spec)."""
+    x = ecoflow_conv(images, params["proj"], patch, 0, backend)
     B, hp, wp, D = x.shape
     return x.reshape(B, hp * wp, D) + params["pos"]

@@ -66,9 +66,13 @@ def gpipe(mesh: Mesh, axis: str, stage_fn: Callable, stage_params, x,
 
         ys0 = jnp.zeros_like(xs)
         # carries become stage-varying after the first ppermute; mark the
-        # initial values as varying over the stage axis (jax>=0.8 vma)
-        buf = lax.pcast(buf, (axis,), to="varying")
-        ys0 = lax.pcast(ys0, (axis,), to="varying")
+        # initial values as varying over the stage axis.  `lax.pcast` only
+        # exists once shard_map has varying-manual-axes tracking (jax>=0.8);
+        # on older jax the scan carry needs no annotation.
+        pcast = getattr(lax, "pcast", None)
+        if pcast is not None:
+            buf = pcast(buf, (axis,), to="varying")
+            ys0 = pcast(ys0, (axis,), to="varying")
         (_, ys), _ = lax.scan(tick, (buf, ys0), jnp.arange(n_ticks))
         # Broadcast the last stage's outputs to everyone.
         ys = lax.psum(jnp.where(stage == n_stages - 1, ys, 0.0), axis)

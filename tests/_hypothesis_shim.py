@@ -1,0 +1,121 @@
+"""Deterministic fallback for `hypothesis` when it is not installed.
+
+The tier-1 suite uses a small slice of the hypothesis API (`given`,
+`settings`, `strategies.{integers,floats,booleans,sampled_from}`) for
+property tests.  This shim provides drop-in replacements that run each
+property test against a fixed number of deterministic pseudo-random draws
+(seeded per test name), so the suite stays green -- with reduced (but
+reproducible) coverage -- on machines without the optional dependency.
+
+Installed by tests/conftest.py via `install()` *before* test modules are
+imported; a real `hypothesis` install always takes precedence.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import sys
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    """A draw rule: maps an np.random.Generator to one example value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Decorator recording how many examples `given` should run."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Run the wrapped test for N deterministic draws of each strategy.
+
+    Draw sequences are seeded from the test's qualified name, so failures
+    reproduce run to run and are independent of test execution order.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # Read at call time from the outermost decorated object:
+            # `@settings` above `@given` sets the attribute on `wrapper`;
+            # `@given` above `@settings` leaves it on `fn` (and
+            # functools.wraps copies it up).  Cap to keep the shim cheap.
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                _DEFAULT_EXAMPLES))
+            n = min(n, _DEFAULT_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            for i in itertools.count():
+                if i >= n:
+                    break
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"property test failed on shim example {drawn!r}"
+                    ) from e
+        # Mark so pytest does not try to inject the strategy kwargs as
+        # fixtures.
+        wrapper.__signature__ = _signature_without(fn, strategies)
+        return wrapper
+    return deco
+
+
+def _signature_without(fn, strategies):
+    import inspect
+    sig = inspect.signature(fn)
+    params = [p for name, p in sig.parameters.items()
+              if name not in strategies]
+    return sig.replace(parameters=params)
+
+
+def install() -> None:
+    """Register this shim as the `hypothesis` package in sys.modules."""
+    if "hypothesis" in sys.modules:  # real install (or already shimmed)
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    mod.strategies = st
+    mod.__shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

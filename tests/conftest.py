@@ -10,6 +10,12 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+try:  # optional dev dependency (see requirements-dev.txt)
+    import hypothesis  # noqa: F401
+except ImportError:  # graceful fallback: deterministic property-test shim
+    from _hypothesis_shim import install as _install_hypothesis_shim
+    _install_hypothesis_shim()
+
 
 @pytest.fixture
 def rng():

@@ -96,13 +96,15 @@ def test_rectangular_stride(rng):
     assert_allclose(dw, dw_ref, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("use_pallas", [False, True])
-def test_ecoflow_conv_custom_vjp(rng, use_pallas):
-    """jax.grad through ecoflow_conv == jax.grad through the plain conv."""
+@pytest.mark.parametrize("backend",
+                         ["reference", "xla_zero_free", "pallas"])
+def test_ecoflow_conv_custom_vjp(rng, backend):
+    """jax.grad through ecoflow_conv == jax.grad through the plain conv,
+    for every dispatch backend."""
     x, w, _ = _case(rng, 2, 9, 3, 2, 1, 3, 4)
 
     def loss_eco(x_, w_):
-        return jnp.sum(ecoflow_conv(x_, w_, 2, 1, use_pallas) ** 2)
+        return jnp.sum(ecoflow_conv(x_, w_, 2, 1, backend) ** 2)
 
     def loss_ref(x_, w_):
         return jnp.sum(ecoflow.direct_conv(x_, w_, 2, 1) ** 2)

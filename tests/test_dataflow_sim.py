@@ -69,6 +69,19 @@ def test_fig9_filter_grad_speedup_bands():
     assert 35.0 < sp8 < 100.0
 
 
+def test_stride1_zero_mac_fraction_is_exactly_zero():
+    """Stride 1 inserts no dilation zeros: every dataflow schedules only
+    useful MACs and zero_mac_fraction is exactly 0 for the gradient ops
+    (regression: the tpu/rs stride-1 case used to fall through to the
+    padded-MAC formulas)."""
+    base = dict(c_in=64, n_in=31, k=5, m=192, batch=4)
+    l = ds.ConvLayer("s1", n_out=27, stride=1, **base)
+    for op in ("forward", "input_grad", "filter_grad"):
+        assert ds.zero_mac_fraction(l, op) == 0.0
+        for df in ("tpu", "rs", "ecoflow"):
+            assert ds.scheduled_macs(l, op, df) == ds.useful_macs(l, op)
+
+
 def test_stride1_near_parity():
     """Paper: 0-10% gains at stride 1 (no padding zeros to remove)."""
     l = ds.layer_by_name("alexnet-CONV2")

@@ -1,0 +1,187 @@
+"""ConvSpec dispatch layer: every backend x odd geometries, plus the
+fused-kernel structural guarantees (exactly ONE pallas_call per conv;
+filter-grad peak memory no longer scales with K^2 input replication).
+
+Gradient parity reference is `jax.grad` of `lax.conv_general_dilated`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ecoflow
+from repro.core.conv import ecoflow_conv
+from repro.core.spec import (ConvSpec, available_backends, resolve_backend)
+from repro.kernels import ops
+
+from conftest import assert_allclose
+
+BACKENDS = ["reference", "xla_zero_free", "pallas"]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr inspection helpers
+# ---------------------------------------------------------------------------
+
+def _walk_eqns(jaxpr):
+    """Yield every eqn in a (closed) jaxpr, recursing into sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", None)  # ClosedJaxpr
+            if sub is not None:
+                yield from _walk_eqns(sub)
+            elif hasattr(v, "eqns"):         # raw Jaxpr
+                yield from _walk_eqns(v)
+
+
+def _count_pallas_calls(fn, *args) -> int:
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return sum(1 for e in _walk_eqns(jaxpr.jaxpr)
+               if e.primitive.name == "pallas_call")
+
+
+def _max_intermediate_size(fn, *args) -> int:
+    """Largest array (elements) produced by any eqn in the traced jaxpr."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    sizes = [int(np.prod(v.aval.shape))
+             for e in _walk_eqns(jaxpr.jaxpr) for v in e.outvars
+             if hasattr(v.aval, "shape")]
+    return max(sizes)
+
+
+# ---------------------------------------------------------------------------
+# registry behavior
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert set(BACKENDS) <= set(available_backends())
+    assert resolve_backend(None).name == "xla_zero_free"
+    assert resolve_backend(False).name == "xla_zero_free"  # legacy bool
+    assert resolve_backend(True).name == "pallas"
+    assert resolve_backend("reference").name == "reference"
+    with pytest.raises(ValueError, match="unknown conv backend"):
+        resolve_backend("cuda")
+
+
+def test_convspec_geometry():
+    s = ConvSpec.make(stride=(2, 3), padding=(1, 0), filter_shape=(5, 4))
+    assert s.out_size((11, 12)) == ((11 + 2 - 5) // 2 + 1, (12 - 4) // 3 + 1)
+    assert s.input_size((4, 3)) == (2 * 3 + 5 - 2, 3 * 2 + 4)
+    assert s.full_size((4, 3)) == (2 * 3 + 5, 3 * 2 + 4)
+    assert s.n_phases == 6
+    assert s.packed_phase_shape == (3, 2)
+    # every tap in exactly one phase (the zero-free property)
+    assert s.useful_taps() == 5 * 4
+    # stride > K: phases beyond the filter extent are empty
+    s2 = ConvSpec.make(stride=4, padding=0, filter_shape=2)
+    assert s2.phase_filter_shape(3, 3) == (0, 0)
+    assert s2.useful_taps() == 4
+
+
+# ---------------------------------------------------------------------------
+# odd geometries through every backend, vs jax.grad of the plain conv
+# ---------------------------------------------------------------------------
+
+# (name, B, (Nh, Nw), K, (sh, sw), (ph, pw), Ci, Co)
+ODD_GEOMS = [
+    ("stride_gt_k",        1, (14, 14), 2, (4, 4), (0, 0), 4, 3),
+    ("stride8_gt_k",       1, (17, 17), 3, (8, 8), (0, 0), 3, 3),
+    ("asym_stride_pad",    2, (12, 11), 3, (2, 3), (1, 0), 3, 4),
+    ("asym_rect_input",    1, (9, 14),  4, (3, 2), (0, 1), 2, 5),
+    ("cin_not_tile_mult",  1, (7, 7),   3, (2, 2), (1, 1), 129, 3),
+    ("cout_not_tile_mult", 1, (7, 7),   3, (2, 2), (0, 0), 3, 5),
+    ("non_exact_fit",      2, (10, 10), 3, (2, 2), (0, 0), 3, 4),
+]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name,B,N,K,S,P,Ci,Co", ODD_GEOMS)
+def test_odd_geometry_grads_all_backends(rng, backend, name, B, N, K, S, P,
+                                         Ci, Co):
+    Nh, Nw = N
+    sh, sw = S
+    ph, pw = P
+    Oh = (Nh + 2 * ph - K) // sh + 1
+    Ow = (Nw + 2 * pw - K) // sw + 1
+    x = jnp.asarray(rng.normal(size=(B, Nh, Nw, Ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, Oh, Ow, Co)), jnp.float32)
+
+    def plain(x_, w_):
+        return jax.lax.conv_general_dilated(
+            x_, w_, (sh, sw), [(ph, ph), (pw, pw)],
+            dimension_numbers=ecoflow.DN)
+
+    _, vjp = jax.vjp(plain, x, w)
+    dx_ref, dw_ref = vjp(dy)
+
+    def loss(x_, w_):
+        return jnp.vdot(ecoflow_conv(x_, w_, (sh, sw), (ph, pw), backend),
+                        dy)
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert_allclose(dx, dx_ref, rtol=2e-4, atol=2e-4,
+                    err_msg=f"{name}/{backend} dx")
+    assert_allclose(dw, dw_ref, rtol=2e-4, atol=2e-4,
+                    err_msg=f"{name}/{backend} dw")
+
+
+# ---------------------------------------------------------------------------
+# structural guarantees of the fused Pallas path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S", [2, 4, 8])
+def test_tconv_single_pallas_launch(rng, S):
+    """The fused transposed conv issues exactly ONE pallas_call per conv,
+    for every stride the paper evaluates -- and its output matches the
+    multi-launch xla_zero_free formulation."""
+    B, O, K, Ci, Co = 1, 5, 3, 4, 4
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    N = S * (O - 1) + K
+    fn = lambda dy_, w_: ops.tconv_phase(dy_, w_, stride=(S, S),
+                                         padding=(0, 0), n_out=(N, N))
+    assert _count_pallas_calls(fn, dy, w) == 1
+    got = fn(dy, w)
+    want = ecoflow.transposed_conv_zero_free(dy, w, stride=(S, S),
+                                             padding=(0, 0), n_out=(N, N))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_filter_grad_single_pallas_launch(rng):
+    B, N, K, S, Ci, Co = 1, 9, 3, 2, 4, 4
+    O = (N - K) // S + 1
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    fn = lambda x_, dy_: ops.dconv_filter_grad(x_, dy_, stride=(S, S),
+                                               padding=(0, 0), k=(K, K))
+    assert _count_pallas_calls(fn, x, dy) == 1
+
+
+def test_backward_pass_is_two_pallas_launches(rng):
+    """One training conv backward = 1 fused tconv + 1 filter-grad launch."""
+    x = jnp.asarray(rng.normal(size=(1, 9, 9, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 4)), jnp.float32)
+    loss = lambda x_, w_: jnp.sum(ecoflow_conv(x_, w_, 2, 0, "pallas") ** 2)
+    g = lambda x_, w_: jax.grad(loss, argnums=(0, 1))(x_, w_)
+    assert _count_pallas_calls(g, x, w) == 2
+
+
+def test_filter_grad_memory_not_k2_replicated(rng):
+    """Peak intermediate size of the filter gradient is bounded by a small
+    multiple of the padded input -- NOT the K^2-replicated x_taps stack of
+    the old formulation (121x the strided gather for K=11)."""
+    B, N, K, S, P, Ci, Co = 1, 23, 11, 4, 2, 8, 8
+    O = (N + 2 * P - K) // S + 1
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    fn = lambda x_, dy_: ops.dconv_filter_grad(x_, dy_, stride=(S, S),
+                                               padding=(P, P), k=(K, K))
+    old_stack_elems = K * K * B * O * O * Ci          # x_taps of the old path
+    padded_in_elems = B * (N + 2 * P) ** 2 * Ci
+    peak = _max_intermediate_size(fn, x, dy)
+    assert peak < old_stack_elems, (peak, old_stack_elems)
+    assert peak <= 4 * padded_in_elems, (peak, padded_in_elems)

@@ -11,7 +11,7 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels import ops, ref
 from repro.kernels.attention import flash_attention_pallas
 from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
-from repro.kernels.tconv_phase import tconv_phase_pallas
+from repro.kernels.tconv_phase import pack_phase_filters, tconv_fused_pallas
 
 from conftest import assert_allclose
 
@@ -59,14 +59,35 @@ def test_tconv_phase_dtypes(rng, dtype, tol):
     assert_allclose(out, want, rtol=tol, atol=tol)
 
 
-def test_tconv_single_phase_kernel(rng):
-    """The inner stride-1 full correlation each phase computes."""
-    B, O, Ci, Co, kp, kq = 2, 6, 5, 4, 2, 3
+def test_tconv_fused_direct_call(rng):
+    """The fused kernel entry point itself (not via ops) matches the
+    oracle, including the default exact-fit n_out."""
+    B, O, K, S, Ci, Co = 2, 6, 5, 2, 5, 4
     dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
-    w_sub = jnp.asarray(rng.normal(size=(kp, kq, Co, Ci)), jnp.float32)
-    out = tconv_phase_pallas(dy, w_sub, interpret=True)
-    want = ref.stride1_full_corr_ref(dy, w_sub)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    out = tconv_fused_pallas(dy, w, stride=(S, S), interpret=True)
+    N = S * (O - 1) + K
+    want = ref.tconv_phase_ref(dy, w, stride=(S, S), padding=(0, 0),
+                               n_out=(N, N))
     assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pack_phase_filters_zero_free(rng):
+    """Packing is tap-exhaustive and zero-free: every filter tap lands in
+    exactly one phase slot, ragged phases are zero-padded."""
+    K, S, Ci, Co = 5, 2, 3, 4
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    packed = pack_phase_filters(w, (S, S))      # (S*S, KP, KQ, Co, Ci)
+    KP = -(-K // S)
+    assert packed.shape == (S * S, KP, KP, Co, Ci)
+    # sum over all phase slots of |packed| == sum over all taps of |w|
+    assert_allclose(jnp.abs(packed).sum(), jnp.abs(w).sum(), rtol=1e-5)
+    # stride > K: only the min(S,K)^2 non-empty phases are packed; the
+    # structurally-zero phases get no grid steps (wrapper zero-fills them)
+    w1 = jnp.asarray(rng.normal(size=(2, 2, 3, 4)), jnp.float32)
+    packed1 = pack_phase_filters(w1, (4, 4))
+    assert packed1.shape[0] == 4  # (p,q) in {0,1}^2
+    assert all(float(jnp.abs(packed1[t]).sum()) > 0 for t in range(4))
 
 
 # ---------------------------------------------------------------------------
