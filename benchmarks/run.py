@@ -40,7 +40,7 @@ def main() -> None:
         from benchmarks import wallclock
         _emit(wallclock.run())
         print("# === wall-clock: conv backends (xla_zero_free vs fused "
-              "pallas) ===")
+              "pallas; incl. dilated-forward d in {2, 4}) ===")
         _emit(wallclock.conv_backend_bench())
 
     print("# === roofline per (arch x shape), single-pod 16x16 ===")

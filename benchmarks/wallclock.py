@@ -2,8 +2,9 @@
 naive dataflows, executed for real in JAX on this host (CPU here; the same
 code paths compile for TPU) -- plus the conv *backend* comparison
 (multi-launch `xla_zero_free` vs fused single-launch `pallas`) across the
-paper's Table 5/7 layer geometries, emitted to BENCH_conv.json so future
-PRs have a perf trajectory.
+paper's Table 5/7 layer geometries and the dilated-forward (atrous)
+geometries at rates d in {2, 4}, emitted to BENCH_conv.json so future PRs
+have a perf trajectory.
 
 Reported as name,us_per_call,derived -- `derived` carries the speedup and
 the useful-MAC fraction from the analytical model for cross-checking.
@@ -23,12 +24,18 @@ from repro.core.spec import ConvSpec, resolve_backend
 
 
 def _time(fn, *args, iters=5, warmup=2):
+    """Minimum per-call latency (us) over `iters` timed calls -- the min
+    is the standard robust estimator for microbenchmarks (scheduler and
+    allocator noise only ever adds time), keeping BENCH_conv.json rows
+    comparable across PRs."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
 
 
 # (name, N_err, K, S, Cin, Cout): error-map size, filter, stride, channels.
@@ -103,10 +110,23 @@ CONV_BACKEND_CASES = [
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_conv.json"
 
+# Dilated-forward (atrous) geometries: DeepLab-ASPP-style 3x3 branches at
+# rates d in {2, 4}, stride 1, same-padding (P = d) -- the dilated-forward
+# workload class wired through the backends.  Spatial size / channels are
+# capped for interpret-mode CI, like CONV_BACKEND_CASES above.
+DILATED_FORWARD_CASES = [
+    # (name, N, K, S, P, D, Ci, Co)
+    ("deeplab-ASPP-d2", 17, 3, 1, 2, 2, 16, 16),
+    ("deeplab-ASPP-d4", 17, 3, 1, 4, 4, 16, 16),
+]
 
-def conv_backend_bench(iters=3, warmup=1, write_json=True):
+
+def conv_backend_bench(iters=5, warmup=1, write_json=True):
     """Time tconv + filter-grad through the xla_zero_free and pallas
-    backends for each geometry; write BENCH_conv.json and return CSV rows.
+    backends for each geometry -- plus the dilated-forward conv (d in
+    {2, 4}) through the same two zero-free backends and the
+    materialized-filter naive baseline; write BENCH_conv.json and return
+    CSV rows.
     """
     rows, records = [], []
     rng = np.random.default_rng(0)
@@ -136,6 +156,36 @@ def conv_backend_bench(iters=3, warmup=1, write_json=True):
                          ""))
             rows.append((f"wallclock.filtergrad.{bname}.{name}",
                          round(t_g, 1), ""))
+        records.append(rec)
+    for name, N, K, S, P, D, Ci, Co in DILATED_FORWARD_CASES:
+        B = 1
+        spec = ConvSpec.make(stride=S, padding=P, filter_shape=K,
+                             dilation=D)
+        x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+        zf = naive.dilated_forward_zero_mac_fraction(K, D)
+        rec = {"layer": name, "n_in": N, "k": K, "stride": S,
+               "dilation": D, "c_in": Ci, "c_out": Co, "batch": B,
+               "interpret_mode": jax.default_backend() != "tpu",
+               "zero_mac_fraction_naive": round(zf, 4),
+               "dilated_forward_us": {}}
+        f_nai = jax.jit(lambda x_, w_: naive.dilated_forward_naive(
+            x_, w_, stride=S, padding=P, dilation=D))
+        t_nai = _time(f_nai, x, w, iters=iters, warmup=warmup)
+        rec["dilated_forward_us"]["naive_materialized"] = round(t_nai, 1)
+        rows.append((f"wallclock.dilated_forward.naive.{name}",
+                     round(t_nai, 1), f"zero_frac={zf:.2f}"))
+        for bname in backends:
+            be = resolve_backend(bname)
+            f_d = jax.jit(lambda x_, w_, be=be: be.forward(x_, w_, spec))
+            np.testing.assert_allclose(np.asarray(f_d(x, w)),
+                                       np.asarray(f_nai(x, w)),
+                                       rtol=1e-3, atol=1e-3)
+            t_d = _time(f_d, x, w, iters=iters, warmup=warmup)
+            rec["dilated_forward_us"][bname] = round(t_d, 1)
+            rows.append((f"wallclock.dilated_forward.{bname}.{name}",
+                         round(t_d, 1),
+                         f"speedup_vs_naive={t_nai/t_d:.2f}x"))
         records.append(rec)
     if write_json:
         BENCH_JSON.write_text(json.dumps(

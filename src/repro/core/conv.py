@@ -9,6 +9,11 @@ exactly the two backward kernels the paper accelerates.  Forward/backward
 are bit-compatible with `jax.grad` of a plain `lax.conv_general_dilated`
 (up to fp accumulation order).
 
+`ecoflow_dilated_conv(x, w, stride, padding, dilation, backend)` is the
+dilated/atrous forward conv (the paper's third conv family): the filter
+is applied at tap spacing D without materializing its effective extent,
+and both adjoints are equally zero-free (per-tap scatter/gather).
+
 `backend` selects the implementation from `repro.core.spec`:
   * "xla_zero_free" (default) -- dense XLA phase decomposition,
   * "pallas"                  -- fused single-launch Pallas TPU kernels
@@ -25,23 +30,28 @@ import jax
 from repro.core.spec import ConvSpec, resolve_backend
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def ecoflow_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
-                 backend=None) -> jax.Array:
-    """Direct conv (NHWC x HWIO -> NHWC) with EcoFlow zero-free backward."""
+                 backend=None, dilation=1) -> jax.Array:
+    """Direct conv (NHWC x HWIO -> NHWC) with EcoFlow zero-free backward.
+
+    `dilation` > 1 makes the forward a dilated/atrous conv -- zero-free on
+    the `xla_zero_free` and `pallas` backends (the dilated filter is never
+    materialized); see `ecoflow_dilated_conv` for the keyword-friendly
+    entry point."""
     spec = ConvSpec.make(stride=stride, padding=padding,
-                         filter_shape=w.shape[:2])
+                         filter_shape=w.shape[:2], dilation=dilation)
     return resolve_backend(backend).forward(x, w, spec)
 
 
-def _fwd(x, w, stride, padding, backend):
-    return ecoflow_conv(x, w, stride, padding, backend), (x, w)
+def _fwd(x, w, stride, padding, backend, dilation):
+    return ecoflow_conv(x, w, stride, padding, backend, dilation), (x, w)
 
 
-def _bwd(stride, padding, backend, res, g):
+def _bwd(stride, padding, backend, dilation, res, g):
     x, w = res
     spec = ConvSpec.make(stride=stride, padding=padding,
-                         filter_shape=w.shape[:2])
+                         filter_shape=w.shape[:2], dilation=dilation)
     be = resolve_backend(backend)
     dx = be.input_grad(g, w, spec, (x.shape[1], x.shape[2]))
     dw = be.filter_grad(x, g, spec)
@@ -49,6 +59,19 @@ def _bwd(stride, padding, backend, res, g):
 
 
 ecoflow_conv.defvjp(_fwd, _bwd)
+
+
+def ecoflow_dilated_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
+                         dilation=2, backend=None) -> jax.Array:
+    """Zero-free dilated (atrous) forward convolution with zero-free VJP.
+
+    The segmentation-style workload of the paper (Sec. 1, Table 5): the
+    filter is applied at tap spacing `dilation` without materializing its
+    D*(K-1)+1 effective extent.  Both gradients route through the same
+    backend's zero-free adjoints (per-tap scatter for dx, per-tap gather
+    for dW), so `jax.grad` through this op matches `jax.grad` of
+    `lax.conv_general_dilated(..., rhs_dilation=D)`."""
+    return ecoflow_conv(x, w, stride, padding, backend, dilation)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))

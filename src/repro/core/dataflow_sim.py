@@ -24,7 +24,7 @@ from typing import Dict, Literal
 
 from repro.core import ecoflow
 
-Op = Literal["forward", "input_grad", "filter_grad"]
+Op = Literal["forward", "input_grad", "filter_grad", "dilated_forward"]
 Dataflow = Literal["rs", "tpu", "ecoflow"]
 
 
@@ -58,11 +58,18 @@ class ConvLayer:
     m: int          # number of filters (output channels)
     stride: int
     batch: int = 4  # paper uses batch 4
+    dilation: int = 1  # forward filter dilation (atrous rate)
+
+    @property
+    def k_eff(self) -> int:
+        """Effective receptive field D*(K-1)+1 of the dilated filter."""
+        return self.dilation * (self.k - 1) + 1
 
     @property
     def padding(self) -> int:
-        # Padding consistent with n_out = (n_in + 2P - K)/S + 1.
-        return max(0, ((self.n_out - 1) * self.stride + self.k - self.n_in + 1) // 2)
+        # Padding consistent with n_out = (n_in + 2P - K_eff)/S + 1.
+        return max(0, ((self.n_out - 1) * self.stride + self.k_eff
+                       - self.n_in + 1) // 2)
 
 
 # --------------------------------------------------------------------------
@@ -80,7 +87,14 @@ def scheduled_macs(layer: ConvLayer, op: Op, dataflow: Dataflow) -> int:
     """MACs the dataflow actually schedules (incl. multiplications by
     padding zeros for the naive dataflows -- the PEs spend the cycles even if
     the multiplier is clock-gated, paper Sec. 3.1)."""
-    if dataflow == "ecoflow" or op == "forward" or layer.stride == 1:
+    if dataflow == "ecoflow":
+        return useful_macs(layer, op)
+    if op == "dilated_forward":
+        # Naive dataflows sweep the filter at its materialized effective
+        # extent: K_eff^2 MACs per output position, K^2 of them useful.
+        return (layer.batch * layer.m * layer.c_in *
+                layer.n_out ** 2 * layer.k_eff ** 2)
+    if op == "forward" or layer.stride == 1:
         # Stride 1 inserts no dilation zeros, so EVERY dataflow schedules
         # exactly the useful MACs (zero_mac_fraction == 0) -- previously
         # the stride==1 case for tpu/rs gradient ops fell through to the
@@ -128,6 +142,10 @@ def _mapping_utilization(layer: ConvLayer, op: Op, dataflow: Dataflow,
         if op == "forward":
             rows, cols = layer.batch * layer.n_out ** 2, layer.m
             depth = layer.k ** 2 * layer.c_in
+        elif op == "dilated_forward":
+            # im2col over the materialized K_eff-extent filter.
+            rows, cols = layer.batch * layer.n_out ** 2, layer.m
+            depth = layer.k_eff ** 2 * layer.c_in
         elif op == "input_grad":
             # (B*Nin^2, K^2*M) @ (K^2*M, Cin) over the padded error map.
             rows, cols = layer.batch * layer.n_in ** 2, layer.c_in
@@ -143,6 +161,9 @@ def _mapping_utilization(layer: ConvLayer, op: Op, dataflow: Dataflow,
             set_h, set_w = layer.k, min(layer.n_in, C)
         elif op == "filter_grad":
             set_h, set_w = min(layer.stride * (layer.n_out - 1) + 1, R), layer.k
+        elif op == "dilated_forward":
+            # Filter rows at the materialized K_eff extent.
+            set_h, set_w = min(layer.k_eff, R), min(layer.n_out, C)
         else:
             set_h, set_w = layer.k, min(layer.n_out, C)
         used = min(hw.n_pes,
@@ -161,9 +182,14 @@ def _mapping_utilization(layer: ConvLayer, op: Op, dataflow: Dataflow,
         sets = layer.k ** 2 * layer.c_in * layer.m
         occupancy = _frag(sets, hw.n_pes) if sets >= hw.n_pes else sets / hw.n_pes
         return occupancy
+    # input_grad / forward / dilated_forward: one PE per output (error)
+    # element, K^2 useful MACs each.  For the dilated forward the psum
+    # chain spans the D-spaced tap extent instead of the stride-phase
+    # extent -- the same ceil(extent/stride)-1 hop model with K_eff.
     err2 = layer.n_out ** 2
     occupancy = _frag(err2 * layer.batch * layer.m, hw.n_pes)
-    hops = max(0, math.ceil(layer.k / layer.stride) - 1)
+    extent = layer.k_eff if op == "dilated_forward" else layer.k
+    hops = max(0, math.ceil(extent / layer.stride) - 1)
     hop_util = layer.k ** 2 / (layer.k ** 2 + hops)
     return occupancy * hop_util
 
@@ -212,13 +238,15 @@ def energy_breakdown_pj(layer: ConvLayer, op: Op, dataflow: Dataflow,
     # the m filters; psums spilled once per pass.
     in_elems = B * Cin * layer.n_in ** 2
     err_elems = B * M * layer.n_out ** 2
-    out_elems = {"forward": err_elems, "input_grad": in_elems,
+    out_elems = {"forward": err_elems, "dilated_forward": err_elems,
+                 "input_grad": in_elems,
                  "filter_grad": K * K * Cin * M}[op]
-    reuse_passes = max(1, M // 16) if op != "forward" else max(1, M // 16)
+    reuse_passes = max(1, M // 16)
     gbuf = (in_elems * reuse_passes + err_elems * reuse_passes +
             2 * out_elems) * hw.e_gbuf
-    if dataflow != "ecoflow" and layer.stride > 1 and op != "forward":
-        # Naive dataflows stage the zero-padded tensors in the buffer.
+    if dataflow != "ecoflow" and sched > useful:
+        # Naive dataflows stage the zero-padded tensors (stride-dilated
+        # error maps / K_eff-extent filters) in the buffer.
         pad_ratio = sched / useful
         gbuf *= math.sqrt(pad_ratio)
     # DRAM: unique tensor traffic -- identical across dataflows (paper:
@@ -265,6 +293,14 @@ TABLE7_GAN_LAYERS = [
     ConvLayer("pix2pix-gen-TCONV4", 128, 130, 64, 4, 512, 2),
 ]
 
+# Atrous (dilated-forward) segmentation layers -- the workload class the
+# paper motivates in Sec. 1: DeepLab-style ASPP branches, stride 1 with
+# the 3x3 filter applied at rate D in {2, 4}.
+DILATED_LAYERS = [
+    ConvLayer("deeplab-ASPP-d2", 256, 33, 33, 3, 256, 1, dilation=2),
+    ConvLayer("deeplab-ASPP-d4", 256, 33, 33, 3, 256, 1, dilation=4),
+]
+
 # End-to-end model composition: fraction of training time spent in conv
 # layers with stride>1 or stride-replaceable pooling (profiled breakdown,
 # paper Sec. 6.1 methodology: Amdahl over per-layer GPU/CPU profiles).
@@ -288,7 +324,7 @@ GAN_FRACTIONS = {
 
 
 def layer_by_name(name: str) -> ConvLayer:
-    for l in TABLE5_LAYERS + OPT_LAYERS + TABLE7_GAN_LAYERS:
+    for l in TABLE5_LAYERS + OPT_LAYERS + TABLE7_GAN_LAYERS + DILATED_LAYERS:
         if l.name == name:
             return l
     raise KeyError(name)

@@ -22,6 +22,14 @@ On TPU the algebraic equivalent is *phase decomposition*:
   (Cin x B*O*O) @ (B*O*O x Cout) matmul.  The dilated (zero-inserted) error
   tensor is never materialized.
 
+  Dilated FORWARD conv (atrous rate D, segmentation workloads):
+      y[i,j] = sum_{a,b} x[i*S + a*D - P, j*S + b*D - P] * W[a,b]
+  i.e. one stride-strided gather of x per *useful* filter tap, contracted
+  with the undilated tap as a (B*O*O x Cin) @ (Cin x Cout) matmul.  The
+  D-dilated filter (K_eff = D*(K-1)+1 extent, mostly zeros) is never
+  materialized; its adjoints (input/filter gradients) are the per-tap
+  scatter/gather duals below.
+
 Layouts: NHWC activations, HWIO filters (forward filter maps Cin->Cout).
 All functions are jit-compatible with static stride/shape arguments.
 """
@@ -43,12 +51,18 @@ DN = ("NHWC", "HWIO", "NHWC")
 
 
 def direct_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
-                *, preferred_dtype=jnp.float32) -> jax.Array:
-    """Plain direct (forward) convolution, NHWC x HWIO -> NHWC."""
+                *, dilation=1, preferred_dtype=jnp.float32) -> jax.Array:
+    """Plain direct (forward) convolution, NHWC x HWIO -> NHWC.
+
+    `dilation` is the forward filter (rhs) dilation -- XLA's own dilated
+    conv, the ground truth the zero-free dataflows are checked against.
+    """
     sh, sw = _pair(stride)
     ph, pw = _pair(padding)
+    dh, dw = _pair(dilation)
     return lax.conv_general_dilated(
         x, w, window_strides=(sh, sw), padding=[(ph, ph), (pw, pw)],
+        rhs_dilation=(dh, dw),
         dimension_numbers=DN, preferred_element_type=preferred_dtype,
     ).astype(x.dtype)
 
@@ -86,14 +100,16 @@ def transposed_conv_input_size(out_size: int, k: int, stride: int,
     return spec.input_size((out_size, out_size))[0]
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out"))
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out",
+                                             "dilation"))
 def transposed_conv_zero_free(dy: jax.Array, w: jax.Array, *, stride,
-                              padding=0, n_out: tuple[int, int] | None = None
-                              ) -> jax.Array:
+                              padding=0, n_out: tuple[int, int] | None = None,
+                              dilation=1) -> jax.Array:
     """Zero-free transposed convolution (EcoFlow dataflow, dense form).
 
     Computes the gradient w.r.t. the input of `direct_conv(x, w, stride,
-    padding)`, equivalently a transposed conv / deconvolution upsampling `dy`.
+    padding, dilation)`, equivalently a transposed conv / deconvolution
+    upsampling `dy`.
 
     Args:
       dy:  (B, Oh, Ow, Cout) error / generator input.
@@ -101,16 +117,26 @@ def transposed_conv_zero_free(dy: jax.Array, w: jax.Array, *, stride,
       stride: forward stride S (upsampling factor).
       padding: forward padding P.
       n_out: (Nh, Nw) output (= forward input) spatial size.  Defaults to the
-        exact-fit size S*(O-1)+K-2P.
+        exact-fit size S*(O-1)+K_eff-2P.
+      dilation: forward filter dilation D.  At D == 1 the stride-phase
+        decomposition below runs; at D > 1 the adjoint is computed by
+        per-tap strided scatter-adds (`_dilated_transposed_zero_free`) --
+        no dilation zero of either kind is ever materialized.
     Returns: (B, Nh, Nw, Cin).
     """
     sh, sw = _pair(stride)
     ph, pw = _pair(padding)
+    dh, dw = _pair(dilation)
     B, Oh, Ow, Cout = dy.shape
     Kh, Kw, Cin, _ = w.shape
     if n_out is None:
-        n_out = (transposed_conv_input_size(Oh, Kh, sh, ph),
-                 transposed_conv_input_size(Ow, Kw, sw, pw))
+        spec = ConvSpec.make(stride=(sh, sw), padding=(ph, pw),
+                             filter_shape=(Kh, Kw), dilation=(dh, dw))
+        n_out = spec.input_size((Oh, Ow))
+    if (dh, dw) != (1, 1):
+        return _dilated_transposed_zero_free(
+            dy, w, stride=(sh, sw), padding=(ph, pw), dilation=(dh, dw),
+            n_out=tuple(n_out))
     Nh, Nw = n_out
     # Full (pre-padding-slice) output size.
     Fh, Fw = sh * (Oh - 1) + Kh, sw * (Ow - 1) + Kw
@@ -143,20 +169,122 @@ def transposed_conv_zero_free(dy: jax.Array, w: jax.Array, *, stride,
 
 
 # ---------------------------------------------------------------------------
+# Zero-free dilated FORWARD convolution (atrous workloads) and its adjoint
+# ---------------------------------------------------------------------------
+
+def _tap_slice(xp: jax.Array, kx: int, ky: int, *, stride, dilation,
+               out_size) -> jax.Array:
+    """Host-side per-tap strided gather (the XLA dual of the in-kernel
+    `kernels.tap_gather.gather_tap`): x[b, i*S + kx*D, j*S + ky*D, c] for
+    i < Oh, j < Ow out of a padded NHWC input."""
+    sh, sw = stride
+    dh, dw = dilation
+    oh, ow = out_size
+    B, _, _, C = xp.shape
+    return lax.slice(xp, (0, kx * dh, ky * dw, 0),
+                     (B, kx * dh + (oh - 1) * sh + 1,
+                      ky * dw + (ow - 1) * sw + 1, C), (1, sh, sw, 1))
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "dilation"))
+def dilated_forward_zero_free(x: jax.Array, w: jax.Array, *, stride=1,
+                              padding=0, dilation=2) -> jax.Array:
+    """Zero-free dilated (atrous) forward convolution (EcoFlow dataflow).
+
+        y[b, i, j] = sum_{a,b'} x[b, i*S + a*D - P, j*S + b'*D - P] * w[a, b']
+
+    The naive lowering materializes the filter at its effective receptive
+    field K_eff = D*(K-1)+1, with (K_eff^2 - K^2) inserted zeros scheduled
+    as real MACs.  Here each of the K^2 *useful* taps instead gathers one
+    stride-strided slice of the (once-padded) input and contracts it with
+    the undilated filter tap as a (B*O*O x Cin) @ (Cin x Cout) matmul --
+    the dilated filter is never materialized.
+
+    Args:
+      x:  (B, Nh, Nw, Cin) input.
+      w:  (Kh, Kw, Cin, Cout) undilated filter.
+      stride: output stride S.
+      padding: input padding P.
+      dilation: filter dilation D (tap spacing).
+    Returns: (B, Oh, Ow, Cout) with O = floor((N + 2P - K_eff)/S) + 1.
+    """
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    dh, dw = _pair(dilation)
+    B, Nh, Nw, Cin = x.shape
+    Kh, Kw, _, Cout = w.shape
+    spec = ConvSpec.make(stride=(sh, sw), padding=(ph, pw),
+                         filter_shape=(Kh, Kw), dilation=(dh, dw))
+    Oh, Ow = spec.out_size((Nh, Nw))
+    assert Oh >= 1 and Ow >= 1, (
+        f"input {(Nh, Nw)} too small for effective filter "
+        f"{spec.dilated_filter_shape} at padding {(ph, pw)}")
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    w32 = w.astype(jnp.float32)
+    acc = jnp.zeros((B, Oh, Ow, Cout), jnp.float32)
+    for kx in range(Kh):
+        for ky in range(Kw):
+            # One zero-free strided gather per useful tap.
+            xs = _tap_slice(xp, kx, ky, stride=(sh, sw),
+                            dilation=(dh, dw), out_size=(Oh, Ow))
+            acc += jnp.einsum("bijc,cd->bijd", xs.astype(jnp.float32),
+                              w32[kx, ky],
+                              preferred_element_type=jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def _dilated_transposed_zero_free(dy: jax.Array, w: jax.Array, *, stride,
+                                  padding, dilation,
+                                  n_out: tuple[int, int]) -> jax.Array:
+    """Input gradient of the dilated forward conv: per-tap strided
+    scatter-add (the adjoint of the per-tap gather above).
+
+        dx[b, o*S + k*D - P] += dy[b, o] @ W[k]^T
+
+    Each tap contributes one (B*O*O x Cout) @ (Cout x Cin) matmul written
+    at offset k*D with stride S; neither the stride-upsampled error nor
+    the dilated filter is materialized."""
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    dh, dw = _pair(dilation)
+    B, Oh, Ow, Cout = dy.shape
+    Kh, Kw, Cin, _ = w.shape
+    Nh, Nw = n_out
+    Fh = sh * (Oh - 1) + dh * (Kh - 1) + 1   # full (pre-slice) extent
+    Fw = sw * (Ow - 1) + dw * (Kw - 1) + 1
+    dy32 = dy.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    dx_full = jnp.zeros((B, Fh, Fw, Cin), jnp.float32)
+    for kx in range(Kh):
+        for ky in range(Kw):
+            contrib = jnp.einsum("bijo,co->bijc", dy32, w32[kx, ky],
+                                 preferred_element_type=jnp.float32)
+            dx_full = dx_full.at[
+                :, kx * dh:kx * dh + (Oh - 1) * sh + 1:sh,
+                ky * dw:ky * dw + (Ow - 1) * sw + 1:sw, :].add(contrib)
+    # Non-exact-fit inputs (forward ignored tail rows/cols): zero-pad tail.
+    eh = max(0, ph + Nh - Fh)
+    ew = max(0, pw + Nw - Fw)
+    if eh or ew:
+        dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
+    return dx_full[:, ph:ph + Nh, pw:pw + Nw, :].astype(dy.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Zero-free dilated convolution (filter gradients)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "k"))
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "k",
+                                             "dilation"))
 def dilated_conv_filter_grad_zero_free(x: jax.Array, dy: jax.Array, *,
                                        stride, padding=0,
-                                       k: tuple[int, int] | None = None
-                                       ) -> jax.Array:
+                                       k: tuple[int, int] | None = None,
+                                       dilation=1) -> jax.Array:
     """Zero-free dilated convolution computing dW (EcoFlow dataflow).
 
-    Gradient w.r.t. the HWIO filter of `direct_conv(x, w, stride, padding)`:
-    for each filter tap (kx, ky), a strided slice of x is contracted with dy.
-    Equals `conv(x, dy_dilated_by_S)` but never materializes the dilation
-    zeros.
+    Gradient w.r.t. the HWIO filter of `direct_conv(x, w, stride, padding,
+    dilation)`: for each filter tap (kx, ky), a strided slice of x (at tap
+    offset kx*D, ky*D) is contracted with dy.  Equals
+    `conv(x, dy_dilated_by_S)` but never materializes the dilation zeros.
 
     Args:
       x:  (B, Nh, Nw, Cin) forward input.
@@ -164,10 +292,12 @@ def dilated_conv_filter_grad_zero_free(x: jax.Array, dy: jax.Array, *,
       stride: forward stride S (== dilation rate of the gradient conv).
       padding: forward padding P.
       k: (Kh, Kw) filter spatial size.
+      dilation: forward filter dilation D (tap spacing of the gathers).
     Returns: (Kh, Kw, Cin, Cout).
     """
     sh, sw = _pair(stride)
     ph, pw = _pair(padding)
+    dh, dw = _pair(dilation)
     B, Nh, Nw, Cin = x.shape
     _, Oh, Ow, Cout = dy.shape
     assert k is not None, "filter size k=(Kh,Kw) is required"
@@ -177,10 +307,9 @@ def dilated_conv_filter_grad_zero_free(x: jax.Array, dy: jax.Array, *,
     taps = []
     for kx in range(Kh):
         for ky in range(Kw):
-            # x[b, i*S+kx, j*S+ky, ci] for i<Oh, j<Ow -- a zero-free gather.
-            xs = lax.slice(xp, (0, kx, ky, 0),
-                           (B, kx + (Oh - 1) * sh + 1, ky + (Ow - 1) * sw + 1,
-                            Cin), (1, sh, sw, 1))
+            # One zero-free strided gather per useful tap.
+            xs = _tap_slice(xp, kx, ky, stride=(sh, sw),
+                            dilation=(dh, dw), out_size=(Oh, Ow))
             # (Cin, Cout) matmul with contraction over B*Oh*Ow.
             taps.append(jnp.einsum("bijc,bijd->cd", xs.astype(jnp.float32),
                                    dy32, preferred_element_type=jnp.float32))

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.ecoflow import DN, _pair
+from repro.core.ecoflow import direct_conv as ecoflow_direct_conv
 
 
 def dilate_insert_zeros(x: jax.Array, stride) -> jax.Array:
@@ -29,6 +30,36 @@ def dilate_insert_zeros(x: jax.Array, stride) -> jax.Array:
     B, H, W, C = x.shape
     out = jnp.zeros((B, sh * (H - 1) + 1, sw * (W - 1) + 1, C), x.dtype)
     return out.at[:, ::sh, ::sw, :].set(x)
+
+
+def dilate_filter_insert_zeros(w: jax.Array, dilation) -> jax.Array:
+    """Materialize an HWIO filter at its effective receptive field: insert
+    (D-1) zeros between taps, yielding (D*(K-1)+1, ...) spatial extent."""
+    dh, dw = _pair(dilation)
+    if dh == 1 and dw == 1:
+        return w
+    Kh, Kw, Ci, Co = w.shape
+    out = jnp.zeros((dh * (Kh - 1) + 1, dw * (Kw - 1) + 1, Ci, Co), w.dtype)
+    return out.at[::dh, ::dw].set(w)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "dilation"))
+def dilated_forward_naive(x: jax.Array, w: jax.Array, *, stride=1, padding=0,
+                          dilation=2) -> jax.Array:
+    """Dilated (atrous) forward conv via an explicitly materialized dilated
+    filter + plain direct conv -- what a CNN-inference accelerator does when
+    handed an atrous layer: every inserted filter zero is a scheduled MAC."""
+    w_dil = dilate_filter_insert_zeros(w, dilation)
+    return ecoflow_direct_conv(x, w_dil, stride, padding)
+
+
+def dilated_forward_zero_mac_fraction(k: int, dilation: int) -> float:
+    """Fraction of MACs that touch an inserted filter zero in the naive
+    dilated forward conv: every K_eff x K_eff window position spends
+    K_eff^2 MACs of which only K^2 touch real taps (exact -- filter zeros
+    are zeros at every window position)."""
+    k_eff = dilation * (k - 1) + 1
+    return 1.0 - (k * k) / (k_eff * k_eff)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out"))

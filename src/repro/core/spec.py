@@ -1,10 +1,10 @@
 """ConvSpec: normalized convolution geometry + the conv backend registry.
 
-Every convolution in the repo (forward, zero-free input-gradient /
-transposed, zero-free filter-gradient / dilated) is described by one
-`ConvSpec` -- stride/padding/filter/dilation pairs plus the derived phase
-bookkeeping the EcoFlow decomposition needs (sub-filter shapes, full/output
-sizes).  This absorbs the `_pair` / `transposed_conv_input_size` helpers
+Every convolution in the repo (forward -- plain or dilated/atrous,
+zero-free input-gradient / transposed, zero-free filter-gradient /
+dilated) is described by one `ConvSpec` -- stride/padding/filter/dilation
+pairs plus the derived phase bookkeeping the EcoFlow decomposition needs
+(sub-filter shapes, effective receptive field, full/output sizes).  This absorbs the `_pair` / `transposed_conv_input_size` helpers
 previously duplicated across `core/ecoflow.py` and `kernels/ops.py`.
 
 Backends implement the three ops behind a uniform interface and register
@@ -63,35 +63,49 @@ class ConvSpec:
     def make(cls, *, stride=1, padding=0, filter_shape=1,
              dilation=1) -> "ConvSpec":
         dilation = _pair(dilation)
-        if dilation != (1, 1):
-            raise NotImplementedError(
-                "forward filter dilation is reserved geometry: no backend "
-                "implements it yet")
+        if min(dilation) < 1:
+            raise ValueError(f"dilation must be >= 1, got {dilation}")
         return cls(_pair(stride), _pair(padding), _pair(filter_shape),
                    dilation)
 
     # -- forward geometry ---------------------------------------------------
 
+    @property
+    def dilated_filter_shape(self) -> tuple[int, int]:
+        """Effective receptive field K_eff = D*(K-1) + 1 per axis: the
+        spatial extent of the filter once its taps are spread D apart.
+        Equals `filter_shape` at dilation 1."""
+        return tuple(self.dilation[i] * (self.filter_shape[i] - 1) + 1
+                     for i in range(2))
+
     def out_size(self, in_size: Sequence[int]) -> tuple[int, int]:
-        """Forward output spatial size O = floor((N + 2P - K)/S) + 1."""
+        """Forward output spatial size O = floor((N + 2P - K_eff)/S) + 1."""
         n = _pair(in_size)
-        return tuple((n[i] + 2 * self.padding[i] - self.filter_shape[i])
+        ke = self.dilated_filter_shape
+        return tuple((n[i] + 2 * self.padding[i] - ke[i])
                      // self.stride[i] + 1 for i in range(2))
 
     def input_size(self, out_size: Sequence[int]) -> tuple[int, int]:
-        """Exact-fit forward input size N = S*(O-1) + K - 2P (the default
-        `n_out` of the transposed conv)."""
+        """Exact-fit forward input size N = S*(O-1) + K_eff - 2P (the
+        default `n_out` of the transposed conv)."""
         o = _pair(out_size)
-        return tuple(self.stride[i] * (o[i] - 1) + self.filter_shape[i]
+        ke = self.dilated_filter_shape
+        return tuple(self.stride[i] * (o[i] - 1) + ke[i]
                      - 2 * self.padding[i] for i in range(2))
 
     def full_size(self, out_size: Sequence[int]) -> tuple[int, int]:
-        """Pre-padding-slice transposed-conv output size F = S*(O-1) + K."""
+        """Pre-padding-slice transposed-conv output size F = S*(O-1) +
+        K_eff."""
         o = _pair(out_size)
-        return tuple(self.stride[i] * (o[i] - 1) + self.filter_shape[i]
+        ke = self.dilated_filter_shape
+        return tuple(self.stride[i] * (o[i] - 1) + ke[i]
                      for i in range(2))
 
     # -- phase (EcoFlow) bookkeeping ----------------------------------------
+    # The stride-phase decomposition below describes the transposed conv of
+    # an UNDILATED forward conv (dilation 1); the dilated-forward dataflow
+    # enumerates filter taps directly (see `ecoflow.dilated_forward_zero_free`
+    # and DESIGN.md Sec. 2.4) and does not consult these properties.
 
     @property
     def n_phases(self) -> int:
@@ -135,6 +149,9 @@ class ConvBackend:
     forward(x, w, spec)                -> y     (B,N,N,Cin)x(K,K,Cin,Cout)
     input_grad(dy, w, spec, n_out)     -> dx    zero-free transposed conv
     filter_grad(x, dy, spec)           -> dw    zero-free dilated conv
+
+    All three honor `spec.dilation` (forward filter dilation): the forward
+    op is then a dilated/atrous conv and the gradients are its adjoints.
     """
     name: str
     forward: Callable
@@ -193,12 +210,14 @@ def _ensure_default_backends() -> None:
 
     # -- reference: jax's own conv gradients (materializes zeros) ----------
     def _ref_forward(x, w, spec: ConvSpec):
-        return ecoflow.direct_conv(x, w, spec.stride, spec.padding)
+        return ecoflow.direct_conv(x, w, spec.stride, spec.padding,
+                                   dilation=spec.dilation)
 
     def _ref_input_grad(dy, w, spec: ConvSpec, n_out):
         nh, nw = _pair(n_out)
         x_shape = (dy.shape[0], nh, nw, w.shape[2])
-        f = lambda x_: ecoflow.direct_conv(x_, w, spec.stride, spec.padding)
+        f = lambda x_: ecoflow.direct_conv(x_, w, spec.stride, spec.padding,
+                                           dilation=spec.dilation)
         import jax.numpy as jnp
         _, vjp = jax.vjp(f, jnp.zeros(x_shape, dy.dtype))
         return vjp(dy)[0]
@@ -206,7 +225,8 @@ def _ensure_default_backends() -> None:
     def _ref_filter_grad(x, dy, spec: ConvSpec):
         kh, kw = spec.filter_shape
         w_shape = (kh, kw, x.shape[3], dy.shape[3])
-        f = lambda w_: ecoflow.direct_conv(x, w_, spec.stride, spec.padding)
+        f = lambda w_: ecoflow.direct_conv(x, w_, spec.stride, spec.padding,
+                                           dilation=spec.dilation)
         import jax.numpy as jnp
         _, vjp = jax.vjp(f, jnp.zeros(w_shape, x.dtype))
         return vjp(dy)[0]
@@ -214,33 +234,77 @@ def _ensure_default_backends() -> None:
     register_backend(ConvBackend("reference", _ref_forward,
                                  _ref_input_grad, _ref_filter_grad))
 
-    # -- xla_zero_free: EcoFlow phase decomposition in dense XLA -----------
+    # -- xla_zero_free: EcoFlow phase/tap decomposition in dense XLA -------
+    def _xla_forward(x, w, spec: ConvSpec):
+        if spec.dilation == (1, 1):
+            return _ref_forward(x, w, spec)
+        return ecoflow.dilated_forward_zero_free(
+            x, w, stride=spec.stride, padding=spec.padding,
+            dilation=spec.dilation)
+
     def _xla_input_grad(dy, w, spec: ConvSpec, n_out):
         return ecoflow.transposed_conv_zero_free(
             dy, w, stride=spec.stride, padding=spec.padding,
-            n_out=_pair(n_out))
+            n_out=_pair(n_out), dilation=spec.dilation)
 
     def _xla_filter_grad(x, dy, spec: ConvSpec):
         return ecoflow.dilated_conv_filter_grad_zero_free(
             x, dy, stride=spec.stride, padding=spec.padding,
-            k=spec.filter_shape)
+            k=spec.filter_shape, dilation=spec.dilation)
 
-    register_backend(ConvBackend("xla_zero_free", _ref_forward,
+    register_backend(ConvBackend("xla_zero_free", _xla_forward,
                                  _xla_input_grad, _xla_filter_grad))
 
     # -- pallas: fused single-launch kernels -------------------------------
+    def _pl_forward(x, w, spec: ConvSpec):
+        if spec.dilation == (1, 1):
+            return _ref_forward(x, w, spec)
+        from repro.kernels import ops as kops
+        return kops.dconv_forward(x, w, stride=spec.stride,
+                                  padding=spec.padding,
+                                  dilation=spec.dilation)
+
     def _pl_input_grad(dy, w, spec: ConvSpec, n_out):
         from repro.kernels import ops as kops
-        return kops.tconv_phase(dy, w, stride=spec.stride,
-                                padding=spec.padding, n_out=_pair(n_out))
+        if spec.dilation == (1, 1):
+            return kops.tconv_phase(dy, w, stride=spec.stride,
+                                    padding=spec.padding, n_out=_pair(n_out))
+        if spec.stride == (1, 1):
+            # Stride-1 dilated conv is self-adjoint up to a 180deg filter
+            # rotation: dx = dilated_conv(dy, rot(W)) with padding
+            # D*(K-1) - P, so the fused forward kernel serves as its own
+            # input-gradient kernel (see DESIGN.md Sec. 2.4).  Negative
+            # adjoint padding (P > D*(K-1)) or an n_out that differs from
+            # the stride-1 exact-fit size (the adjoint conv's natural
+            # output) falls back to the XLA path, which crops/pads to any
+            # requested n_out.
+            import jax.numpy as jnp
+            kh, kw = spec.filter_shape
+            adj = (spec.dilation[0] * (kh - 1) - spec.padding[0],
+                   spec.dilation[1] * (kw - 1) - spec.padding[1])
+            exact = (dy.shape[1] + adj[0] * 2
+                     - spec.dilation[0] * (kh - 1),
+                     dy.shape[2] + adj[1] * 2
+                     - spec.dilation[1] * (kw - 1))
+            if min(adj) >= 0 and _pair(n_out) == exact:
+                w_rot = jnp.swapaxes(jnp.flip(w, axis=(0, 1)), 2, 3)
+                return kops.dconv_forward(dy, w_rot, stride=(1, 1),
+                                          padding=adj,
+                                          dilation=spec.dilation)
+        # General strided+dilated transposed conv: per-tap strided
+        # scatter-add in dense XLA (still zero-free).
+        return ecoflow.transposed_conv_zero_free(
+            dy, w, stride=spec.stride, padding=spec.padding,
+            n_out=_pair(n_out), dilation=spec.dilation)
 
     def _pl_filter_grad(x, dy, spec: ConvSpec):
         from repro.kernels import ops as kops
         return kops.dconv_filter_grad(x, dy, stride=spec.stride,
                                       padding=spec.padding,
-                                      k=spec.filter_shape)
+                                      k=spec.filter_shape,
+                                      dilation=spec.dilation)
 
-    register_backend(ConvBackend("pallas", _ref_forward,
+    register_backend(ConvBackend("pallas", _pl_forward,
                                  _pl_input_grad, _pl_filter_grad))
 
     # Only mark done once every default registered -- a failure above

@@ -1,24 +1,29 @@
 """Pallas TPU kernel: zero-free dilated-convolution filter gradient.
 
 EcoFlow's filter-gradient dataflow (paper Sec. 4.2): one PE per filter
-gradient element, each accumulating  sum_{b,i,j} x[b,iS+kx,jS+ky] * dy[b,i,j]
-locally, with the ifmap delivered via per-tap multicast groups.
+gradient element, each accumulating
+sum_{b,i,j} x[b, iS+kx*D, jS+ky*D] * dy[b,i,j] locally, with the ifmap
+delivered via per-tap multicast groups (D is the forward filter dilation,
+1 for plain convs).
 
 TPU mapping: the per-tap multicast group is realized INSIDE the kernel --
 the padded input block is VMEM-resident and each grid step dynamic-slices
-its tap window (kx, ky) out of it and subsamples by the stride, so the
+its tap window (kx*D, ky*D) out of it and subsamples by the stride, so the
 K_h*K_w-replicated `x_taps` gather of the old formulation is never
 materialized (peak memory: one padded input, not K^2 copies).  Each
 PE-column accumulation becomes one (Cin x B*O*O) @ (B*O*O x Cout) MXU
-matmul.  The batch dimension is the innermost (sequential) grid axis so
-partial products accumulate into the fp32 output tile across grid steps --
-the Pallas equivalent of the paper's local psum register.
+matmul.
 
-BlockSpec tiling: grid (T, Cin_tiles, Cout_tiles, B); per step the kernel
-holds x_pad (1,Hp,Wp,Ci_t), dy (1,Oh,Ow,Co_t) and out (1,Ci_t,Co_t) in
-VMEM.  The x block's index map depends only on (b, ci), so it is NOT
-re-fetched across the tap/Cout grid axes.  Ci_t = Co_t = 128 aligns the
-matmul to the MXU.  See DESIGN.md Sec. 2.
+BlockSpec tiling: grid (B, Cin_tiles, T, Cout_tiles) with batch the
+OUTERMOST axis; per step the kernel holds x_pad (1,Hp,Wp,Ci_t),
+dy (1,Oh,Ow,Co_t) and out (1,1,Ci_t,Co_t) in VMEM.  The x block's index
+map depends only on (b, ci) -- both outer axes -- so it is NOT re-fetched
+across the tap/Cout grid axes (an earlier revision iterated batch
+*innermost* to accumulate in-kernel, which re-fetched the padded input
+every grid step for B > 1).  Each step instead writes its (B, T, Ci, Co)
+partial and the wrapper reduces over B host-side -- one cheap fp32 sum of
+K^2*Cin*Cout-sized slabs.  Ci_t = Co_t = 128 aligns the matmul to the
+MXU.  See DESIGN.md Sec. 2.
 """
 from __future__ import annotations
 
@@ -28,56 +33,46 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.spec import _pair
+from repro.kernels.tap_gather import gather_tap, pad_to_tap_windows
 
-def _fg_kernel(x_ref, dy_ref, out_ref, *, sh: int, sw: int,
-               oh: int, ow: int, kw: int):
-    t = pl.program_id(0)
-    b = pl.program_id(3)
+
+def _fg_kernel(x_ref, dy_ref, out_ref, *, sh: int, sw: int, dh: int,
+               dw: int, oh: int, ow: int, kw: int):
+    t = pl.program_id(2)
     kx, ky = t // kw, t % kw
     ci_t = x_ref.shape[-1]
-    # In-kernel tap gather: dynamic tap offset, then static-stride
-    # subsample -- x[b, kx + i*S_h, ky + j*S_w, :] for i < Oh, j < Ow.
-    win = jax.lax.dynamic_slice(
-        x_ref[0], (kx, ky, 0),
-        ((oh - 1) * sh + 1, (ow - 1) * sw + 1, ci_t))
-    tap = win[::sh, ::sw]                            # (oh, ow, ci_t)
+    tap = gather_tap(x_ref[0], kx, ky, sh=sh, sw=sw, dh=dh, dw=dw,
+                     oh=oh, ow=ow)                   # (oh, ow, ci_t)
     lhs = tap.reshape(oh * ow, ci_t).astype(jnp.float32)
     rhs = dy_ref[0].reshape(oh * ow, dy_ref.shape[-1]).astype(jnp.float32)
-    prod = jax.lax.dot_general(lhs, rhs, (((0,), (0,)), ((), ())),
-                               preferred_element_type=jnp.float32)
-
-    @pl.when(b == 0)
-    def _init():
-        out_ref[0] = prod.astype(out_ref.dtype)
-
-    @pl.when(b > 0)
-    def _acc():
-        out_ref[0] += prod.astype(out_ref.dtype)
+    out_ref[0, 0] = jax.lax.dot_general(
+        lhs, rhs, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "k",
-                                             "tile", "interpret"))
+                                             "dilation", "tile",
+                                             "interpret"))
 def dconv_filter_grad_pallas(x: jax.Array, dy: jax.Array, *, stride,
-                             padding, k, tile: int = 128,
+                             padding, k, dilation=(1, 1), tile: int = 128,
                              interpret: bool = True) -> jax.Array:
-    """dW (Kh,Kw,Cin,Cout) for direct_conv(x, w, stride, padding).
+    """dW (Kh,Kw,Cin,Cout) for direct_conv(x, w, stride, padding, dilation).
 
     SINGLE `pallas_call`; the input is padded once and tap windows are
     sliced inside the kernel (no K^2 input replication on the host side).
+    Per-batch partials are reduced host-side so the padded-input block
+    stays VMEM-resident across the tap/Cout grid axes.
     """
     sh, sw = stride
     ph, pw = padding
+    dh, dw = _pair(dilation)
     Kh, Kw = k
     B, Nh, Nw, Cin = x.shape
     _, Oh, Ow, Cout = dy.shape
     xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
-    # Tap windows must fit for every (kx, ky); non-exact-fit inputs already
-    # satisfy Hp >= (Oh-1)*S_h + Kh, but guard with an explicit tail pad.
-    need_h = (Oh - 1) * sh + Kh
-    need_w = (Ow - 1) * sw + Kw
-    if xp.shape[1] < need_h or xp.shape[2] < need_w:
-        xp = jnp.pad(xp, ((0, 0), (0, max(0, need_h - xp.shape[1])),
-                          (0, max(0, need_w - xp.shape[2])), (0, 0)))
+    xp = pad_to_tap_windows(xp, stride=(sh, sw), dilation=(dh, dw),
+                            k=(Kh, Kw), out_size=(Oh, Ow))
     hp, wp = xp.shape[1], xp.shape[2]
     T = Kh * Kw
     ci_t, co_t = min(tile, Cin), min(tile, Cout)
@@ -86,21 +81,22 @@ def dconv_filter_grad_pallas(x: jax.Array, dy: jax.Array, *, stride,
         xp = jnp.pad(xp, ((0, 0),) * 3 + ((0, n_ci * ci_t - Cin),))
     if Cout % co_t:
         dy = jnp.pad(dy, ((0, 0),) * 3 + ((0, n_co * co_t - Cout),))
-    kern = functools.partial(_fg_kernel, sh=sh, sw=sw, oh=Oh, ow=Ow, kw=Kw)
+    kern = functools.partial(_fg_kernel, sh=sh, sw=sw, dh=dh, dw=dw,
+                             oh=Oh, ow=Ow, kw=Kw)
     out = pl.pallas_call(
         kern,
-        grid=(T, n_ci, n_co, B),
+        grid=(B, n_ci, T, n_co),
         in_specs=[
             pl.BlockSpec((1, hp, wp, ci_t),
-                         lambda t, ci, co, b: (b, 0, 0, ci)),
+                         lambda b, ci, t, co: (b, 0, 0, ci)),
             pl.BlockSpec((1, Oh, Ow, co_t),
-                         lambda t, ci, co, b: (b, 0, 0, co)),
+                         lambda b, ci, t, co: (b, 0, 0, co)),
         ],
-        out_specs=pl.BlockSpec((1, ci_t, co_t),
-                               lambda t, ci, co, b: (t, ci, co)),
-        out_shape=jax.ShapeDtypeStruct((T, n_ci * ci_t, n_co * co_t),
+        out_specs=pl.BlockSpec((1, 1, ci_t, co_t),
+                               lambda b, ci, t, co: (b, t, ci, co)),
+        out_shape=jax.ShapeDtypeStruct((B, T, n_ci * ci_t, n_co * co_t),
                                        jnp.float32),
         interpret=interpret,
     )(xp, dy)
-    dw = out[:, :Cin, :Cout].reshape(Kh, Kw, Cin, Cout)
-    return dw.astype(x.dtype)
+    dw_ = out.sum(axis=0)[:, :Cin, :Cout].reshape(Kh, Kw, Cin, Cout)
+    return dw_.astype(x.dtype)

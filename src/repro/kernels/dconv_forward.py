@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused zero-free dilated (atrous) forward convolution.
+
+EcoFlow's dilated-forward dataflow: the atrous filter is applied at tap
+spacing D without ever materializing its K_eff = D*(K-1)+1 effective
+extent -- the (K_eff^2 - K^2) inserted filter zeros that a naive lowering
+schedules as real MACs simply never exist.
+
+TPU mapping (the EcoFlow -> MXU translation, see DESIGN.md Sec. 2.4): the
+**dilation taps are the grid** -- ONE `pallas_call` with the useful-tap
+index t = kx*Kw + ky as its innermost (sequential) axis.  Each grid step
+realizes one per-tap multicast group inside the kernel: the once-padded
+input block is VMEM-resident, the step `dynamic_slice`s its tap window at
+offset (kx*D_h, ky*D_w), subsamples by the output stride, and contracts
+the gathered (Oh*Ow, Cin) slab with that tap's (Cin, Cout_t) weights on
+the MXU.  Partial products accumulate into the fp32 output tile across
+tap steps -- the Pallas equivalent of the paper's local psum register.
+
+BlockSpec tiling: grid (B, Cout_tiles, T) with T = Kh*Kw innermost; per
+step the kernel holds
+  x block   (1, Hp, Wp, Cin)     -- padded once; index map depends only on
+                                    b, so it is NOT re-fetched across the
+                                    (cout, tap) axes
+  w block   (1, Cin, Co_t)       -- this tap's weights
+  out block (1, Oh, Ow, Co_t)    -- fp32 accumulator, cast host-side
+in VMEM.  Co_t = 128 aligns the matmul to the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.spec import ConvSpec, _pair
+from repro.kernels.tap_gather import gather_tap, pad_to_tap_windows
+
+
+def _df_kernel(x_ref, w_ref, out_ref, *, sh: int, sw: int, dh: int, dw: int,
+               oh: int, ow: int, kw: int):
+    t = pl.program_id(2)
+    kx, ky = t // kw, t % kw
+    ci = x_ref.shape[-1]
+    tap = gather_tap(x_ref[0], kx, ky, sh=sh, sw=sw, dh=dh, dw=dw,
+                     oh=oh, ow=ow)                     # (oh, ow, ci)
+    lhs = tap.reshape(oh * ow, ci).astype(jnp.float32)
+    rhs = w_ref[0].astype(jnp.float32)                 # (ci, co_t)
+    prod = jax.lax.dot(lhs, rhs, preferred_element_type=jnp.float32)
+    prod = prod.reshape(oh, ow, out_ref.shape[-1])
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[0] = prod
+
+    @pl.when(t > 0)
+    def _acc():
+        out_ref[0] += prod
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "dilation",
+                                             "cout_tile", "interpret"))
+def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
+                         padding=(0, 0), dilation=(2, 2),
+                         cout_tile: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Zero-free dilated forward conv in a SINGLE `pallas_call`.
+
+    x: (B, Nh, Nw, Cin) input.
+    w: (Kh, Kw, Cin, Cout) undilated filter, applied at tap spacing D.
+    Returns (B, Oh, Ow, Cout) with O = floor((N + 2P - K_eff)/S) + 1.
+    """
+    sh, sw = _pair(stride)
+    ph, pw = _pair(padding)
+    dh, dw = _pair(dilation)
+    B, Nh, Nw, Cin = x.shape
+    Kh, Kw, _, Cout = w.shape
+    spec = ConvSpec.make(stride=(sh, sw), padding=(ph, pw),
+                         filter_shape=(Kh, Kw), dilation=(dh, dw))
+    Oh, Ow = spec.out_size((Nh, Nw))
+    assert Oh >= 1 and Ow >= 1, (
+        f"input {(Nh, Nw)} too small for effective filter "
+        f"{spec.dilated_filter_shape} at padding {(ph, pw)}")
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    xp = pad_to_tap_windows(xp, stride=(sh, sw), dilation=(dh, dw),
+                            k=(Kh, Kw), out_size=(Oh, Ow))
+    hp, wp = xp.shape[1], xp.shape[2]
+    T = Kh * Kw
+    co_t = min(cout_tile, Cout)
+    n_co = -(-Cout // co_t)
+    w_taps = w.reshape(T, Cin, Cout)
+    if Cout % co_t:
+        w_taps = jnp.pad(w_taps, ((0, 0), (0, 0), (0, n_co * co_t - Cout)))
+    kern = functools.partial(_df_kernel, sh=sh, sw=sw, dh=dh, dw=dw,
+                             oh=Oh, ow=Ow, kw=Kw)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, n_co, T),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, Cin), lambda b, co, t: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Cin, co_t), lambda b, co, t: (t, 0, co)),
+        ],
+        out_specs=pl.BlockSpec((1, Oh, Ow, co_t),
+                               lambda b, co, t: (b, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((B, Oh, Ow, n_co * co_t),
+                                       jnp.float32),
+        interpret=interpret,
+    )(xp, w_taps)
+    return out[..., :Cout].astype(x.dtype)

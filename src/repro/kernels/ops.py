@@ -3,9 +3,11 @@
 `tconv_phase` is the fused zero-free transposed convolution -- ONE
 `pallas_call` computes all S*S stride phases (phase interleaving is a pure
 reshape/transpose); `dconv_filter_grad` is the zero-free filter gradient
-with in-kernel tap gathering (no K^2 input replication).  Both run the
-kernels in interpret mode on CPU (the container target) and compiled mode
-on real TPUs.  These are the `pallas` conv backend
+with in-kernel tap gathering (no K^2 input replication, dilation-aware
+tap offsets); `dconv_forward` is the fused zero-free dilated (atrous)
+forward conv with the dilation taps on the grid.  All run the kernels in
+interpret mode on CPU (the container target) and compiled mode on real
+TPUs.  These are the `pallas` conv backend
 (`repro.core.spec.resolve_backend("pallas")`).
 """
 from __future__ import annotations
@@ -16,6 +18,7 @@ import jax
 
 from repro.kernels.attention import flash_attention_pallas
 from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
+from repro.kernels.dconv_forward import dconv_forward_pallas
 from repro.kernels.tconv_phase import tconv_fused_pallas
 
 _INTERPRET = jax.default_backend() != "tpu"
@@ -40,10 +43,27 @@ def tconv_phase(dy: jax.Array, w: jax.Array, *, stride, padding,
                               interpret=_INTERPRET)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "k"))
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "k",
+                                             "dilation"))
 def dconv_filter_grad(x: jax.Array, dy: jax.Array, *, stride, padding,
-                      k) -> jax.Array:
+                      k, dilation=(1, 1)) -> jax.Array:
     """Zero-free filter gradient via the in-kernel tap-gather matmul."""
     return dconv_filter_grad_pallas(x, dy, stride=tuple(stride),
                                     padding=tuple(padding), k=tuple(k),
+                                    dilation=tuple(dilation),
                                     interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding",
+                                             "dilation"))
+def dconv_forward(x: jax.Array, w: jax.Array, *, stride, padding,
+                  dilation) -> jax.Array:
+    """Fused zero-free dilated (atrous) forward conv: one Pallas launch
+    with the dilation taps on the grid.
+
+    x (B,Nh,Nw,Cin), w (Kh,Kw,Cin,Cout) -> y (B,Oh,Ow,Cout).
+    """
+    return dconv_forward_pallas(x, w, stride=tuple(stride),
+                                padding=tuple(padding),
+                                dilation=tuple(dilation),
+                                interpret=_INTERPRET)

@@ -18,10 +18,18 @@ def tconv_phase_ref(dy, w, *, stride, padding, n_out):
         dy, w, stride=stride, padding=padding, n_out=tuple(n_out))
 
 
-def dconv_filter_grad_ref(x, dy, *, stride, padding, k):
+def dconv_filter_grad_ref(x, dy, *, stride, padding, k, dilation=(1, 1)):
     """Oracle for the zero-free filter-gradient kernel."""
     return ecoflow.dilated_conv_filter_grad_zero_free(
-        x, dy, stride=stride, padding=padding, k=tuple(k))
+        x, dy, stride=stride, padding=padding, k=tuple(k),
+        dilation=tuple(dilation))
+
+
+def dconv_forward_ref(x, w, *, stride, padding, dilation):
+    """Oracle for the fused dilated-forward kernel: XLA's own rhs-dilated
+    conv (materializes nothing either, but is the independent ground
+    truth)."""
+    return ecoflow.direct_conv(x, w, stride, padding, dilation=dilation)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, scale=None):

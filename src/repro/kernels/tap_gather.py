@@ -1,0 +1,50 @@
+"""Shared per-tap gather machinery for the dilated-tap Pallas kernels.
+
+`kernels/dconv_forward.py` (dilated forward) and
+`kernels/dconv_filtergrad.py` (filter gradient) realize the same EcoFlow
+primitive -- the per-tap multicast group: a window of the once-padded
+input at tap offset (kx*D_h, ky*D_w), subsampled by the output stride.
+Both the host-side window-fit guard and the in-kernel gather live here so
+a fix to the window math reaches every kernel (the B>1 re-fetch lesson:
+one-sided fixes to duplicated scaffolding go stale silently).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tap_window_extent(o: int, s: int, d: int, k: int) -> int:
+    """Padded-input extent needed so the tap window fits for every tap:
+    (O-1)*S + D*(K-1) + 1 per axis."""
+    return (o - 1) * s + d * (k - 1) + 1
+
+
+def pad_to_tap_windows(xp: jax.Array, *, stride, dilation, k,
+                       out_size) -> jax.Array:
+    """Tail-pad an NHWC padded input so every (kx*D, ky*D) tap window
+    fits.  The out_size floor already guarantees the fit for exact and
+    non-exact geometries; this guard makes the kernels robust to any
+    caller-supplied padding."""
+    sh, sw = stride
+    dh, dw = dilation
+    kh, kw = k
+    oh, ow = out_size
+    need_h = tap_window_extent(oh, sh, dh, kh)
+    need_w = tap_window_extent(ow, sw, dw, kw)
+    if xp.shape[1] < need_h or xp.shape[2] < need_w:
+        xp = jnp.pad(xp, ((0, 0), (0, max(0, need_h - xp.shape[1])),
+                          (0, max(0, need_w - xp.shape[2])), (0, 0)))
+    return xp
+
+
+def gather_tap(x_hwc: jax.Array, kx, ky, *, sh: int, sw: int, dh: int,
+               dw: int, oh: int, ow: int) -> jax.Array:
+    """In-kernel per-tap multicast group: dynamic tap offset (kx*D, ky*D)
+    into a VMEM-resident (H, W, C) block, then static-stride subsample --
+    x[i*S + kx*D, j*S + ky*D, :] for i < oh, j < ow.  (kx, ky) may be
+    traced (derived from a grid index)."""
+    win = jax.lax.dynamic_slice(
+        x_hwc, (kx * dh, ky * dw, 0),
+        ((oh - 1) * sh + 1, (ow - 1) * sw + 1, x_hwc.shape[-1]))
+    return win[::sh, ::sw]                           # (oh, ow, C)

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import ecoflow
 from repro.core.spec import ConvSpec, _pair
 
 
@@ -52,9 +53,12 @@ def pack_phase_filters(w: jax.Array, stride) -> jax.Array:
     w: (Kh, Kw, Cin, Cout) forward filter ->
     (S_h*S_w, KP, KQ, Cout, Cin) with KP = ceil(Kh/S_h), KQ = ceil(Kw/S_w).
 
-    Phase (p, q) holds W[a*S_h+p, b*S_w+q] zero-padded to (KP, KQ) taps,
-    then flipped 180deg (so each phase is a stride-1 *correlation* of dy)
-    and channel-transposed to map Cout -> Cin.  Only the
+    The rotation convention (180deg flip + Cout->Cin channel transpose)
+    comes from `ecoflow.phase_subfilters` -- the single source of truth
+    shared with the dense XLA backend; this function only adds the
+    uniform-shape packing: each already-flipped sub-filter is zero-padded
+    at the FRONT taps (front-pad-after-flip == tail-pad-before-flip, the
+    identity `tests/test_kernels.py` pins).  Only the
     min(S_h,K_h) * min(S_w,K_w) NON-empty phases are packed: phases beyond
     the filter extent (stride > K) are structural zeros of the upsampling
     -- the wrapper zero-fills their output rows host-side instead of
@@ -64,16 +68,15 @@ def pack_phase_filters(w: jax.Array, stride) -> jax.Array:
     dataflow eliminates, and buys a uniform single-launch grid.
     """
     sh, sw = _pair(stride)
-    Kh, Kw, Cin, Cout = w.shape
+    Kh, Kw, _, _ = w.shape
     KP, KQ = -(-Kh // sh), -(-Kw // sw)
+    subs = ecoflow.phase_subfilters(w, (sh, sw))
     phases = []
     for p in range(min(sh, Kh)):
         for q in range(min(sw, Kw)):
-            sub = w[p::sh, q::sw]                    # (kp, kq, Cin, Cout)
+            sub = subs[p][q]                         # (kp, kq, Cout, Cin)
             kp, kq = sub.shape[0], sub.shape[1]
-            sub = jnp.pad(sub, ((0, KP - kp), (0, KQ - kq), (0, 0), (0, 0)))
-            sub = jnp.flip(sub, axis=(0, 1))         # rotate 180deg
-            sub = jnp.swapaxes(sub, 2, 3)            # (KP, KQ, Cout, Cin)
+            sub = jnp.pad(sub, ((KP - kp, 0), (KQ - kq, 0), (0, 0), (0, 0)))
             phases.append(sub)
     return jnp.stack(phases)
 

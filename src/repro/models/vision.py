@@ -1,11 +1,19 @@
-"""ViT patchify frontend (InternVL's InternViT entry point).
+"""Vision modules built on the EcoFlow conv dispatch.
 
-A stride-14 convolution: during training its backward pass is *exactly*
-the paper's worst case (stride >> 1) -- with the naive dataflow ~99.5 % of
-input-gradient MACs multiply inserted zeros; `ecoflow_conv` eliminates all
-of them.  The dry-run `input_specs()` for internvl2-76b provides the
-*output* of this module (precomputed patch embeddings, per the
-assignment's stub rule); the module itself is implemented and tested here.
+* Patchify frontend (InternVL's InternViT entry point): a stride-14
+  convolution -- during training its backward pass is *exactly* the
+  paper's worst case (stride >> 1); with the naive dataflow ~99.5 % of
+  input-gradient MACs multiply inserted zeros and `ecoflow_conv`
+  eliminates all of them.  The dry-run `input_specs()` for internvl2-76b
+  provides the *output* of this module (precomputed patch embeddings, per
+  the assignment's stub rule); the module itself is implemented and
+  tested here.
+
+* Atrous segmentation head (ASPP-lite): the dilated-forward workload the
+  paper motivates in Sec. 1 -- parallel 3x3 convs at rates {1, 2, 4} with
+  same-padding, fused by a 1x1 conv into per-pixel class logits.  Every
+  branch routes through `ecoflow_dilated_conv`, so neither the forward
+  nor either gradient ever materializes the D-dilated filter.
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.conv import ecoflow_conv
+from repro.core.conv import ecoflow_conv, ecoflow_dilated_conv
 
 
 def patchify_init(rng, *, patch=14, in_ch=3, d_model=1024):
@@ -34,3 +42,44 @@ def patchify_apply(params, images, *, patch=14, backend=None):
     x = ecoflow_conv(images, params["proj"], patch, 0, backend)
     B, hp, wp, D = x.shape
     return x.reshape(B, hp * wp, D) + params["pos"]
+
+
+# ---------------------------------------------------------------------------
+# Atrous segmentation head (dilated-forward workload)
+# ---------------------------------------------------------------------------
+
+def atrous_head_init(rng, *, in_ch=3, width=16, n_classes=4,
+                     rates=(1, 2, 4)):
+    """ASPP-lite: one 3x3 branch per atrous rate + a 1x1 fuse conv."""
+    params = {}
+    scale = 1.0 / math.sqrt(9 * in_ch)
+    for i, r in enumerate(rates):
+        params[f"rate{r}"] = scale * jax.random.normal(
+            jax.random.fold_in(rng, i), (3, 3, in_ch, width), jnp.float32)
+    fuse_in = width * len(rates)
+    params["fuse"] = (1.0 / math.sqrt(fuse_in)) * jax.random.normal(
+        jax.random.fold_in(rng, 97), (1, 1, fuse_in, n_classes),
+        jnp.float32)
+    return params
+
+
+def atrous_head_apply(params, images, *, rates=(1, 2, 4), backend=None):
+    """images (B,H,W,C) -> per-pixel class logits (B,H,W,n_classes).
+
+    Each 3x3 branch runs at stride 1 with padding == rate (same-padding
+    for the D*(K-1)+1 = 2r+1 effective receptive field), so all branches
+    stay at full resolution and concatenate channel-wise before the 1x1
+    fuse.  `backend` selects the conv dispatch backend."""
+    feats = [jax.nn.relu(ecoflow_dilated_conv(
+        images, params[f"rate{r}"], 1, r, r, backend)) for r in rates]
+    h = jnp.concatenate(feats, axis=-1)
+    return ecoflow_conv(h, params["fuse"], 1, 0, backend)
+
+
+def atrous_seg_loss(params, images, labels, *, rates=(1, 2, 4),
+                    backend=None):
+    """Mean per-pixel cross entropy of the atrous head."""
+    logits = atrous_head_apply(params, images, rates=rates, backend=backend)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()

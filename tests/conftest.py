@@ -26,3 +26,47 @@ def assert_allclose(a, b, rtol=1e-4, atol=1e-4, err_msg=""):
     np.testing.assert_allclose(np.asarray(a, np.float64),
                                np.asarray(b, np.float64),
                                rtol=rtol, atol=atol, err_msg=err_msg)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr inspection helpers (shared by the structural-guarantee tests in
+# test_dispatch.py and test_dilated_parity.py -- one traversal, so a fix
+# for a new higher-order primitive reaches every suite)
+# ---------------------------------------------------------------------------
+
+def walk_eqns(jaxpr):
+    """Yield every eqn in a (closed) jaxpr, recursing into sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", None)  # ClosedJaxpr
+            if sub is not None:
+                yield from walk_eqns(sub)
+            elif hasattr(v, "eqns"):         # raw Jaxpr
+                yield from walk_eqns(v)
+
+
+def count_pallas_calls(fn, *args) -> int:
+    import jax
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return sum(1 for e in walk_eqns(jaxpr.jaxpr)
+               if e.primitive.name == "pallas_call")
+
+
+def pallas_grids(fn, *args):
+    """Grid tuples of every pallas_call in the traced jaxpr."""
+    import jax
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return [tuple(e.params["grid_mapping"].grid)
+            for e in walk_eqns(jaxpr.jaxpr)
+            if e.primitive.name == "pallas_call"]
+
+
+def max_intermediate_size(fn, *args) -> int:
+    """Largest array (elements) produced by any eqn in the traced jaxpr."""
+    import jax
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    sizes = [int(np.prod(v.aval.shape))
+             for e in walk_eqns(jaxpr.jaxpr) for v in e.outvars
+             if hasattr(v.aval, "shape")]
+    return max(sizes)

@@ -139,3 +139,55 @@ def test_padding_property_of_layers():
     for l in ds.TABLE5_LAYERS + ds.TABLE7_GAN_LAYERS:
         # ofmap geometry consistent: N_out = (N_in + 2P - K)//S + 1
         assert (l.n_in + 2 * l.padding - l.k) // l.stride + 1 == l.n_out
+
+
+# ---------------------------------------------------------------------------
+# dilated forward (atrous segmentation layers)
+# ---------------------------------------------------------------------------
+
+def test_dilated_forward_scheduled_macs():
+    """Naive dataflows sweep the materialized K_eff-extent filter; EcoFlow
+    schedules only the K^2 useful taps -- the MAC ratio is exactly the
+    naive path's zero density (K_eff/K)^2."""
+    from repro.core import naive
+    for l in ds.DILATED_LAYERS:
+        useful = ds.useful_macs(l, "dilated_forward")
+        for df in ("tpu", "rs"):
+            sched = ds.scheduled_macs(l, "dilated_forward", df)
+            assert sched == useful * l.k_eff ** 2 // l.k ** 2
+        assert ds.scheduled_macs(l, "dilated_forward", "ecoflow") == useful
+        assert ds.zero_mac_fraction(l, "dilated_forward") == \
+            pytest.approx(naive.dilated_forward_zero_mac_fraction(
+                l.k, l.dilation), abs=1e-12)
+
+
+def test_dilated_forward_speedup_grows_with_rate():
+    """Cycle-count speedup over the TPU dataflow grows with the atrous
+    rate (more filter zeros eliminated) and is >1 for every rate."""
+    sp = [ds.speedup(l, "dilated_forward", "ecoflow")
+          for l in ds.DILATED_LAYERS]                # d = 2, 4
+    assert all(s > 1.5 for s in sp), sp
+    assert sp == sorted(sp), sp
+
+
+def test_dilated_forward_dilation1_is_plain_forward():
+    """At dilation 1 the dilated-forward op degenerates to the plain
+    forward op for every dataflow: same scheduled MACs, same cycles."""
+    l = ds.layer_by_name("resnet50-CONV3")
+    assert l.dilation == 1 and l.k_eff == l.k
+    for df in ("tpu", "rs", "ecoflow"):
+        assert ds.scheduled_macs(l, "dilated_forward", df) == \
+            ds.scheduled_macs(l, "forward", df)
+    assert ds.zero_mac_fraction(l, "dilated_forward") == 0.0
+
+
+def test_dilated_forward_energy_model_covers_op():
+    """The energy breakdown schedules the dilated-forward op: naive
+    dataflows pay for staging the materialized filter, DRAM is
+    maintained."""
+    l = ds.DILATED_LAYERS[1]
+    e_tpu = ds.energy_breakdown_pj(l, "dilated_forward", "tpu")
+    e_eco = ds.energy_breakdown_pj(l, "dilated_forward", "ecoflow")
+    assert e_eco["SPAD"] < e_tpu["SPAD"]
+    assert e_eco["DRAM"] == e_tpu["DRAM"]
+    assert sum(e_eco.values()) < sum(e_tpu.values())

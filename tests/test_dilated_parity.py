@@ -1,0 +1,198 @@
+"""Property-based backend-parity grid for the dilated-forward dataflow.
+
+Hypothesis-driven (real install or tests/_hypothesis_shim.py fallback)
+sampling of (stride, dilation, K, padding, B, Cin, Cout, odd n) asserting
+forward + gradient parity of every backend against `reference` (= jax.grad
+of `lax.conv_general_dilated` with `rhs_dilation`), plus the structural
+guarantees of the zero-free paths: exactly ONE `pallas_call` per dilated
+forward, and no materialized `rhs_dilation` zeros anywhere in the
+zero-free lowerings (no rhs-dilated conv primitive, no intermediate at the
+dilated-filter extent).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ecoflow
+from repro.core.conv import ecoflow_dilated_conv
+from repro.core.spec import ConvSpec, resolve_backend
+from repro.kernels import ops
+
+from conftest import (assert_allclose, walk_eqns as _walk_eqns,
+                      count_pallas_calls as _count_pallas_calls)
+
+BACKENDS = ["reference", "xla_zero_free", "pallas"]
+
+
+def _reference(x, w, S, P, D):
+    return jax.lax.conv_general_dilated(
+        x, w, (S, S), [(P, P), (P, P)], rhs_dilation=(D, D),
+        dimension_numbers=ecoflow.DN)
+
+
+def _case(seed, B, N, K, S, P, D, Ci, Co):
+    rng = np.random.default_rng(seed)
+    spec = ConvSpec.make(stride=S, padding=P, filter_shape=K, dilation=D)
+    Oh, Ow = spec.out_size((N, N))
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, Oh, Ow, Co)), jnp.float32)
+    return spec, x, w, dy
+
+
+# ---------------------------------------------------------------------------
+# the property grid: every backend == reference, forward and both grads
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), s=st.sampled_from([1, 1, 2, 3]),
+       d=st.sampled_from([2, 3, 4]), k=st.sampled_from([2, 3]),
+       p=st.integers(0, 2), b=st.sampled_from([1, 2]),
+       ci=st.sampled_from([1, 3]), co=st.sampled_from([1, 4]),
+       extra=st.integers(0, 4))
+def test_dilated_parity_grid(seed, s, d, k, p, b, ci, co, extra):
+    """Forward/dx/dw of every backend match `reference` to fp32 tolerance
+    over random (stride, dilation, K, padding, B, Cin, Cout, odd n)."""
+    k_eff = d * (k - 1) + 1
+    n = k_eff + s + extra           # guarantees Oh >= 2, incl. odd sizes
+    spec, x, w, dy = _case(seed, b, n, k, s, p, d, ci, co)
+
+    y_ref = _reference(x, w, s, p, d)
+    _, vjp = jax.vjp(lambda x_, w_: _reference(x_, w_, s, p, d), x, w)
+    dx_ref, dw_ref = vjp(dy)
+
+    for backend in BACKENDS:
+        y = ecoflow_dilated_conv(x, w, s, p, d, backend)
+        assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4,
+                        err_msg=f"{backend} forward "
+                                f"(s={s},d={d},k={k},p={p},n={n})")
+        loss = lambda x_, w_, be=backend: jnp.vdot(
+            ecoflow_dilated_conv(x_, w_, s, p, d, be), dy)
+        dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+        assert_allclose(dx, dx_ref, rtol=2e-4, atol=2e-4,
+                        err_msg=f"{backend} dx "
+                                f"(s={s},d={d},k={k},p={p},n={n})")
+        assert_allclose(dw, dw_ref, rtol=2e-4, atol=2e-4,
+                        err_msg=f"{backend} dw "
+                                f"(s={s},d={d},k={k},p={p},n={n})")
+
+
+def test_convspec_accepts_dilation():
+    """`ConvSpec.make(dilation=2)` constructs (the old reserved-geometry
+    rejection is gone) and derives the effective receptive field."""
+    s = ConvSpec.make(stride=1, padding=2, filter_shape=3, dilation=2)
+    assert s.dilated_filter_shape == (5, 5)
+    assert s.out_size((13, 13)) == (13, 13)         # atrous same-padding
+    assert s.input_size((13, 13)) == (13, 13)
+    s2 = ConvSpec.make(stride=(2, 1), padding=0, filter_shape=(3, 2),
+                       dilation=(2, 4))
+    assert s2.dilated_filter_shape == (5, 5)
+    with pytest.raises(ValueError, match="dilation"):
+        ConvSpec.make(dilation=0)
+
+
+# ---------------------------------------------------------------------------
+# structural guarantees of the zero-free paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,D", [(1, 2), (1, 4), (2, 2)])
+def test_dilated_forward_single_pallas_launch(rng, S, D):
+    """Exactly ONE pallas_call per dilated forward on the pallas backend,
+    and its output matches the dense xla_zero_free decomposition."""
+    K, Ci, Co = 3, 3, 4
+    N = D * (K - 1) + 1 + 2 * S
+    x = jnp.asarray(rng.normal(size=(1, N, N, Ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    fn = lambda x_, w_: ops.dconv_forward(x_, w_, stride=(S, S),
+                                          padding=(0, 0), dilation=(D, D))
+    assert _count_pallas_calls(fn, x, w) == 1
+    got = fn(x, w)
+    want = ecoflow.dilated_forward_zero_free(x, w, stride=(S, S),
+                                             padding=(0, 0),
+                                             dilation=(D, D))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dilated_backward_stays_fused(rng):
+    """Stride-1 atrous conv with P <= D*(K-1): forward, input-grad (via
+    the self-adjoint rotation trick), and filter-grad are one fused
+    launch each -- a full jax.grad traces exactly 3 pallas_calls."""
+    K, D, P, Ci, Co = 3, 2, 2, 3, 3
+    N = 11
+    x = jnp.asarray(rng.normal(size=(1, N, N, Ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    loss = lambda x_, w_: jnp.sum(
+        ecoflow_dilated_conv(x_, w_, 1, P, D, "pallas") ** 2)
+    g = lambda x_, w_: jax.grad(loss, argnums=(0, 1))(x_, w_)
+    assert _count_pallas_calls(g, x, w) == 3
+
+
+@pytest.mark.parametrize("backend", ["xla_zero_free", "pallas"])
+def test_no_materialized_dilation_zeros(rng, backend):
+    """The zero-free paths never build the dilated filter: no conv
+    primitive with rhs_dilation != 1 appears in the traced forward or
+    backward jaxpr, and no intermediate has the dilated-filter extent
+    (K_eff, K_eff, ...)."""
+    K, S, D, P, Ci, Co = 3, 1, 4, 4, 3, 5
+    k_eff = D * (K - 1) + 1
+    N = k_eff + 4
+    spec, x, w, dy = _case(0, 2, N, K, S, P, D, Ci, Co)
+
+    def fwd(x_, w_):
+        return ecoflow_dilated_conv(x_, w_, S, P, D, backend)
+
+    def grads(x_, w_):
+        return jax.grad(lambda a, b: jnp.vdot(fwd(a, b), dy),
+                        argnums=(0, 1))(x_, w_)
+
+    for fn in (fwd, grads):
+        jaxpr = jax.make_jaxpr(fn)(x, w)
+        for e in _walk_eqns(jaxpr.jaxpr):
+            if e.primitive.name == "conv_general_dilated":
+                assert tuple(e.params["rhs_dilation"]) == (1, 1), (
+                    f"{backend}: materialized-filter dilated conv in "
+                    f"{fn.__name__}")
+                assert tuple(e.params["lhs_dilation"]) == (1, 1), (
+                    f"{backend}: materialized input dilation in "
+                    f"{fn.__name__}")
+            for v in e.outvars:
+                shape = getattr(v.aval, "shape", ())
+                assert tuple(shape[:2]) != (k_eff, k_eff), (
+                    f"{backend}: intermediate at the dilated-filter "
+                    f"extent in {fn.__name__}: {shape}")
+
+
+def test_dilated_input_grad_honors_n_out(rng):
+    """Backend-interface contract: input_grad crops/pads to ANY requested
+    n_out identically on every backend -- the fused stride-1 pallas path
+    must fall back rather than silently return its natural extent."""
+    K, S, P, D, Ci, Co = 3, 1, 1, 2, 2, 3
+    spec = ConvSpec.make(stride=S, padding=P, filter_shape=K, dilation=D)
+    N = 11
+    Oh, Ow = spec.out_size((N, N))
+    dy = jnp.asarray(rng.normal(size=(1, Oh, Ow, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    # `reference` needs a consistent n_out (it round-trips through
+    # jax.vjp); the zero-free backends crop/pad to whatever is asked.
+    for n_out in [(N, N), (N - 2, N - 2), (N + 1, N + 1)]:
+        outs = [resolve_backend(be).input_grad(dy, w, spec, n_out)
+                for be in ("xla_zero_free", "pallas")]
+        for be, dx in zip(("xla_zero_free", "pallas"), outs):
+            assert dx.shape == (1, *n_out, Ci), (be, n_out, dx.shape)
+        assert_allclose(outs[1], outs[0], rtol=1e-5, atol=1e-5,
+                        err_msg=f"pallas vs xla_zero_free n_out={n_out}")
+
+
+def test_dilated_conv_bf16(rng):
+    """bf16 inputs accumulate in fp32 on every backend (DESIGN Sec 2.3)."""
+    spec, x, w, dy = _case(3, 1, 9, 3, 1, 2, 2, 4, 4)
+    x, w = x.astype(jnp.bfloat16), w.astype(jnp.bfloat16)
+    y_ref = ecoflow.direct_conv(x, w, 1, 2, dilation=2)
+    for backend in ("xla_zero_free", "pallas"):
+        y = ecoflow_dilated_conv(x, w, 1, 2, 2, backend)
+        assert y.dtype == jnp.bfloat16
+        assert_allclose(y, y_ref, rtol=5e-2, atol=5e-2, err_msg=backend)

@@ -16,40 +16,12 @@ from repro.core.conv import ecoflow_conv
 from repro.core.spec import (ConvSpec, available_backends, resolve_backend)
 from repro.kernels import ops
 
-from conftest import assert_allclose
+from conftest import (assert_allclose,
+                      count_pallas_calls as _count_pallas_calls,
+                      max_intermediate_size as _max_intermediate_size,
+                      pallas_grids as _pallas_grids)
 
 BACKENDS = ["reference", "xla_zero_free", "pallas"]
-
-
-# ---------------------------------------------------------------------------
-# jaxpr inspection helpers
-# ---------------------------------------------------------------------------
-
-def _walk_eqns(jaxpr):
-    """Yield every eqn in a (closed) jaxpr, recursing into sub-jaxprs."""
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            sub = getattr(v, "jaxpr", None)  # ClosedJaxpr
-            if sub is not None:
-                yield from _walk_eqns(sub)
-            elif hasattr(v, "eqns"):         # raw Jaxpr
-                yield from _walk_eqns(v)
-
-
-def _count_pallas_calls(fn, *args) -> int:
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    return sum(1 for e in _walk_eqns(jaxpr.jaxpr)
-               if e.primitive.name == "pallas_call")
-
-
-def _max_intermediate_size(fn, *args) -> int:
-    """Largest array (elements) produced by any eqn in the traced jaxpr."""
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    sizes = [int(np.prod(v.aval.shape))
-             for e in _walk_eqns(jaxpr.jaxpr) for v in e.outvars
-             if hasattr(v.aval, "shape")]
-    return max(sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +140,33 @@ def test_backward_pass_is_two_pallas_launches(rng):
     loss = lambda x_, w_: jnp.sum(ecoflow_conv(x_, w_, 2, 0, "pallas") ** 2)
     g = lambda x_, w_: jax.grad(loss, argnums=(0, 1))(x_, w_)
     assert _count_pallas_calls(g, x, w) == 2
+
+
+def test_filter_grad_batch_not_innermost(rng):
+    """B>1 re-fetch regression: the filter-grad grid iterates batch
+    OUTERMOST (so the padded-input block stays VMEM-resident across the
+    tap/Cout axes, its index map depending only on outer axes) and emits
+    per-batch partials reduced host-side -- and the gradient still
+    matches `reference`."""
+    B, N, K, S, Ci, Co = 3, 9, 2, 2, 4, 4
+    O = (N - K) // S + 1
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    fn = lambda x_, dy_: ops.dconv_filter_grad(x_, dy_, stride=(S, S),
+                                               padding=(0, 0), k=(K, K))
+    grids = _pallas_grids(fn, x, dy)
+    assert len(grids) == 1
+    grid = grids[0]
+    # grid = (B, Cin_tiles, T, Cout_tiles): batch leads, taps/Cout trail.
+    assert grid[0] == B, grid
+    assert grid[-1] != B and grid[-2] == K * K, grid
+
+    dw = fn(x, dy)
+    be = resolve_backend("reference")
+    spec = ConvSpec.make(stride=S, padding=0, filter_shape=K)
+    want = be.filter_grad(x, dy, spec)
+    assert_allclose(dw, want, rtol=1e-4, atol=1e-4)
 
 
 def test_filter_grad_memory_not_k2_replicated(rng):

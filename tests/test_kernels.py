@@ -8,9 +8,11 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core import ecoflow
 from repro.kernels import ops, ref
 from repro.kernels.attention import flash_attention_pallas
 from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
+from repro.kernels.dconv_forward import dconv_forward_pallas
 from repro.kernels.tconv_phase import pack_phase_filters, tconv_fused_pallas
 
 from conftest import assert_allclose
@@ -72,6 +74,40 @@ def test_tconv_fused_direct_call(rng):
     assert_allclose(out, want, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("S", [2, 3, 4])
+@pytest.mark.parametrize("K", [3, 4, 5])
+def test_pack_phase_filters_single_source_of_truth(rng, S, K):
+    """`pack_phase_filters` consumes `ecoflow.phase_subfilters` (the one
+    rotation convention shared with the dense XLA backend) and only adds
+    uniform-shape packing.  This pins the padding/rotation commutation the
+    refactor relies on: FRONT-padding the flipped sub-filter equals
+    TAIL-padding before the flip (the old inline convention)."""
+    Ci, Co = 3, 4
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    packed = pack_phase_filters(w, (S, S))
+    KP = -(-K // S)
+    # Old convention, inlined: tail-pad the raw sub-filter, then rotate.
+    expect = []
+    for p in range(min(S, K)):
+        for q in range(min(S, K)):
+            sub = w[p::S, q::S]
+            kp, kq = sub.shape[0], sub.shape[1]
+            sub = jnp.pad(sub, ((0, KP - kp), (0, KP - kq), (0, 0), (0, 0)))
+            sub = jnp.flip(sub, axis=(0, 1))
+            expect.append(jnp.swapaxes(sub, 2, 3))
+    expect = jnp.stack(expect)
+    assert packed.shape == expect.shape
+    assert_allclose(packed, expect, rtol=0, atol=0)
+    # And the packed taps are exactly the phase_subfilters' taps.
+    subs = ecoflow.phase_subfilters(w, (S, S))
+    for p in range(min(S, K)):
+        for q in range(min(S, K)):
+            sub = subs[p][q]
+            kp, kq = sub.shape[0], sub.shape[1]
+            got = packed[p * min(S, K) + q, KP - kp:, KP - kq:]
+            assert_allclose(got, sub, rtol=0, atol=0)
+
+
 def test_pack_phase_filters_zero_free(rng):
     """Packing is tap-exhaustive and zero-free: every filter tap lands in
     exactly one phase slot, ragged phases are zero-padded."""
@@ -116,6 +152,30 @@ def test_dconv_filtergrad_sweep(rng, B, N, K, S, P, Ci, Co):
     assert_allclose(dw, want, rtol=1e-4, atol=1e-4)
 
 
+DCONV_DILATED_SWEEP = [
+    # (B, N, K, S, P, D, Ci, Co): forward filter dilation D
+    (1, 11, 3, 1, 2, 2, 3, 4),
+    (2, 15, 3, 1, 4, 4, 2, 3),
+    (1, 14, 3, 2, 1, 2, 3, 2),
+    (2, 17, 2, 3, 0, 4, 2, 5),
+]
+
+
+@pytest.mark.parametrize("B,N,K,S,P,D,Ci,Co", DCONV_DILATED_SWEEP)
+def test_dconv_filtergrad_dilated_sweep(rng, B, N, K, S, P, D, Ci, Co):
+    """Filter gradient of a *dilated* forward conv: tap windows at
+    spacing D inside the kernel."""
+    k_eff = D * (K - 1) + 1
+    O = (N + 2 * P - k_eff) // S + 1
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    dw = ops.dconv_filter_grad(x, dy, stride=(S, S), padding=(P, P),
+                               k=(K, K), dilation=(D, D))
+    want = ref.dconv_filter_grad_ref(x, dy, stride=(S, S), padding=(P, P),
+                                     k=(K, K), dilation=(D, D))
+    assert_allclose(dw, want, rtol=1e-4, atol=1e-4)
+
+
 def test_dconv_filtergrad_bf16(rng):
     B, N, K, S, Ci, Co = 2, 9, 3, 2, 4, 4
     O = (N - K) // S + 1
@@ -126,6 +186,44 @@ def test_dconv_filtergrad_bf16(rng):
     want = ref.dconv_filter_grad_ref(x, dy, stride=(S, S), padding=(0, 0),
                                      k=(K, K))
     assert_allclose(dw, want, rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# dconv_forward (fused zero-free dilated forward conv)
+# ---------------------------------------------------------------------------
+
+DFWD_SWEEP = [
+    # (B, N, K, S, P, D, Ci, Co)
+    (1, 13, 3, 1, 2, 2, 3, 4),       # atrous same-padding
+    (2, 15, 3, 1, 4, 4, 2, 3),       # d=4 same-padding
+    (1, 14, 3, 2, 1, 2, 3, 2),       # stride 2 + dilation 2
+    (2, 17, 2, 3, 0, 4, 2, 2),       # non-exact fit
+    (1, 12, 1, 2, 0, 3, 2, 2),       # pointwise: K_eff == 1
+    (1, 13, 3, 1, 2, 2, 5, 130),     # Cout > default tile
+]
+
+
+@pytest.mark.parametrize("B,N,K,S,P,D,Ci,Co", DFWD_SWEEP)
+def test_dconv_forward_sweep(rng, B, N, K, S, P, D, Ci, Co):
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    y = ops.dconv_forward(x, w, stride=(S, S), padding=(P, P),
+                          dilation=(D, D))
+    want = ref.dconv_forward_ref(x, w, stride=(S, S), padding=(P, P),
+                                 dilation=(D, D))
+    assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dconv_forward_bf16(rng):
+    B, N, K, D, Ci, Co = 1, 11, 3, 2, 4, 4
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.bfloat16)
+    y = dconv_forward_pallas(x, w, stride=(1, 1), padding=(2, 2),
+                             dilation=(2, 2), interpret=True)
+    assert y.dtype == jnp.bfloat16
+    want = ref.dconv_forward_ref(x, w, stride=(1, 1), padding=(2, 2),
+                                 dilation=(2, 2))
+    assert_allclose(y, want, rtol=5e-2, atol=5e-2)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,116 @@
+"""Invariants of the MAC-accounting formulas (paper Sec. 3.1 closed forms).
+
+Each closed-form zero-MAC fraction is cross-checked against a brute-force
+count over an explicitly materialized zero map on small geometries, and
+the ConvSpec size formulas are pinned by round-trip properties on random
+specs (including dilation).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ecoflow, naive
+from repro.core.spec import ConvSpec
+
+
+def _window_sums(arr: np.ndarray, k: int) -> np.ndarray:
+    """Sum of every k x k sliding window of a 2D array."""
+    v = np.lib.stride_tricks.sliding_window_view(arr, (k, k))
+    return v.sum(axis=(2, 3))
+
+
+def _brute_tconv_zero_frac(n: int, k: int, s: int) -> float:
+    """Exact zero-MAC fraction of the naive transposed conv: dilate the
+    n x n error map by s, add the k-1 border halo, slide the k x k filter
+    over every output position, count MACs touching an inserted zero."""
+    dil = s * (n - 1) + 1
+    ind = np.zeros((dil, dil))
+    ind[::s, ::s] = 1.0                       # real error elements
+    padded = np.pad(ind, k - 1)               # border halo
+    useful = _window_sums(padded, k).sum()    # MACs touching a real elem
+    n_windows = (padded.shape[0] - k + 1) ** 2
+    total = n_windows * k * k
+    return 1.0 - useful / total
+
+
+@pytest.mark.parametrize("n,k,s", [(8, 3, 2), (16, 3, 2), (8, 5, 4),
+                                   (12, 11, 4), (16, 3, 8), (27, 5, 2)])
+def test_tconv_zero_mac_fraction_brute_force(n, k, s):
+    """`tconv_zero_mac_fraction` is the padded map's zero *density*
+    (paper Sec. 3.1 accounting, pinned bitwise by test_mapping).  The
+    brute-force MAC-level count differs only in the border halo -- every
+    real tap sits >= K-1 from the edge, so its sharp closed form is
+    1 - n^2/(S(n-1)+K)^2.  The density form bounds it from above and the
+    gap (all-zero halo windows) stays < 0.05 on the paper's geometries."""
+    exact = _brute_tconv_zero_frac(n, k, s)
+    n_out = s * (n - 1) + k
+    assert exact == pytest.approx(1.0 - n * n / n_out ** 2, abs=1e-12)
+    formula = ecoflow.tconv_zero_mac_fraction(n, k, s)
+    assert exact <= formula + 1e-12, (exact, formula)
+    assert formula - exact < 0.05, (exact, formula)
+
+
+@pytest.mark.parametrize("n,s", [(8, 2), (16, 2), (8, 4), (27, 2), (7, 8)])
+def test_dconv_zero_mac_fraction_brute_force(n, s):
+    """Filter-gradient conv uses the s-dilated error as the filter: every
+    window position schedules dil^2 MACs of which exactly n^2 touch real
+    elements, independent of position -- the closed form is exact."""
+    dil = s * (n - 1) + 1
+    ind = np.zeros((dil, dil))
+    ind[::s, ::s] = 1.0
+    exact = 1.0 - ind.sum() / ind.size
+    assert ecoflow.dconv_zero_mac_fraction(n, s) == pytest.approx(
+        exact, abs=1e-12)
+
+
+@pytest.mark.parametrize("k,d", [(3, 2), (3, 4), (5, 2), (2, 3), (1, 4)])
+def test_dilated_forward_zero_mac_fraction_brute_force(k, d):
+    """Dilated forward conv uses the d-dilated filter: k_eff^2 scheduled
+    MACs per output position, k^2 useful -- exact at every position."""
+    w = np.zeros((d * (k - 1) + 1, d * (k - 1) + 1))
+    w[::d, ::d] = 1.0
+    exact = 1.0 - w.sum() / w.size
+    assert naive.dilated_forward_zero_mac_fraction(k, d) == pytest.approx(
+        exact, abs=1e-12)
+    # Consistency with the materialized baseline: the dilated filter the
+    # naive path builds has exactly that zero density.
+    import jax.numpy as jnp
+    wf = jnp.ones((k, k, 1, 1), jnp.float32)
+    w_dil = naive.dilate_filter_insert_zeros(wf, d)
+    assert int((w_dil == 0).sum()) / w_dil.size == pytest.approx(
+        naive.dilated_forward_zero_mac_fraction(k, d), abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# ConvSpec size-formula round-trips on random specs
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(1, 4), k=st.integers(1, 5), p=st.integers(0, 2),
+       d=st.integers(1, 4), o=st.integers(1, 9), slack=st.integers(0, 5))
+def test_spec_size_round_trip(s, k, p, d, o, slack):
+    spec = ConvSpec.make(stride=s, padding=p, filter_shape=k, dilation=d)
+    k_eff = d * (k - 1) + 1
+    assert spec.dilated_filter_shape == (k_eff, k_eff)
+    # Exact-fit round trip: out_size(input_size(o)) == o whenever the
+    # exact-fit input is a valid (positive, >= filter) geometry.
+    n_exact = spec.input_size((o, o))[0]
+    if n_exact + 2 * p >= k_eff:
+        assert spec.out_size((n_exact, n_exact)) == (o, o)
+        # Non-exact fit: up to S-1 ignored tail rows never change O.
+        n = n_exact + min(slack, s - 1)
+        assert spec.out_size((n, n)) == (o, o)
+    # The full (pre-padding-slice) transposed extent covers the exact fit.
+    assert spec.full_size((o, o))[0] == n_exact + 2 * p
+
+
+@settings(max_examples=10, deadline=None)
+@given(sh=st.integers(1, 4), sw=st.integers(1, 4), kh=st.integers(1, 5),
+       kw=st.integers(1, 5))
+def test_useful_taps_is_zero_free(sh, sw, kh, kw):
+    """Every filter tap lands in exactly one stride phase -- the zero-free
+    property the phase decomposition relies on."""
+    spec = ConvSpec.make(stride=(sh, sw), filter_shape=(kh, kw))
+    assert spec.useful_taps() == kh * kw
