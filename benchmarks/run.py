@@ -3,6 +3,8 @@ the wall-clock microbenchmarks and the (arch x shape) roofline table.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --fast     # skip wallclock
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: one tiny
+        # geometry per op family + BENCH_conv.json schema-drift guard
 
 Output format: ``name,value,derived`` CSV rows (derived carries the
 paper's reference number so the reproduction delta is visible).
@@ -21,7 +23,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the wall-clock microbenchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one tiny geometry per conv op family "
+                         "through the real backend entry points, failing "
+                         "on BENCH_conv.json schema drift")
     args = ap.parse_args()
+
+    if args.smoke:
+        from benchmarks import wallclock
+        print("# === benchmark smoke: one tiny geometry per op family ===")
+        _emit(wallclock.smoke())
+        return
 
     from benchmarks import paper_tables as pt
     print("# === paper tables (SASiML-lite analytical model) ===")

@@ -2,9 +2,11 @@
 naive dataflows, executed for real in JAX on this host (CPU here; the same
 code paths compile for TPU) -- plus the conv *backend* comparison
 (multi-launch `xla_zero_free` vs fused single-launch `pallas`) across the
-paper's Table 5/7 layer geometries and the dilated-forward (atrous)
-geometries at rates d in {2, 4}, emitted to BENCH_conv.json so future PRs
-have a perf trajectory.
+paper's Table 5/7 layer geometries, the dilated-forward (atrous)
+geometries at rates d in {2, 4}, and the general strided+dilated
+input-gradient geometries (S > 1 AND D > 1, the unified (phase, tap)
+kernel's family), emitted to BENCH_conv.json so future PRs have a perf
+trajectory.
 
 Reported as name,us_per_call,derived -- `derived` carries the speedup and
 the useful-MAC fraction from the analytical model for cross-checking.
@@ -120,18 +122,33 @@ DILATED_FORWARD_CASES = [
     ("deeplab-ASPP-d4", 17, 3, 1, 4, 4, 16, 16),
 ]
 
+# General strided+dilated (S > 1 AND D > 1) input-gradient geometries --
+# the conv family the unified (phase, tap) kernel runs in one launch
+# (previously the multi-launch XLA scatter fallback on the `pallas`
+# backend).  Sized for interpret-mode CI like the tables above.
+STRIDED_DILATED_CASES = [
+    # (name, O, K, S, P, D, Ci, Co)
+    ("strided-atrous-s2d2", 10, 3, 2, 1, 2, 16, 16),
+    ("strided-atrous-s3d2", 7, 3, 3, 1, 2, 16, 16),
+]
 
-def conv_backend_bench(iters=5, warmup=1, write_json=True):
+
+def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
+                       dilated_cases=None, strided_dilated_cases=None,
+                       json_path=None):
     """Time tconv + filter-grad through the xla_zero_free and pallas
     backends for each geometry -- plus the dilated-forward conv (d in
-    {2, 4}) through the same two zero-free backends and the
-    materialized-filter naive baseline; write BENCH_conv.json and return
-    CSV rows.
+    {2, 4}) and the general strided+dilated input gradient through the
+    same two zero-free backends (and, for the dilated forward, the
+    materialized-filter naive baseline); write BENCH_conv.json and return
+    CSV rows.  `cases`/`dilated_cases`/`strided_dilated_cases`/`json_path`
+    exist for the CI smoke run (one tiny geometry per family).
     """
     rows, records = [], []
     rng = np.random.default_rng(0)
     backends = ("xla_zero_free", "pallas")
-    for name, O, K, S, Ci, Co in CONV_BACKEND_CASES:
+    for name, O, K, S, Ci, Co in (CONV_BACKEND_CASES if cases is None
+                                  else cases):
         B, P = 1, 0
         spec = ConvSpec.make(stride=S, padding=P, filter_shape=K)
         N = spec.input_size((O, O))[0]
@@ -157,7 +174,9 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True):
             rows.append((f"wallclock.filtergrad.{bname}.{name}",
                          round(t_g, 1), ""))
         records.append(rec)
-    for name, N, K, S, P, D, Ci, Co in DILATED_FORWARD_CASES:
+    for name, N, K, S, P, D, Ci, Co in (DILATED_FORWARD_CASES
+                                        if dilated_cases is None
+                                        else dilated_cases):
         B = 1
         spec = ConvSpec.make(stride=S, padding=P, filter_shape=K,
                              dilation=D)
@@ -187,13 +206,99 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True):
                          round(t_d, 1),
                          f"speedup_vs_naive={t_nai/t_d:.2f}x"))
         records.append(rec)
+    for name, O, K, S, P, D, Ci, Co in (STRIDED_DILATED_CASES
+                                        if strided_dilated_cases is None
+                                        else strided_dilated_cases):
+        B = 2
+        spec = ConvSpec.make(stride=S, padding=P, filter_shape=K,
+                             dilation=D)
+        n_out = spec.input_size((O, O))
+        dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+        rec = {"layer": name, "error_map": O, "k": K, "stride": S,
+               "dilation": D, "c_in": Ci, "c_out": Co, "batch": B,
+               "interpret_mode": jax.default_backend() != "tpu",
+               "input_grad_us": {}}
+        outs = {}
+        for bname in backends:
+            be = resolve_backend(bname)
+            f_i = jax.jit(lambda dy_, w_, be=be: be.input_grad(
+                dy_, w_, spec, n_out))
+            outs[bname] = np.asarray(f_i(dy, w))
+            t_i = _time(f_i, dy, w, iters=iters, warmup=warmup)
+            rec["input_grad_us"][bname] = round(t_i, 1)
+            rows.append((f"wallclock.input_grad.{bname}.{name}",
+                         round(t_i, 1), ""))
+        np.testing.assert_allclose(outs["pallas"], outs["xla_zero_free"],
+                                   rtol=1e-3, atol=1e-3)
+        records.append(rec)
     if write_json:
-        BENCH_JSON.write_text(json.dumps(
+        path = BENCH_JSON if json_path is None else pathlib.Path(json_path)
+        path.write_text(json.dumps(
             {"note": "conv backend wall-clock (us/call); pallas runs in "
                      "interpret mode off-TPU, so absolute numbers are only "
                      "comparable within a backend+host class",
              "cases": records}, indent=2) + "\n")
-        rows.append(("wallclock.conv_backend.json", str(BENCH_JSON), ""))
+        rows.append(("wallclock.conv_backend.json", str(path), ""))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: one tiny geometry per op family + BENCH_conv.json schema guard
+# ---------------------------------------------------------------------------
+
+# Smoke geometries: minimal sizes that still exercise every op family
+# (tconv, filter-grad, dilated forward, strided+dilated input grad)
+# through both zero-free backends in seconds on an interpret-mode host.
+SMOKE_CASES = [("smoke-tconv", 5, 3, 2, 4, 4)]
+SMOKE_DILATED_CASES = [("smoke-d2", 9, 3, 1, 2, 2, 4, 4)]
+SMOKE_STRIDED_DILATED_CASES = [("smoke-s2d2", 4, 3, 2, 1, 2, 4, 4)]
+
+
+def _record_schema(doc) -> set[frozenset]:
+    """The set of per-record key signatures -- one frozenset per op
+    family (tconv/filter-grad, dilated-forward, strided+dilated)."""
+    return {frozenset(rec) for rec in doc["cases"]}
+
+
+def smoke():
+    """Run one tiny geometry per op family end to end and fail on
+    BENCH_conv.json schema drift.
+
+    The timed paths are the real backend entry points, so a wiring break
+    in any op family fails here in CI instead of at the next perf
+    comparison; the generated record schema is diffed against the
+    committed BENCH_conv.json so a field rename/removal (or a new op
+    family whose rows were never regenerated) is caught the same way.
+    The smoke JSON is written next to BENCH_conv.json and removed after
+    the check -- the committed trajectory file is never clobbered.
+    """
+    smoke_json = BENCH_JSON.with_name(BENCH_JSON.stem + ".smoke.json")
+    try:
+        rows = conv_backend_bench(
+            iters=1, warmup=1, cases=SMOKE_CASES,
+            dilated_cases=SMOKE_DILATED_CASES,
+            strided_dilated_cases=SMOKE_STRIDED_DILATED_CASES,
+            json_path=smoke_json)
+        got = _record_schema(json.loads(smoke_json.read_text()))
+        committed_doc = json.loads(BENCH_JSON.read_text())
+        want = _record_schema(committed_doc)
+        if got != want:
+            only_new = [sorted(s) for s in got - want]
+            only_old = [sorted(s) for s in want - got]
+            raise RuntimeError(
+                "BENCH_conv.json schema drift: regenerate it with "
+                "`python -m benchmarks.run` (record signatures only in "
+                f"smoke run: {only_new}; only in committed file: "
+                f"{only_old})")
+        if set(committed_doc) != {"note", "cases"}:
+            raise RuntimeError(
+                f"BENCH_conv.json top-level drift: {sorted(committed_doc)}")
+    finally:
+        smoke_json.unlink(missing_ok=True)
+    rows.append(("wallclock.smoke.schema", "ok",
+                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES)}"
+                 " families"))
     return rows
 
 

@@ -74,18 +74,19 @@ def ecoflow_dilated_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
     return ecoflow_conv(x, w, stride, padding, backend, dilation)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _conv_transpose(dy, w, stride, padding, n_out, backend):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _conv_transpose(dy, w, stride, padding, n_out, backend, dilation):
     spec = ConvSpec(stride=stride, padding=padding,
-                    filter_shape=w.shape[:2])
+                    filter_shape=w.shape[:2], dilation=dilation)
     return resolve_backend(backend).input_grad(dy, w, spec, n_out)
 
 
-def _ct_fwd(dy, w, stride, padding, n_out, backend):
-    return _conv_transpose(dy, w, stride, padding, n_out, backend), (dy, w)
+def _ct_fwd(dy, w, stride, padding, n_out, backend, dilation):
+    return _conv_transpose(dy, w, stride, padding, n_out, backend,
+                           dilation), (dy, w)
 
 
-def _ct_bwd(stride, padding, n_out, backend, res, g):
+def _ct_bwd(stride, padding, n_out, backend, dilation, res, g):
     """VJP of the transposed conv, itself zero-free.
 
     The transposed conv is the adjoint of the direct conv's linear map, so
@@ -96,7 +97,7 @@ def _ct_bwd(stride, padding, n_out, backend, res, g):
     their own) and routes its backward through the paper's dataflows."""
     dy, w = res
     spec = ConvSpec(stride=stride, padding=padding,
-                    filter_shape=w.shape[:2])
+                    filter_shape=w.shape[:2], dilation=dilation)
     be = resolve_backend(backend)
     ddy = be.forward(g, w, spec)
     dw = be.filter_grad(g, dy, spec)
@@ -107,11 +108,16 @@ _conv_transpose.defvjp(_ct_fwd, _ct_bwd)
 
 
 def ecoflow_conv_transpose(dy: jax.Array, w: jax.Array, stride=1, padding=0,
-                           n_out=None, backend=None) -> jax.Array:
+                           n_out=None, backend=None,
+                           dilation=1) -> jax.Array:
     """Standalone zero-free transposed conv (e.g. GAN generator layers),
-    dispatched through the backend registry."""
+    dispatched through the backend registry.
+
+    `dilation` > 1 makes this the adjoint of a *dilated* forward conv
+    (atrous decoder layers): on the `pallas` backend the unified
+    (phase, tap) kernel runs any (stride, dilation) pair in one launch."""
     spec = ConvSpec.make(stride=stride, padding=padding,
-                         filter_shape=w.shape[:2])
+                         filter_shape=w.shape[:2], dilation=dilation)
     if n_out is None:
         n_out = spec.input_size((dy.shape[1], dy.shape[2]))
     n_out = tuple(int(n) for n in n_out)
@@ -123,7 +129,8 @@ def ecoflow_conv_transpose(dy: jax.Array, w: jax.Array, stride=1, padding=0,
         raise ValueError(
             f"n_out={n_out} is inconsistent with dy spatial size "
             f"{dy.shape[1:3]} for stride={spec.stride}, "
-            f"padding={spec.padding}, filter={spec.filter_shape}: a "
-            f"forward conv over n_out yields {spec.out_size(n_out)}")
+            f"padding={spec.padding}, filter={spec.filter_shape}, "
+            f"dilation={spec.dilation}: a forward conv over n_out yields "
+            f"{spec.out_size(n_out)}")
     return _conv_transpose(dy, w, spec.stride, spec.padding,
-                           n_out, backend)
+                           n_out, backend, spec.dilation)

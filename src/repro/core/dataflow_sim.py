@@ -332,15 +332,33 @@ def layer_by_name(name: str) -> ConvLayer:
 
 def end_to_end_speedup(network: str, dataflow: Dataflow,
                        hw: ArrayConfig = ArrayConfig()) -> float:
-    """Amdahl combination: backward-pass conv layers accelerated by the
-    dataflow, the rest (fwd convs, stride-1 bwd, FC, optimizer) at parity."""
+    """Amdahl combination over the profiled training-time breakdown:
+
+      * `frac_strided` -- backward-pass convs with stride > 1 (or
+        stride-replaceable pooling): accelerated by the dataflow at the
+        representative layer's harmonic input/filter-grad speedup;
+      * `frac_s1`      -- stride-1 backward convs: run at PARITY on every
+        dataflow (stride 1 inserts no dilation zeros, so
+        `scheduled_macs == useful_macs` and `zero_mac_fraction == 0` for
+        all of tpu/rs/ecoflow -- the stride-1 fall-through fix);
+      * the remainder (fwd convs, FC, optimizer): parity as well.
+
+    The stride-1 term is carried explicitly (not folded silently into the
+    remainder) so the profiled breakdown stays auditable against the
+    fractions table.
+    """
     frac_strided, rep, frac_s1 = END2END_FRACTIONS[network]
+    if frac_strided < 0 or frac_s1 < 0 or frac_strided + frac_s1 > 1.0:
+        raise ValueError(
+            f"invalid training-time fractions for {network!r}: "
+            f"strided={frac_strided}, stride-1={frac_s1}")
     layer = layer_by_name(rep)
     sp_ig = speedup(layer, "input_grad", dataflow, "tpu", hw)
     sp_fg = speedup(layer, "filter_grad", dataflow, "tpu", hw)
     sp = 2.0 / (1.0 / sp_ig + 1.0 / sp_fg)
-    rest = 1.0 - frac_strided
-    return 1.0 / (rest + frac_strided / sp)
+    sp_s1 = 1.0   # stride-1 bwd: zero_mac_fraction == 0, all dataflows equal
+    rest = 1.0 - frac_strided - frac_s1
+    return 1.0 / (rest + frac_s1 / sp_s1 + frac_strided / sp)
 
 
 def gan_end_to_end_speedup(network: str, dataflow: Dataflow,

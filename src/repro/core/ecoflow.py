@@ -215,9 +215,10 @@ def dilated_forward_zero_free(x: jax.Array, w: jax.Array, *, stride=1,
     spec = ConvSpec.make(stride=(sh, sw), padding=(ph, pw),
                          filter_shape=(Kh, Kw), dilation=(dh, dw))
     Oh, Ow = spec.out_size((Nh, Nw))
-    assert Oh >= 1 and Ow >= 1, (
-        f"input {(Nh, Nw)} too small for effective filter "
-        f"{spec.dilated_filter_shape} at padding {(ph, pw)}")
+    if Oh < 1 or Ow < 1:   # ValueError, not assert: survives `python -O`
+        raise ValueError(
+            f"input {(Nh, Nw)} too small for effective filter "
+            f"{spec.dilated_filter_shape} at padding {(ph, pw)}")
     xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
     w32 = w.astype(jnp.float32)
     acc = jnp.zeros((B, Oh, Ow, Cout), jnp.float32)
@@ -300,7 +301,8 @@ def dilated_conv_filter_grad_zero_free(x: jax.Array, dy: jax.Array, *,
     dh, dw = _pair(dilation)
     B, Nh, Nw, Cin = x.shape
     _, Oh, Ow, Cout = dy.shape
-    assert k is not None, "filter size k=(Kh,Kw) is required"
+    if k is None:   # ValueError, not assert: survives `python -O`
+        raise ValueError("filter size k=(Kh,Kw) is required")
     Kh, Kw = k
     xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
     dy32 = dy.astype(jnp.float32)

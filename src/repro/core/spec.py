@@ -31,6 +31,7 @@ See DESIGN.md Sec. 2 for the EcoFlow -> MXU mapping the backends realize.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, Sequence, Union
 
 BackendLike = Union[None, bool, str, "ConvBackend"]
@@ -41,7 +42,8 @@ DEFAULT_BACKEND = "xla_zero_free"
 def _pair(v) -> tuple[int, int]:
     """Normalize an int-or-2-sequence to an (int, int) tuple."""
     if isinstance(v, (tuple, list)):
-        assert len(v) == 2, f"expected 2 elements, got {v!r}"
+        if len(v) != 2:
+            raise ValueError(f"expected 2 elements, got {v!r}")
         return (int(v[0]), int(v[1]))
     return (int(v), int(v))
 
@@ -62,11 +64,23 @@ class ConvSpec:
     @classmethod
     def make(cls, *, stride=1, padding=0, filter_shape=1,
              dilation=1) -> "ConvSpec":
+        """Validated constructor.  Rejects degenerate geometry with
+        `ValueError` (NOT `assert`, which `python -O` strips): a stride of
+        0 otherwise surfaces as a `ZeroDivisionError` deep inside the
+        phase bookkeeping, and negative padding as silent wrong shapes."""
+        stride = _pair(stride)
+        padding = _pair(padding)
+        filter_shape = _pair(filter_shape)
         dilation = _pair(dilation)
+        if min(stride) < 1:
+            raise ValueError(f"stride must be >= 1, got {stride}")
+        if min(padding) < 0:
+            raise ValueError(f"padding must be >= 0, got {padding}")
+        if min(filter_shape) < 1:
+            raise ValueError(f"filter_shape must be >= 1, got {filter_shape}")
         if min(dilation) < 1:
             raise ValueError(f"dilation must be >= 1, got {dilation}")
-        return cls(_pair(stride), _pair(padding), _pair(filter_shape),
-                   dilation)
+        return cls(stride, padding, filter_shape, dilation)
 
     # -- forward geometry ---------------------------------------------------
 
@@ -102,10 +116,14 @@ class ConvSpec:
                      for i in range(2))
 
     # -- phase (EcoFlow) bookkeeping ----------------------------------------
-    # The stride-phase decomposition below describes the transposed conv of
-    # an UNDILATED forward conv (dilation 1); the dilated-forward dataflow
-    # enumerates filter taps directly (see `ecoflow.dilated_forward_zero_free`
-    # and DESIGN.md Sec. 2.4) and does not consult these properties.
+    # The stride-phase properties below (n_phases .. useful_taps) describe
+    # the transposed conv of an UNDILATED forward conv (dilation 1).  The
+    # stride x dilation GENERAL decomposition -- tap (kx, ky) lands in
+    # output residue class ((kx*D) mod S, (ky*D) mod S), taps group by
+    # kx mod (S/gcd(S, D)), and within a residue class successive taps sit
+    # D/gcd(S, D) phase rows apart -- is the tap_* family at the end of
+    # this block (see DESIGN.md Sec. 2.5).  At dilation 1 the two views
+    # coincide (period == stride, step == 1).
 
     @property
     def n_phases(self) -> int:
@@ -136,6 +154,56 @@ class ConvSpec:
                    for p in range(self.stride[0])
                    for q in range(self.stride[1])
                    for kp, kq in [self.phase_filter_shape(p, q)])
+
+    # -- stride x dilation general (tap-phase) bookkeeping -------------------
+    # Transposed conv of a forward conv with stride S and filter dilation D:
+    # tap kx contributes to full-output rows r = i*S + kx*D, i.e. residue
+    # class (kx*D) mod S.  Residues repeat with period S/gcd(S, D) in kx, so
+    # taps group by kx mod period, and taps kx = a + u*period of class `a`
+    # land on phase rows m = i + (a*D)//S + u*(D/gcd(S, D)) -- an arithmetic
+    # tap lattice: each residue class is a stride-1 correlation of dy with a
+    # (D/gcd)-dilated sub-filter.  At D == 1 this reduces exactly to the
+    # stride-phase properties above.
+
+    @property
+    def tap_phase_period(self) -> tuple[int, int]:
+        """Tap-grouping period S/gcd(S, D) per axis: taps kx and
+        kx + period share the output residue class (kx*D) mod S."""
+        return tuple(self.stride[i] // math.gcd(self.stride[i],
+                                                self.dilation[i])
+                     for i in range(2))
+
+    @property
+    def tap_phase_step(self) -> tuple[int, int]:
+        """Phase-row spacing D/gcd(S, D) between successive taps of one
+        residue class (the sub-filter's own dilation rate)."""
+        return tuple(self.dilation[i] // math.gcd(self.stride[i],
+                                                  self.dilation[i])
+                     for i in range(2))
+
+    @property
+    def n_tap_phases(self) -> tuple[int, int]:
+        """Non-empty residue classes min(K, period) per axis; the remaining
+        stride residues receive no tap (structural zeros of the
+        upsampling)."""
+        per = self.tap_phase_period
+        return tuple(min(self.filter_shape[i], per[i]) for i in range(2))
+
+    @property
+    def taps_per_phase(self) -> tuple[int, int]:
+        """Uniform (zero-padded) within-phase tap count ceil(K/period) per
+        axis -- the packed tap extent of the general decomposition."""
+        per = self.tap_phase_period
+        return tuple(-(-self.filter_shape[i] // per[i]) for i in range(2))
+
+    def tap_phase_residue(self, a: int, axis: int) -> int:
+        """Output residue class (a*D) mod S of tap-phase `a` on `axis`."""
+        return (a * self.dilation[axis]) % self.stride[axis]
+
+    def tap_phase_base(self, a: int, axis: int) -> int:
+        """Leading phase-row offset (a*D) // S of tap-phase `a`: the row
+        where that class's first tap (u = 0) lands for output i = 0."""
+        return (a * self.dilation[axis]) // self.stride[axis]
 
 
 # ---------------------------------------------------------------------------
@@ -265,37 +333,14 @@ def _ensure_default_backends() -> None:
                                   dilation=spec.dilation)
 
     def _pl_input_grad(dy, w, spec: ConvSpec, n_out):
+        # The unified (phase, tap) kernel handles ANY (stride, dilation)
+        # pair in one launch -- the stride-1 self-adjoint rotation special
+        # case and the strided+dilated XLA scatter fallback of earlier
+        # revisions both collapsed into it (see DESIGN.md Sec. 2.5).
         from repro.kernels import ops as kops
-        if spec.dilation == (1, 1):
-            return kops.tconv_phase(dy, w, stride=spec.stride,
-                                    padding=spec.padding, n_out=_pair(n_out))
-        if spec.stride == (1, 1):
-            # Stride-1 dilated conv is self-adjoint up to a 180deg filter
-            # rotation: dx = dilated_conv(dy, rot(W)) with padding
-            # D*(K-1) - P, so the fused forward kernel serves as its own
-            # input-gradient kernel (see DESIGN.md Sec. 2.4).  Negative
-            # adjoint padding (P > D*(K-1)) or an n_out that differs from
-            # the stride-1 exact-fit size (the adjoint conv's natural
-            # output) falls back to the XLA path, which crops/pads to any
-            # requested n_out.
-            import jax.numpy as jnp
-            kh, kw = spec.filter_shape
-            adj = (spec.dilation[0] * (kh - 1) - spec.padding[0],
-                   spec.dilation[1] * (kw - 1) - spec.padding[1])
-            exact = (dy.shape[1] + adj[0] * 2
-                     - spec.dilation[0] * (kh - 1),
-                     dy.shape[2] + adj[1] * 2
-                     - spec.dilation[1] * (kw - 1))
-            if min(adj) >= 0 and _pair(n_out) == exact:
-                w_rot = jnp.swapaxes(jnp.flip(w, axis=(0, 1)), 2, 3)
-                return kops.dconv_forward(dy, w_rot, stride=(1, 1),
-                                          padding=adj,
-                                          dilation=spec.dilation)
-        # General strided+dilated transposed conv: per-tap strided
-        # scatter-add in dense XLA (still zero-free).
-        return ecoflow.transposed_conv_zero_free(
-            dy, w, stride=spec.stride, padding=spec.padding,
-            n_out=_pair(n_out), dilation=spec.dilation)
+        return kops.tconv_phase(dy, w, stride=spec.stride,
+                                padding=spec.padding, n_out=_pair(n_out),
+                                dilation=spec.dilation)
 
     def _pl_filter_grad(x, dy, spec: ConvSpec):
         from repro.kernels import ops as kops

@@ -11,18 +11,22 @@ index t = kx*Kw + ky as its innermost (sequential) axis.  Each grid step
 realizes one per-tap multicast group inside the kernel: the once-padded
 input block is VMEM-resident, the step `dynamic_slice`s its tap window at
 offset (kx*D_h, ky*D_w), subsamples by the output stride, and contracts
-the gathered (Oh*Ow, Cin) slab with that tap's (Cin, Cout_t) weights on
-the MXU.  Partial products accumulate into the fp32 output tile across
-tap steps -- the Pallas equivalent of the paper's local psum register.
+the gathered (Oh*Ow, Cin_t) slab with that tap's (Cin_t, Cout_t) weights
+on the MXU.  Partial products accumulate into the fp32 output tile across
+the sequential (Cin-tile, tap) steps -- the Pallas equivalent of the
+paper's local psum register.
 
-BlockSpec tiling: grid (B, Cout_tiles, T) with T = Kh*Kw innermost; per
-step the kernel holds
-  x block   (1, Hp, Wp, Cin)     -- padded once; index map depends only on
-                                    b, so it is NOT re-fetched across the
-                                    (cout, tap) axes
-  w block   (1, Cin, Co_t)       -- this tap's weights
-  out block (1, Oh, Ow, Co_t)    -- fp32 accumulator, cast host-side
-in VMEM.  Co_t = 128 aligns the matmul to the MXU.
+BlockSpec tiling: grid (B, Cout_t, Cin_t, T) with T = Kh*Kw innermost;
+per step the kernel holds
+  x block   (1, Hp, Wp, Ci_t)    -- padded once; index map depends only on
+                                    (b, ci), so it is NOT re-fetched
+                                    across the tap axis
+  w block   (1, Ci_t, Co_t)      -- this tap's weights for this Cin tile
+  out block (1, Oh, Ow, Co_t)    -- fp32 accumulator across (ci, tap)
+in VMEM.  The Cin axis is a second sequential-accumulation axis, so the
+padded-input working set no longer spans full channel depth (the old
+layout held (1, Hp, Wp, Cin) whole).  Ci_t = Co_t = 128 aligns the
+matmul to the MXU.
 """
 from __future__ import annotations
 
@@ -38,30 +42,32 @@ from repro.kernels.tap_gather import gather_tap, pad_to_tap_windows
 
 def _df_kernel(x_ref, w_ref, out_ref, *, sh: int, sw: int, dh: int, dw: int,
                oh: int, ow: int, kw: int):
-    t = pl.program_id(2)
+    ci = pl.program_id(2)
+    t = pl.program_id(3)
     kx, ky = t // kw, t % kw
-    ci = x_ref.shape[-1]
+    ci_t = x_ref.shape[-1]
     tap = gather_tap(x_ref[0], kx, ky, sh=sh, sw=sw, dh=dh, dw=dw,
-                     oh=oh, ow=ow)                     # (oh, ow, ci)
-    lhs = tap.reshape(oh * ow, ci).astype(jnp.float32)
-    rhs = w_ref[0].astype(jnp.float32)                 # (ci, co_t)
+                     oh=oh, ow=ow)                     # (oh, ow, ci_t)
+    lhs = tap.reshape(oh * ow, ci_t).astype(jnp.float32)
+    rhs = w_ref[0].astype(jnp.float32)                 # (ci_t, co_t)
     prod = jax.lax.dot(lhs, rhs, preferred_element_type=jnp.float32)
     prod = prod.reshape(oh, ow, out_ref.shape[-1])
 
-    @pl.when(t == 0)
+    @pl.when((t == 0) & (ci == 0))
     def _init():
         out_ref[0] = prod
 
-    @pl.when(t > 0)
+    @pl.when((t > 0) | (ci > 0))
     def _acc():
         out_ref[0] += prod
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "dilation",
-                                             "cout_tile", "interpret"))
+                                             "cin_tile", "cout_tile",
+                                             "interpret"))
 def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
                          padding=(0, 0), dilation=(2, 2),
-                         cout_tile: int = 128,
+                         cin_tile: int = 128, cout_tile: int = 128,
                          interpret: bool = True) -> jax.Array:
     """Zero-free dilated forward conv in a SINGLE `pallas_call`.
 
@@ -77,30 +83,39 @@ def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
     spec = ConvSpec.make(stride=(sh, sw), padding=(ph, pw),
                          filter_shape=(Kh, Kw), dilation=(dh, dw))
     Oh, Ow = spec.out_size((Nh, Nw))
-    assert Oh >= 1 and Ow >= 1, (
-        f"input {(Nh, Nw)} too small for effective filter "
-        f"{spec.dilated_filter_shape} at padding {(ph, pw)}")
+    if Oh < 1 or Ow < 1:   # ValueError, not assert: survives `python -O`
+        raise ValueError(
+            f"input {(Nh, Nw)} too small for effective filter "
+            f"{spec.dilated_filter_shape} at padding {(ph, pw)}")
     xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
     xp = pad_to_tap_windows(xp, stride=(sh, sw), dilation=(dh, dw),
                             k=(Kh, Kw), out_size=(Oh, Ow))
     hp, wp = xp.shape[1], xp.shape[2]
     T = Kh * Kw
+    ci_t = min(cin_tile, Cin)
     co_t = min(cout_tile, Cout)
-    n_co = -(-Cout // co_t)
+    n_ci, n_co = -(-Cin // ci_t), -(-Cout // co_t)
     w_taps = w.reshape(T, Cin, Cout)
+    if Cin % ci_t:
+        xp = jnp.pad(xp, ((0, 0),) * 3 + ((0, n_ci * ci_t - Cin),))
+        w_taps = jnp.pad(w_taps,
+                         ((0, 0), (0, n_ci * ci_t - Cin), (0, 0)))
     if Cout % co_t:
-        w_taps = jnp.pad(w_taps, ((0, 0), (0, 0), (0, n_co * co_t - Cout)))
+        w_taps = jnp.pad(w_taps,
+                         ((0, 0), (0, 0), (0, n_co * co_t - Cout)))
     kern = functools.partial(_df_kernel, sh=sh, sw=sw, dh=dh, dw=dw,
                              oh=Oh, ow=Ow, kw=Kw)
     out = pl.pallas_call(
         kern,
-        grid=(B, n_co, T),
+        grid=(B, n_co, n_ci, T),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, Cin), lambda b, co, t: (b, 0, 0, 0)),
-            pl.BlockSpec((1, Cin, co_t), lambda b, co, t: (t, 0, co)),
+            pl.BlockSpec((1, hp, wp, ci_t),
+                         lambda b, co, ci, t: (b, 0, 0, ci)),
+            pl.BlockSpec((1, ci_t, co_t),
+                         lambda b, co, ci, t: (t, ci, co)),
         ],
         out_specs=pl.BlockSpec((1, Oh, Ow, co_t),
-                               lambda b, co, t: (b, 0, 0, co)),
+                               lambda b, co, ci, t: (b, 0, 0, co)),
         out_shape=jax.ShapeDtypeStruct((B, Oh, Ow, n_co * co_t),
                                        jnp.float32),
         interpret=interpret,

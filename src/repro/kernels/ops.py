@@ -1,18 +1,24 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels.
 
 `tconv_phase` is the fused zero-free transposed convolution -- ONE
-`pallas_call` computes all S*S stride phases (phase interleaving is a pure
-reshape/transpose); `dconv_filter_grad` is the zero-free filter gradient
-with in-kernel tap gathering (no K^2 input replication, dilation-aware
-tap offsets); `dconv_forward` is the fused zero-free dilated (atrous)
-forward conv with the dilation taps on the grid.  All run the kernels in
-interpret mode on CPU (the container target) and compiled mode on real
-TPUs.  These are the `pallas` conv backend
-(`repro.core.spec.resolve_backend("pallas")`).
+`pallas_call` computes the input gradient of any (stride, dilation)
+forward conv via the unified (phase, tap) grid; `dconv_filter_grad` is
+the zero-free filter gradient with in-kernel tap gathering (no K^2 input
+replication, dilation-aware tap offsets); `dconv_forward` is the fused
+zero-free dilated (atrous) forward conv with the dilation taps on the
+grid.  All run the kernels in interpret mode on CPU (the container
+target) and compiled mode on real TPUs.  These are the `pallas` conv
+backend (`repro.core.spec.resolve_backend("pallas")`).
+
+The interpret/compiled decision is resolved PER CALL, not at import: an
+import-time `jax.default_backend()` both forces backend initialization as
+a side effect of importing this module and goes stale if the device set
+changes afterwards (e.g. a TPU runtime initialized late, or tests that
+swap platforms).  The kernel entry points are themselves jit'd with
+`interpret` static, so each resolved value gets its own compiled cache
+entry and nothing re-traces per call.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 
@@ -21,41 +27,41 @@ from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
 from repro.kernels.dconv_forward import dconv_forward_pallas
 from repro.kernels.tconv_phase import tconv_fused_pallas
 
-_INTERPRET = jax.default_backend() != "tpu"
+
+def _interpret() -> bool:
+    """True off-TPU (run the kernels in interpret mode), resolved lazily
+    at call time -- see the module docstring."""
+    return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
 def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128):
     """Blockwise causal GQA attention via the Pallas flash kernel."""
     return flash_attention_pallas(q, k, v, causal=causal, blk_q=blk_q,
-                                  blk_k=blk_k, interpret=_INTERPRET)
+                                  blk_k=blk_k, interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out"))
 def tconv_phase(dy: jax.Array, w: jax.Array, *, stride, padding,
-                n_out) -> jax.Array:
-    """Fused zero-free transposed conv: one Pallas launch for all phases.
+                n_out, dilation=(1, 1)) -> jax.Array:
+    """Fused zero-free transposed conv: one Pallas launch for all
+    (phase, tap) pairs of any (stride, dilation) geometry.
 
     dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout) -> dx (B,Nh,Nw,Cin).
     """
     return tconv_fused_pallas(dy, w, stride=tuple(stride),
                               padding=tuple(padding), n_out=tuple(n_out),
-                              interpret=_INTERPRET)
+                              dilation=tuple(dilation),
+                              interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "k",
-                                             "dilation"))
 def dconv_filter_grad(x: jax.Array, dy: jax.Array, *, stride, padding,
                       k, dilation=(1, 1)) -> jax.Array:
     """Zero-free filter gradient via the in-kernel tap-gather matmul."""
     return dconv_filter_grad_pallas(x, dy, stride=tuple(stride),
                                     padding=tuple(padding), k=tuple(k),
                                     dilation=tuple(dilation),
-                                    interpret=_INTERPRET)
+                                    interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding",
-                                             "dilation"))
 def dconv_forward(x: jax.Array, w: jax.Array, *, stride, padding,
                   dilation) -> jax.Array:
     """Fused zero-free dilated (atrous) forward conv: one Pallas launch
@@ -66,4 +72,4 @@ def dconv_forward(x: jax.Array, w: jax.Array, *, stride, padding,
     return dconv_forward_pallas(x, w, stride=tuple(stride),
                                 padding=tuple(padding),
                                 dilation=tuple(dilation),
-                                interpret=_INTERPRET)
+                                interpret=_interpret())

@@ -12,10 +12,12 @@ import jax.numpy as jnp
 from repro.core import ecoflow
 
 
-def tconv_phase_ref(dy, w, *, stride, padding, n_out):
-    """Oracle for the phase-decomposed transposed convolution kernel."""
+def tconv_phase_ref(dy, w, *, stride, padding, n_out, dilation=(1, 1)):
+    """Oracle for the unified (phase, tap) transposed-convolution kernel
+    (any stride x dilation pair)."""
     return ecoflow.transposed_conv_zero_free(
-        dy, w, stride=stride, padding=padding, n_out=tuple(n_out))
+        dy, w, stride=stride, padding=padding, n_out=tuple(n_out),
+        dilation=tuple(dilation))
 
 
 def dconv_filter_grad_ref(x, dy, *, stride, padding, k, dilation=(1, 1)):

@@ -1,39 +1,45 @@
-"""Pallas TPU kernel: fused phase-decomposed (zero-free) transposed conv.
+"""Pallas TPU kernel: fused zero-free transposed conv, stride x dilation
+general -- the unified (phase, tap) input-gradient kernel.
 
-ONE `pallas_call` computes all S_h*S_w phases of the EcoFlow transposed
-convolution.  The rotated sub-filters are packed into a single
+ONE `pallas_call` computes the input gradient of a forward conv with ANY
+(stride S, filter dilation D) pair.  The decomposition composes the
+stride-phase view of the plain transposed conv with the per-tap
+enumeration of the dilated-forward kernel:
 
-    w_packed : (S_h*S_w, KP, KQ, Cout, Cin)      KP = ceil(Kh/S_h), ...
+    dx[i*S + kx*D - P] += dy[i] . W[kx]^T
 
-tensor (ragged phases zero-padded at the tail taps before rotation), the
-phase index is a grid dimension, and each grid step writes its phase's
-output block into a *phase-major* output `(B, S_h*S_w, ho, wo, Cin)`.
-Host-side assembly is then a pure reshape/transpose -- the strided
-interleave `dx[p::S, q::S] = phase_pq` falls out of
+so tap kx lands in output residue class (kx*D) mod S.  Residues repeat
+with period S/gcd(S, D) in kx, hence taps group by kx mod period; within
+residue class `a`, tap kx = a + u*period lands on phase row
+m = i + (a*D)//S + u*(D/gcd) -- each phase is a stride-1 correlation of
+dy with a (D/gcd)-dilated sub-filter.  At D == 1 (period == S, step == 1)
+this IS the classic EcoFlow stride-phase decomposition; at S == 1 it is
+the self-adjoint per-tap atrous form; in between it is the general
+strided+dilated transposed conv that previously fell back to the
+multi-launch XLA scatter path.  No dilation zero of either kind (stride
+upsampling or filter dilation) is ever stored, moved, or multiplied.
 
-    (B, ho, S_h, wo, S_w, Cin) -> (B, ho*S_h, wo*S_w, Cin)
+TPU mapping (the EcoFlow -> MXU translation, see DESIGN.md Sec. 2/2.5):
+  * the paper's phase enumeration (symbolic outer product grouped by
+    output residue) becomes the phase grid axis;
+  * the per-tap multicast group becomes a `dynamic_slice` window of the
+    VMEM-resident padded dy block at the tap's (base + u*step) offset;
+  * the vertical psum chain becomes the fp32 accumulator tile, summed
+    sequentially over the (Cout-tile, tap) grid axes;
+  * grouping/expansion onto the array becomes channel tiling.
 
-because ho = ceil(F_h/S_h) exactly (F = S*(O-1)+K, the pre-slice output).
-`dy` is padded ONCE by (KP-1, KQ-1) -- not once per phase -- and the
-S*S scatter-writes of the multi-launch formulation disappear entirely.
-
-TPU mapping (the EcoFlow -> MXU translation, see DESIGN.md Sec. 2):
-  * the paper's per-PE MAC schedule (one weight broadcast per cycle, one
-    error element per PE) becomes a static tap loop of
-    (spatial x Cout) @ (Cout x Cin) MXU matmuls;
-  * the paper's multicast groups become the shifted static slices of the
-    VMEM-resident dy block;
-  * the paper's vertical psum chains become the fp32 accumulator tile;
-  * the paper's phase enumeration (the symbolic outer product grouped by
-    output residue (p, q)) becomes the leading grid dimension.
-
-BlockSpec tiling: grid (B, S*S, Cin_tiles).  Per grid step the kernel holds
-  dy block   (1, Hp, Wp, Cout)            -- padded once, reused over phases
-  w block    (1, KP, KQ, Cout, Cin_t)     -- this phase's packed sub-filter
-  out block  (1, 1, ho, wo, Cin_t)        -- fp32 accumulate, cast on store
-in VMEM.  Channel tile Cin_t (default 128) keeps the working set within
-VMEM for the layer sizes the paper evaluates (<=130x130 spatial); matmul
-dims are multiples of 128 whenever Cout/Cin are, which is MXU-aligned.
+BlockSpec tiling: grid (B, T, Cin_t, Cout_t, TK) with T = non-empty
+phases, TK = taps per phase; per grid step the kernel holds
+  dy block  (1, Hp, Wp, Co_t)     -- padded once; index map (b, co) only,
+                                     so it is NOT re-fetched across the
+                                     phase-local (tap) axis
+  w block   (1, 1, Co_t, Ci_t)    -- this (phase, tap)'s packed weights
+  out block (1, 1, ho, wo, Ci_t)  -- fp32 accumulator across (co, tap)
+in VMEM.  Neither block scales with full channel depth: dy carries a
+Cout tile and the output a Cin tile (default 128, MXU-aligned).  Output
+is phase-major (B, T, ho, wo, Cin); host-side assembly places each phase
+plane at its stride residue (a gather -- identity at D == 1) and
+interleaves with one reshape/transpose, exactly as before.
 """
 from __future__ import annotations
 
@@ -47,123 +53,176 @@ from repro.core import ecoflow
 from repro.core.spec import ConvSpec, _pair
 
 
-def pack_phase_filters(w: jax.Array, stride) -> jax.Array:
-    """Pack the S*S rotated sub-filters into one uniform tensor.
+def pack_phase_filters(w: jax.Array, stride, dilation=(1, 1)) -> jax.Array:
+    """Pack the rotated per-phase sub-filters into one uniform tensor.
 
     w: (Kh, Kw, Cin, Cout) forward filter ->
-    (S_h*S_w, KP, KQ, Cout, Cin) with KP = ceil(Kh/S_h), KQ = ceil(Kw/S_w).
+    (TPh*TPw, KP, KQ, Cout, Cin) with TP = min(K, period),
+    KP = ceil(K/period), period = S/gcd(S, D) per axis.
 
     The rotation convention (180deg flip + Cout->Cin channel transpose)
     comes from `ecoflow.phase_subfilters` -- the single source of truth
-    shared with the dense XLA backend; this function only adds the
-    uniform-shape packing: each already-flipped sub-filter is zero-padded
-    at the FRONT taps (front-pad-after-flip == tail-pad-before-flip, the
-    identity `tests/test_kernels.py` pins).  Only the
-    min(S_h,K_h) * min(S_w,K_w) NON-empty phases are packed: phases beyond
-    the filter extent (stride > K) are structural zeros of the upsampling
-    -- the wrapper zero-fills their output rows host-side instead of
-    spending grid steps on all-zero sub-filters.  The intra-phase tap
-    padding of ragged phases (K % S != 0) stays: it costs O(K^2) extra
-    weight words per phase, not the O(N^2 S^2) dilation zeros the
-    dataflow eliminates, and buys a uniform single-launch grid.
+    shared with the dense XLA backend -- applied at the tap-grouping
+    PERIOD rather than the stride (they coincide at dilation 1); this
+    function only adds the uniform-shape packing: each already-flipped
+    sub-filter is zero-padded at the FRONT taps (front-pad-after-flip ==
+    tail-pad-before-flip, the identity `tests/test_kernels.py` pins).
+    After the flip + front-pad, slot uf of phase `a` holds tap
+    kx = a + (KP-1-uf)*period (zero when kx >= K).  Only the non-empty
+    phases are packed: residue classes beyond the filter extent
+    (period > K) are structural zeros of the upsampling -- the wrapper
+    zero-fills their output rows host-side instead of spending grid steps
+    on all-zero sub-filters.  The intra-phase tap padding of ragged
+    phases (K % period != 0) stays: it costs O(K^2) extra weight words
+    per phase, not the O(N^2 S^2) dilation zeros the dataflow eliminates,
+    and buys a uniform single-launch grid.
     """
     sh, sw = _pair(stride)
+    dh, dw = _pair(dilation)
     Kh, Kw, _, _ = w.shape
-    KP, KQ = -(-Kh // sh), -(-Kw // sw)
-    subs = ecoflow.phase_subfilters(w, (sh, sw))
+    spec = ConvSpec.make(stride=(sh, sw), filter_shape=(Kh, Kw),
+                         dilation=(dh, dw))
+    per_h, per_w = spec.tap_phase_period
+    KP, KQ = spec.taps_per_phase
+    subs = ecoflow.phase_subfilters(w, (per_h, per_w))
     phases = []
-    for p in range(min(sh, Kh)):
-        for q in range(min(sw, Kw)):
-            sub = subs[p][q]                         # (kp, kq, Cout, Cin)
+    for a in range(min(per_h, Kh)):
+        for b in range(min(per_w, Kw)):
+            sub = subs[a][b]                         # (kp, kq, Cout, Cin)
             kp, kq = sub.shape[0], sub.shape[1]
             sub = jnp.pad(sub, ((KP - kp, 0), (KQ - kq, 0), (0, 0), (0, 0)))
             phases.append(sub)
     return jnp.stack(phases)
 
 
-def _fused_phase_kernel(dy_ref, w_ref, out_ref, *, kp: int, kq: int,
-                        ho: int, wo: int):
-    """One phase per grid step: a stride-1 full correlation of the padded
-    dy block with this phase's packed sub-filter, as a static tap loop of
-    MXU matmuls with an fp32 VMEM accumulator.  Zero-padded taps of ragged
-    phases multiply by zero -- the loop body is uniform across phases."""
-    acc = jnp.zeros((ho * wo, out_ref.shape[-1]), dtype=jnp.float32)
-    for a in range(kp):
-        for b in range(kq):
-            # Shifted window of the padded dy block: (ho, wo, Cout).
-            win = dy_ref[0, a:a + ho, b:b + wo, :]
-            lhs = win.reshape(ho * wo, win.shape[-1]).astype(jnp.float32)
-            rhs = w_ref[0, a, b].astype(jnp.float32)
-            acc += jax.lax.dot(lhs, rhs,
-                               preferred_element_type=jnp.float32)
-    out_ref[0, 0] = acc.reshape(ho, wo,
-                                out_ref.shape[-1]).astype(out_ref.dtype)
+def _fused_tap_kernel(dy_ref, w_ref, out_ref, *, tpw: int, kp: int, kq: int,
+                      sh: int, sw: int, dh: int, dw: int, step_h: int,
+                      step_w: int, pad_h: int, pad_w: int, ho: int, wo: int):
+    """One (phase, tap) per sequential grid step: `dynamic_slice` the tap's
+    window out of the VMEM-resident padded dy block, one MXU matmul with
+    that tap's (Cout_t, Cin_t) weights, accumulate into the fp32 phase
+    tile across the (Cout-tile, tap) axes.  Zero-padded taps of ragged
+    phases multiply by zero -- the step body is uniform across phases."""
+    t = pl.program_id(1)
+    co = pl.program_id(3)
+    k = pl.program_id(4)
+    a, b = t // tpw, t % tpw
+    uf, vf = k // kq, k % kq
+    # Flipped-slot tap index u = KP-1-uf (see pack_phase_filters): window
+    # offset base(a) + u*step, shifted into the padded frame.
+    start_h = pad_h - (a * dh) // sh - (kp - 1 - uf) * step_h
+    start_w = pad_w - (b * dw) // sw - (kq - 1 - vf) * step_w
+    win = jax.lax.dynamic_slice(
+        dy_ref[0], (start_h, start_w, 0), (ho, wo, dy_ref.shape[-1]))
+    lhs = win.reshape(ho * wo, win.shape[-1]).astype(jnp.float32)
+    rhs = w_ref[0, 0].astype(jnp.float32)            # (co_t, ci_t)
+    prod = jax.lax.dot(lhs, rhs, preferred_element_type=jnp.float32)
+    prod = prod.reshape(ho, wo, out_ref.shape[-1])
+
+    @pl.when((k == 0) & (co == 0))
+    def _init():
+        out_ref[0, 0] = prod
+
+    @pl.when((k > 0) | (co > 0))
+    def _acc():
+        out_ref[0, 0] += prod
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out",
-                                             "cin_tile", "interpret"))
+                                             "dilation", "cin_tile",
+                                             "cout_tile", "interpret"))
 def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
-                       n_out=None, cin_tile: int = 128,
+                       n_out=None, dilation=(1, 1), cin_tile: int = 128,
+                       cout_tile: int = 128,
                        interpret: bool = True) -> jax.Array:
-    """Zero-free transposed conv in a SINGLE `pallas_call`.
+    """Zero-free transposed conv in a SINGLE `pallas_call`, any (S, D).
 
     dy: (B, Oh, Ow, Cout) error / generator input.
-    w:  (Kh, Kw, Cin, Cout) forward filter.
+    w:  (Kh, Kw, Cin, Cout) forward filter (undilated taps; `dilation` is
+        the forward filter dilation D whose adjoint this computes).
     Returns (B, Nh, Nw, Cin) where (Nh, Nw) = n_out (default exact fit).
     """
     sh, sw = _pair(stride)
     ph, pw = _pair(padding)
+    dh, dw = _pair(dilation)
     B, Oh, Ow, Cout = dy.shape
     Kh, Kw, Cin, _ = w.shape
     spec = ConvSpec.make(stride=(sh, sw), padding=(ph, pw),
-                         filter_shape=(Kh, Kw))
+                         filter_shape=(Kh, Kw), dilation=(dh, dw))
     if n_out is None:
         n_out = spec.input_size((Oh, Ow))
     Nh, Nw = _pair(n_out)
-    Fh, Fw = spec.full_size((Oh, Ow))
-    KP, KQ = spec.packed_phase_shape
-    # Grid only the non-empty phases (stride > K leaves sh*sw - TPh*TPw
-    # structurally-zero phases whose rows are filled host-side).
-    TPh, TPw = min(sh, Kh), min(sw, Kw)
-    T = TPh * TPw
+    Fh, Fw = spec.full_size((Oh, Ow))    # S(O-1) + D(K-1) + 1 pre-slice
+    step_h, step_w = spec.tap_phase_step
+    TPh, TPw = spec.n_tap_phases
+    KP, KQ = spec.taps_per_phase
+    T, TK = TPh * TPw, KP * KQ
 
-    w_packed = pack_phase_filters(w, (sh, sw))       # (T, KP, KQ, Cout, Cin)
-    # "Full" correlation: pad dy ONCE (uniform across phases).
-    dy_pad = jnp.pad(dy, ((0, 0), (KP - 1, KP - 1), (KQ - 1, KQ - 1),
+    w_packed = pack_phase_filters(w, (sh, sw), (dh, dw))
+    # (T, KP, KQ, Cout, Cin) -> flat tap axis for the (t, k) block index.
+    w_flat = w_packed.reshape(T, TK, Cout, Cin)
+
+    # Pad dy ONCE (uniform across phases): front by the largest tap offset
+    # base(TPh-1) + (KP-1)*step, tail so every phase window of ho rows fits.
+    pad_h = spec.tap_phase_base(TPh - 1, 0) + (KP - 1) * step_h
+    pad_w = spec.tap_phase_base(TPw - 1, 1) + (KQ - 1) * step_w
+    ho, wo = -(-Fh // sh), -(-Fw // sw)  # uniform phase-plane extent
+    dy_pad = jnp.pad(dy, ((0, 0), (pad_h, ho - Oh), (pad_w, wo - Ow),
                           (0, 0)))
     hp, wp = dy_pad.shape[1], dy_pad.shape[2]
-    ho, wo = Oh + KP - 1, Ow + KQ - 1                # == ceil(F/S) per axis
 
-    ct = min(cin_tile, Cin)
-    n_ct = -(-Cin // ct)
-    if Cin % ct:
-        w_packed = jnp.pad(w_packed,
-                           ((0, 0),) * 4 + ((0, n_ct * ct - Cin),))
-    kern = functools.partial(_fused_phase_kernel, kp=KP, kq=KQ, ho=ho, wo=wo)
+    ci_t = min(cin_tile, Cin)
+    co_t = min(cout_tile, Cout)
+    n_ci, n_co = -(-Cin // ci_t), -(-Cout // co_t)
+    if Cout % co_t:
+        dy_pad = jnp.pad(dy_pad, ((0, 0),) * 3 + ((0, n_co * co_t - Cout),))
+        w_flat = jnp.pad(w_flat, ((0, 0),) * 2 +
+                         ((0, n_co * co_t - Cout), (0, 0)))
+    if Cin % ci_t:
+        w_flat = jnp.pad(w_flat, ((0, 0),) * 3 + ((0, n_ci * ci_t - Cin),))
+
+    kern = functools.partial(_fused_tap_kernel, tpw=TPw, kp=KP, kq=KQ,
+                             sh=sh, sw=sw, dh=dh, dw=dw, step_h=step_h,
+                             step_w=step_w, pad_h=pad_h, pad_w=pad_w,
+                             ho=ho, wo=wo)
     out = pl.pallas_call(
         kern,
-        grid=(B, T, n_ct),
+        grid=(B, T, n_ci, n_co, TK),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, Cout), lambda b, t, c: (b, 0, 0, 0)),
-            pl.BlockSpec((1, KP, KQ, Cout, ct),
-                         lambda b, t, c: (t, 0, 0, 0, c)),
+            pl.BlockSpec((1, hp, wp, co_t),
+                         lambda b, t, ci, co, k: (b, 0, 0, co)),
+            pl.BlockSpec((1, 1, co_t, ci_t),
+                         lambda b, t, ci, co, k: (t, k, co, ci)),
         ],
-        out_specs=pl.BlockSpec((1, 1, ho, wo, ct),
-                               lambda b, t, c: (b, t, 0, 0, c)),
-        out_shape=jax.ShapeDtypeStruct((B, T, ho, wo, n_ct * ct), dy.dtype),
+        out_specs=pl.BlockSpec((1, 1, ho, wo, ci_t),
+                               lambda b, t, ci, co, k: (b, t, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((B, T, ho, wo, n_ci * ci_t),
+                                       jnp.float32),
         interpret=interpret,
-    )(dy_pad, w_packed)
+    )(dy_pad, w_flat)
 
-    # Phase-major -> strided interleave as ONE reshape/transpose chain:
-    # rows of dx_full are r = x*S_h + p  <->  (x, p) of phase row x.
+    # Phase-major -> strided interleave.  Phase (a, b) lives at stride
+    # residue ((a*D) mod S, (b*D) mod S); residues outside the image
+    # (gcd(S, D) > 1, or period > K) are structural zeros of the
+    # upsampling.  Place the planes with a static gather (identity at
+    # D == 1 with S <= K), then one reshape/transpose chain: rows of
+    # dx_full are r = m*S + p  <->  (m, p) of phase row m.
     out = out[..., :Cin].reshape(B, TPh, TPw, ho, wo, Cin)
-    if TPh < sh or TPw < sw:   # stride > K: structural-zero phase rows
-        out = jnp.pad(out, ((0, 0), (0, sh - TPh), (0, sw - TPw),
-                            (0, 0), (0, 0), (0, 0)))
+    idx_h = [TPh] * sh   # sentinel TPh/TPw -> all-zero plane
+    for a in range(TPh):
+        idx_h[spec.tap_phase_residue(a, 0)] = a
+    idx_w = [TPw] * sw
+    for b in range(TPw):
+        idx_w[spec.tap_phase_residue(b, 1)] = b
+    if (TPh, TPw) != (sh, sw) or idx_h != list(range(sh)) \
+            or idx_w != list(range(sw)):
+        out = jnp.pad(out, ((0, 0), (0, 1), (0, 1)) + ((0, 0),) * 3)
+        out = jnp.take(out, jnp.asarray(idx_h), axis=1)
+        out = jnp.take(out, jnp.asarray(idx_w), axis=2)
     dx_full = out.transpose(0, 3, 1, 4, 2, 5).reshape(
         B, ho * sh, wo * sw, Cin)[:, :Fh, :Fw, :]
     # Non-exact-fit inputs (forward ignored tail rows/cols): zero-pad tail.
     eh, ew = max(0, ph + Nh - Fh), max(0, pw + Nw - Fw)
     if eh or ew:
         dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
-    return dx_full[:, ph:ph + Nh, pw:pw + Nw, :]
+    return dx_full[:, ph:ph + Nh, pw:pw + Nw, :].astype(dy.dtype)

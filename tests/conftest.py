@@ -62,6 +62,17 @@ def pallas_grids(fn, *args):
             if e.primitive.name == "pallas_call"]
 
 
+def pallas_block_shapes(fn, *args):
+    """Per pallas_call in the traced jaxpr: the list of block shapes of
+    every in/out BlockSpec (the kernel's VMEM working set)."""
+    import jax
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return [[tuple(bm.block_shape)
+             for bm in e.params["grid_mapping"].block_mappings]
+            for e in walk_eqns(jaxpr.jaxpr)
+            if e.primitive.name == "pallas_call"]
+
+
 def max_intermediate_size(fn, *args) -> int:
     """Largest array (elements) produced by any eqn in the traced jaxpr."""
     import jax

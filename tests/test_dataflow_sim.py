@@ -90,14 +90,38 @@ def test_stride1_near_parity():
 
 
 def test_table6_end_to_end_bands():
-    """End-to-end CNN training 7-85% faster (paper Table 6)."""
+    """End-to-end CNN training 7-85% faster (paper Table 6): every network
+    lands inside the paper's [1.07, 1.85] speedup band with the profiled
+    stride-1 fraction carried explicitly at parity in the Amdahl
+    combination."""
     paper = {"alexnet": 1.83, "resnet50": 1.07, "shufflenet": 1.08,
              "inception": 1.08, "xception": 1.11, "mobilenet": 1.09}
     for net, ref in paper.items():
         v = ds.end_to_end_speedup(net, "ecoflow")
-        assert 1.05 <= v <= 2.0, (net, v)
+        assert 1.07 <= v <= 1.85, (net, v)
         # within ~25% of the paper's number
         assert abs(v - ref) / ref < 0.25, (net, v, ref)
+
+
+def test_end_to_end_fractions_wired_and_valid():
+    """The profiled fractions are a valid partition (strided + stride-1
+    <= 1) and the stride-1 share participates in the Amdahl combination
+    at parity: growing it while shrinking the strided share strictly
+    lowers the end-to-end speedup, and invalid fractions are rejected."""
+    for frac_strided, _, frac_s1 in ds.END2END_FRACTIONS.values():
+        assert 0.0 <= frac_strided and 0.0 <= frac_s1
+        assert frac_strided + frac_s1 <= 1.0
+    base = ds.END2END_FRACTIONS["alexnet"]
+    try:
+        ds.END2END_FRACTIONS["alexnet"] = (base[0] / 2, base[1],
+                                           base[2] + base[0] / 2)
+        shifted = ds.end_to_end_speedup("alexnet", "ecoflow")
+        ds.END2END_FRACTIONS["alexnet"] = (0.9, base[1], 0.2)
+        with pytest.raises(ValueError, match="fractions"):
+            ds.end_to_end_speedup("alexnet", "ecoflow")
+    finally:
+        ds.END2END_FRACTIONS["alexnet"] = base
+    assert shifted < ds.end_to_end_speedup("alexnet", "ecoflow")
 
 
 def test_table8_gan_bands():

@@ -1,13 +1,15 @@
-"""Property-based backend-parity grid for the dilated-forward dataflow.
+"""Property-based backend-parity grid for the dilated-conv dataflows.
 
 Hypothesis-driven (real install or tests/_hypothesis_shim.py fallback)
 sampling of (stride, dilation, K, padding, B, Cin, Cout, odd n) asserting
 forward + gradient parity of every backend against `reference` (= jax.grad
-of `lax.conv_general_dilated` with `rhs_dilation`), plus the structural
+of `lax.conv_general_dilated` with `rhs_dilation`) -- including the
+GENERAL strided+dilated (S > 1 AND D > 1) input gradient, which the
+unified (phase, tap) kernel now runs fused -- plus the structural
 guarantees of the zero-free paths: exactly ONE `pallas_call` per dilated
-forward, and no materialized `rhs_dilation` zeros anywhere in the
-zero-free lowerings (no rhs-dilated conv primitive, no intermediate at the
-dilated-filter extent).
+forward and per input gradient, no scatter, and no materialized dilation
+zeros anywhere in the zero-free lowerings (no lhs-/rhs-dilated conv
+primitive, no intermediate at the dilated-filter extent).
 """
 from __future__ import annotations
 
@@ -81,6 +83,38 @@ def test_dilated_parity_grid(seed, s, d, k, p, b, ci, co, extra):
                                 f"(s={s},d={d},k={k},p={p},n={n})")
 
 
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), s=st.sampled_from([2, 3]),
+       d=st.sampled_from([2, 3]), k=st.sampled_from([2, 3]),
+       p=st.integers(0, 2), b=st.sampled_from([2, 3]),
+       ci=st.sampled_from([1, 3]), co=st.sampled_from([1, 4]),
+       extra=st.integers(0, 4))
+def test_strided_dilated_input_grad_parity_grid(seed, s, d, k, p, b, ci,
+                                                co, extra):
+    """The GENERAL strided+dilated (S > 1 AND D > 1) input gradient --
+    previously the XLA scatter fallback on the `pallas` backend -- matches
+    `reference` on every backend over random (S, D, K, padding, B > 1,
+    Cin, Cout, odd n) geometries, both through the backend interface and
+    through `jax.grad`."""
+    k_eff = d * (k - 1) + 1
+    n = k_eff + s + extra           # guarantees Oh >= 2, incl. odd sizes
+    spec, x, w, dy = _case(seed, b, n, k, s, p, d, ci, co)
+
+    _, vjp = jax.vjp(lambda x_: _reference(x_, w, s, p, d), x)
+    dx_ref, = vjp(dy)
+    for backend in BACKENDS:
+        dx = resolve_backend(backend).input_grad(dy, w, spec, (n, n))
+        assert_allclose(dx, dx_ref, rtol=2e-4, atol=2e-4,
+                        err_msg=f"{backend} input_grad "
+                                f"(s={s},d={d},k={k},p={p},b={b},n={n})")
+        loss = lambda x_, be=backend: jnp.vdot(
+            ecoflow_dilated_conv(x_, w, s, p, d, be), dy)
+        dx_g = jax.grad(loss)(x)
+        assert_allclose(dx_g, dx_ref, rtol=2e-4, atol=2e-4,
+                        err_msg=f"{backend} grad dx "
+                                f"(s={s},d={d},k={k},p={p},b={b},n={n})")
+
+
 def test_convspec_accepts_dilation():
     """`ConvSpec.make(dilation=2)` constructs (the old reserved-geometry
     rejection is gone) and derives the effective receptive field."""
@@ -117,18 +151,49 @@ def test_dilated_forward_single_pallas_launch(rng, S, D):
     assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
-def test_dilated_backward_stays_fused(rng):
-    """Stride-1 atrous conv with P <= D*(K-1): forward, input-grad (via
-    the self-adjoint rotation trick), and filter-grad are one fused
-    launch each -- a full jax.grad traces exactly 3 pallas_calls."""
-    K, D, P, Ci, Co = 3, 2, 2, 3, 3
+@pytest.mark.parametrize("S,P", [(1, 2), (2, 1)])
+def test_dilated_backward_stays_fused(rng, S, P):
+    """Atrous conv backward on the `pallas` backend: forward, input-grad
+    (the unified (phase, tap) kernel -- stride 1 AND the general strided
+    case alike), and filter-grad are one fused launch each -- a full
+    jax.grad traces exactly 3 pallas_calls."""
+    K, D, Ci, Co = 3, 2, 3, 3
     N = 11
     x = jnp.asarray(rng.normal(size=(1, N, N, Ci)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
     loss = lambda x_, w_: jnp.sum(
-        ecoflow_dilated_conv(x_, w_, 1, P, D, "pallas") ** 2)
+        ecoflow_dilated_conv(x_, w_, S, P, D, "pallas") ** 2)
     g = lambda x_, w_: jax.grad(loss, argnums=(0, 1))(x_, w_)
     assert _count_pallas_calls(g, x, w) == 3
+
+
+@pytest.mark.parametrize("S,D", [(2, 2), (2, 3), (3, 2), (3, 3)])
+def test_strided_dilated_input_grad_single_launch(rng, S, D):
+    """Structural pin of the tentpole: the general strided+dilated input
+    gradient on the `pallas` backend executes as exactly ONE pallas_call,
+    with NO scatter and NO lhs-/rhs-dilated conv anywhere in the traced
+    jaxpr (no materialized dilation zeros of either kind) -- and matches
+    the multi-launch xla_zero_free decomposition it replaced."""
+    K, P, Ci, Co = 3, 1, 3, 4
+    spec = ConvSpec.make(stride=S, padding=P, filter_shape=K, dilation=D)
+    O = 4
+    n_out = spec.input_size((O, O))
+    dy = jnp.asarray(rng.normal(size=(2, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    fn = lambda dy_, w_: resolve_backend("pallas").input_grad(
+        dy_, w_, spec, n_out)
+    assert _count_pallas_calls(fn, dy, w) == 1
+    jaxpr = jax.make_jaxpr(fn)(dy, w)
+    for e in _walk_eqns(jaxpr.jaxpr):
+        assert not e.primitive.name.startswith("scatter"), (
+            f"(S={S},D={D}): scatter in the fused pallas input-grad path")
+        if e.primitive.name == "conv_general_dilated":
+            assert tuple(e.params["rhs_dilation"]) == (1, 1), (S, D)
+            assert tuple(e.params["lhs_dilation"]) == (1, 1), (S, D)
+    got = fn(dy, w)
+    want = resolve_backend("xla_zero_free").input_grad(dy, w, spec, n_out)
+    assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                    err_msg=f"pallas vs xla_zero_free (S={S},D={D})")
 
 
 @pytest.mark.parametrize("backend", ["xla_zero_free", "pallas"])
@@ -168,8 +233,9 @@ def test_no_materialized_dilation_zeros(rng, backend):
 
 def test_dilated_input_grad_honors_n_out(rng):
     """Backend-interface contract: input_grad crops/pads to ANY requested
-    n_out identically on every backend -- the fused stride-1 pallas path
-    must fall back rather than silently return its natural extent."""
+    n_out identically on every backend -- the unified pallas kernel's
+    wrapper must crop/pad rather than silently return its natural
+    extent."""
     K, S, P, D, Ci, Co = 3, 1, 1, 2, 2, 3
     spec = ConvSpec.make(stride=S, padding=P, filter_shape=K, dilation=D)
     N = 11

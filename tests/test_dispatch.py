@@ -38,6 +38,71 @@ def test_registry_contents():
         resolve_backend("cuda")
 
 
+def test_convspec_rejects_degenerate_geometry():
+    """`ConvSpec.make` raises ValueError (NOT assert -- must survive
+    `python -O`) on degenerate geometry; previously stride=0 surfaced as
+    a ZeroDivisionError deep inside the phase math."""
+    for kwargs in [dict(stride=0), dict(stride=(2, 0)), dict(stride=-1),
+                   dict(padding=-1), dict(padding=(0, -2)),
+                   dict(filter_shape=0), dict(dilation=0)]:
+        with pytest.raises(ValueError):
+            ConvSpec.make(**kwargs)
+    with pytest.raises(ValueError, match="2 elements"):
+        ConvSpec.make(stride=(1, 2, 3))
+    # ... and through the public conv entry point.
+    x = jnp.zeros((1, 5, 5, 2), jnp.float32)
+    w = jnp.zeros((3, 3, 2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="stride"):
+        ecoflow_conv(x, w, 0, 0)
+
+
+def test_geometry_guards_are_valueerrors_not_asserts():
+    """The too-small-input / missing-k guards of the zero-free paths are
+    ValueErrors, so optimized bytecode cannot strip them."""
+    from repro.kernels.dconv_forward import dconv_forward_pallas
+    x = jnp.zeros((1, 3, 3, 2), jnp.float32)
+    w = jnp.zeros((3, 3, 2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="too small"):
+        ecoflow.dilated_forward_zero_free(x, w, stride=1, padding=0,
+                                          dilation=4)
+    with pytest.raises(ValueError, match="too small"):
+        dconv_forward_pallas(x, w, stride=(1, 1), padding=(0, 0),
+                             dilation=(4, 4), interpret=True)
+    with pytest.raises(ValueError, match="required"):
+        ecoflow.dilated_conv_filter_grad_zero_free(
+            x, jnp.zeros((1, 1, 1, 2), jnp.float32), stride=(1, 1),
+            padding=0, k=None)
+
+
+def test_geometry_guards_survive_python_O():
+    """End to end under `python -O` (asserts stripped): the geometry
+    guards still fire as ValueErrors instead of letting the zero-free
+    paths mis-slice."""
+    import subprocess
+    import sys
+    code = (
+        "import jax.numpy as jnp\n"
+        "from repro.core import ecoflow\n"
+        "from repro.core.spec import ConvSpec\n"
+        "x = jnp.zeros((1, 3, 3, 2), jnp.float32)\n"
+        "w = jnp.zeros((3, 3, 2, 2), jnp.float32)\n"
+        "for fn in (lambda: ecoflow.dilated_forward_zero_free(\n"
+        "               x, w, stride=1, padding=0, dilation=4),\n"
+        "           lambda: ConvSpec.make(stride=0),\n"
+        "           lambda: ecoflow.dilated_conv_filter_grad_zero_free(\n"
+        "               x, x, stride=(1, 1), padding=0, k=None)):\n"
+        "    try:\n"
+        "        fn()\n"
+        "    except ValueError:\n"
+        "        pass\n"
+        "    else:\n"
+        "        raise SystemExit('guard did not fire under -O')\n"
+        "print('OK')\n")
+    proc = subprocess.run([sys.executable, "-O", "-c", code],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0 and "OK" in proc.stdout, proc.stderr
+
+
 def test_convspec_geometry():
     s = ConvSpec.make(stride=(2, 3), padding=(1, 0), filter_shape=(5, 4))
     assert s.out_size((11, 12)) == ((11 + 2 - 5) // 2 + 1, (12 - 4) // 3 + 1)
@@ -51,6 +116,43 @@ def test_convspec_geometry():
     s2 = ConvSpec.make(stride=4, padding=0, filter_shape=2)
     assert s2.phase_filter_shape(3, 3) == (0, 0)
     assert s2.useful_taps() == 4
+
+
+def test_convspec_tap_phase_geometry():
+    """Stride x dilation general tap-phase bookkeeping: taps group by
+    kx mod (S/gcd(S, D)), residues (kx*D) mod S are distinct within one
+    period, every tap lands in exactly one (phase, slot), and the D == 1
+    view coincides with the classic stride-phase properties."""
+    s = ConvSpec.make(stride=4, filter_shape=3, dilation=2)   # gcd 2
+    assert s.tap_phase_period == (2, 2)
+    assert s.tap_phase_step == (1, 1)
+    assert s.n_tap_phases == (2, 2)
+    assert s.taps_per_phase == (2, 2)
+    assert [s.tap_phase_residue(a, 0) for a in range(2)] == [0, 2]
+    assert [s.tap_phase_base(a, 0) for a in range(2)] == [0, 0]
+    s = ConvSpec.make(stride=3, filter_shape=3, dilation=2)   # coprime
+    assert s.tap_phase_period == (3, 3) and s.tap_phase_step == (2, 2)
+    assert [s.tap_phase_residue(a, 0) for a in range(3)] == [0, 2, 1]
+    assert [s.tap_phase_base(a, 0) for a in range(3)] == [0, 0, 1]
+    # D == 1 degenerates to the stride-phase view.
+    s = ConvSpec.make(stride=(2, 3), filter_shape=(5, 4))
+    assert s.tap_phase_period == s.stride
+    assert s.tap_phase_step == (1, 1)
+    assert s.taps_per_phase == s.packed_phase_shape
+    assert s.n_tap_phases == (min(5, 2), min(4, 3))
+    # S == 1: one phase holding every tap at spacing D.
+    s = ConvSpec.make(stride=1, filter_shape=3, dilation=4)
+    assert s.tap_phase_period == (1, 1) and s.n_tap_phases == (1, 1)
+    assert s.taps_per_phase == (3, 3) and s.tap_phase_step == (4, 4)
+    # Exhaustiveness: every tap kx in exactly one (phase, slot) pair.
+    for S, D, K in [(4, 2, 5), (3, 2, 7), (6, 4, 5), (2, 2, 3)]:
+        s = ConvSpec.make(stride=S, filter_shape=K, dilation=D)
+        per, = set(s.tap_phase_period)
+        kp, = set(s.taps_per_phase)
+        seen = sorted(a + u * per
+                      for a in range(s.n_tap_phases[0])
+                      for u in range(kp) if a + u * per < K)
+        assert seen == list(range(K)), (S, D, K, seen)
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,8 @@ from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
 from repro.kernels.dconv_forward import dconv_forward_pallas
 from repro.kernels.tconv_phase import pack_phase_filters, tconv_fused_pallas
 
-from conftest import assert_allclose
+from conftest import (assert_allclose, pallas_block_shapes,
+                      pallas_grids as _pallas_grids)
 
 
 # ---------------------------------------------------------------------------
@@ -31,6 +32,7 @@ TCONV_SWEEP = [
     (1, 6, 2, 4, 0, 5, 5),       # K < S: empty phases exist
     (2, 4, 1, 1, 0, 4, 4),       # pointwise stride 1
     (1, 8, 5, 2, 2, 130, 7),     # Cin > default tile
+    (1, 4, 3, 2, 0, 3, 130),     # Cout > default tile (dy block tiled)
 ]
 
 
@@ -70,6 +72,57 @@ def test_tconv_fused_direct_call(rng):
     out = tconv_fused_pallas(dy, w, stride=(S, S), interpret=True)
     N = S * (O - 1) + K
     want = ref.tconv_phase_ref(dy, w, stride=(S, S), padding=(0, 0),
+                               n_out=(N, N))
+    assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+TCONV_DILATED_SWEEP = [
+    # (B, O, K, S, P, D, Ci, Co): input gradient of a forward conv with
+    # stride S AND filter dilation D -- the unified (phase, tap) kernel.
+    (1, 5, 3, 2, 1, 2, 3, 4),    # gcd(S,D)=2: half the residues empty
+    (2, 4, 3, 2, 0, 3, 2, 3),    # coprime S, D
+    (1, 4, 3, 3, 2, 2, 3, 2),
+    (2, 5, 2, 3, 0, 3, 2, 2),    # S == D: one tap-phase per axis
+    (2, 6, 3, 1, 2, 2, 3, 3),    # stride-1 atrous adjoint
+    (1, 3, 5, 6, 1, 4, 2, 2),    # period 3, ragged phases
+]
+
+
+@pytest.mark.parametrize("B,O,K,S,P,D,Ci,Co", TCONV_DILATED_SWEEP)
+def test_tconv_phase_dilated_sweep(rng, B, O, K, S, P, D, Ci, Co):
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    N = S * (O - 1) + D * (K - 1) + 1 - 2 * P
+    out = ops.tconv_phase(dy, w, stride=(S, S), padding=(P, P),
+                          n_out=(N, N), dilation=(D, D))
+    want = ref.tconv_phase_ref(dy, w, stride=(S, S), padding=(P, P),
+                               n_out=(N, N), dilation=(D, D))
+    assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tconv_cout_tiled_dy_block(rng):
+    """The dy block carries a Cout TILE, not full channel depth: with
+    Cout > cout_tile the grid gains a sequential Cout axis and the
+    in-kernel dy/weight blocks are capped at the tile -- and the result
+    still matches the oracle (accumulation across Cout tiles)."""
+    B, O, K, S, P, Ci, Co, tile = 1, 4, 3, 2, 0, 5, 20, 8
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    N = S * (O - 1) + K
+    fn = lambda dy_, w_: tconv_fused_pallas(
+        dy_, w_, stride=(S, S), padding=(P, P), n_out=(N, N),
+        cout_tile=tile, cin_tile=4, interpret=True)
+    grids = _pallas_grids(fn, dy, w)
+    assert len(grids) == 1
+    # grid (B, T, Cin_t, Cout_t, TK): sequential Cout axis of ceil(Co/tile).
+    assert grids[0][3] == -(-Co // tile), grids[0]
+    blocks = pallas_block_shapes(fn, dy, w)[0]
+    dy_block, w_block, out_block = blocks
+    assert dy_block[-1] == tile, blocks        # dy: Cout tile, not Co
+    assert w_block[-2:] == (tile, 4), blocks   # w: (Co_t, Ci_t)
+    assert out_block[-1] == 4, blocks          # out: Cin tile
+    out = fn(dy, w)
+    want = ref.tconv_phase_ref(dy, w, stride=(S, S), padding=(P, P),
                                n_out=(N, N))
     assert_allclose(out, want, rtol=1e-4, atol=1e-4)
 
@@ -200,6 +253,7 @@ DFWD_SWEEP = [
     (2, 17, 2, 3, 0, 4, 2, 2),       # non-exact fit
     (1, 12, 1, 2, 0, 3, 2, 2),       # pointwise: K_eff == 1
     (1, 13, 3, 1, 2, 2, 5, 130),     # Cout > default tile
+    (1, 9, 3, 1, 2, 2, 130, 3),      # Cin > default tile (x block tiled)
 ]
 
 
@@ -209,6 +263,32 @@ def test_dconv_forward_sweep(rng, B, N, K, S, P, D, Ci, Co):
     w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
     y = ops.dconv_forward(x, w, stride=(S, S), padding=(P, P),
                           dilation=(D, D))
+    want = ref.dconv_forward_ref(x, w, stride=(S, S), padding=(P, P),
+                                 dilation=(D, D))
+    assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dconv_forward_cin_tiled(rng):
+    """The padded-input block no longer spans full channel depth: with
+    Cin > cin_tile the grid gains a sequential Cin-accumulation axis and
+    the x/w blocks are capped at the tile -- and the output still matches
+    the oracle (fp32 accumulation across (Cin-tile, tap) steps)."""
+    B, N, K, S, P, D, Ci, Co, tile = 2, 11, 3, 1, 2, 2, 20, 12, 8
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    fn = lambda x_, w_: dconv_forward_pallas(
+        x_, w_, stride=(S, S), padding=(P, P), dilation=(D, D),
+        cin_tile=tile, cout_tile=tile, interpret=True)
+    grids = _pallas_grids(fn, x, w)
+    assert len(grids) == 1
+    # grid (B, Cout_t, Cin_t, T): batch leads, taps innermost, and a
+    # sequential Cin axis of ceil(Ci/tile) blocks.
+    assert grids[0] == (B, -(-Co // tile), -(-Ci // tile), K * K), grids[0]
+    blocks = pallas_block_shapes(fn, x, w)[0]
+    x_block, w_block, out_block = blocks
+    assert x_block[-1] == tile, blocks         # padded input: Cin tile
+    assert w_block[-2:] == (tile, tile), blocks
+    y = fn(x, w)
     want = ref.dconv_forward_ref(x, w, stride=(S, S), padding=(P, P),
                                  dilation=(D, D))
     assert_allclose(y, want, rtol=1e-4, atol=1e-4)
@@ -224,6 +304,33 @@ def test_dconv_forward_bf16(rng):
     want = ref.dconv_forward_ref(x, w, stride=(1, 1), padding=(2, 2),
                                  dilation=(2, 2))
     assert_allclose(y, want, rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# ops wrappers
+# ---------------------------------------------------------------------------
+
+def test_ops_import_does_not_initialize_backend():
+    """The interpret/compiled decision is resolved per call, NOT at
+    import: importing `repro.kernels.ops` must not force jax backend
+    initialization (the old module-level `_INTERPRET` constant did, and
+    went stale if the device set changed after import)."""
+    import subprocess
+    import sys
+    code = (
+        "import repro.kernels.ops\n"
+        "try:\n"
+        "    from jax._src.xla_bridge import _backends\n"
+        "except ImportError:   # private jax surface moved: can't probe\n"
+        "    print('SKIP')\n"
+        "    raise SystemExit(0)\n"
+        "assert not _backends, list(_backends)\n"
+        "print('OK')\n")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0 and ("OK" in proc.stdout
+                                     or "SKIP" in proc.stdout), (
+        proc.stdout, proc.stderr)
 
 
 # ---------------------------------------------------------------------------
