@@ -5,6 +5,11 @@ the wall-clock microbenchmarks and the (arch x shape) roofline table.
   PYTHONPATH=src python -m benchmarks.run --fast     # skip wallclock
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI: one tiny
         # geometry per op family + BENCH_conv.json schema-drift guard
+  PYTHONPATH=src python -m benchmarks.run --delta-gate   # CI: re-time
+        # the committed geometries, fail if a pallas/baseline ratio
+        # regressed > 1.5x vs the corresponding BENCH_conv.json row
+  PYTHONPATH=src python -m benchmarks.run --filter shufflenet
+        # single-row rerun (substring match; never rewrites the JSON)
 
 Output format: ``name,value,derived`` CSV rows (derived carries the
 paper's reference number so the reproduction delta is visible).
@@ -27,12 +32,33 @@ def main() -> None:
                     help="CI smoke: one tiny geometry per conv op family "
                          "through the real backend entry points, failing "
                          "on BENCH_conv.json schema drift")
+    ap.add_argument("--delta-gate", action="store_true",
+                    help="CI perf gate: re-time the committed "
+                         "BENCH_conv.json geometries and fail if any "
+                         "pallas/baseline ratio regressed > 1.5x")
+    ap.add_argument("--filter", metavar="SUBSTR", default=None,
+                    help="run only conv-backend rows whose case name "
+                         "contains SUBSTR (cheap single-row rerun during "
+                         "autotuning; never rewrites BENCH_conv.json)")
     args = ap.parse_args()
 
-    if args.smoke:
+    if args.smoke or args.delta_gate:
         from benchmarks import wallclock
-        print("# === benchmark smoke: one tiny geometry per op family ===")
-        _emit(wallclock.smoke())
+        if args.smoke:
+            print("# === benchmark smoke: one tiny geometry per op "
+                  "family ===")
+            _emit(wallclock.smoke())
+        if args.delta_gate:
+            print("# === benchmark delta gate: pallas ratio vs committed "
+                  "BENCH_conv.json ===")
+            _emit(wallclock.delta_gate())
+        return
+
+    if args.filter is not None:
+        from benchmarks import wallclock
+        print(f"# === wall-clock: conv backends (filter={args.filter!r}; "
+              "JSON not rewritten) ===")
+        _emit(wallclock.conv_backend_bench(name_filter=args.filter))
         return
 
     from benchmarks import paper_tables as pt

@@ -26,18 +26,42 @@ from repro.core.spec import ConvSpec, resolve_backend
 
 
 def _time(fn, *args, iters=5, warmup=2):
-    """Minimum per-call latency (us) over `iters` timed calls -- the min
-    is the standard robust estimator for microbenchmarks (scheduler and
-    allocator noise only ever adds time), keeping BENCH_conv.json rows
-    comparable across PRs."""
+    """MEDIAN per-call latency (us) over `iters` timed calls.  The
+    median discards warm-outlier iterations (GC pauses, scheduler
+    preemption, allocator warm-up that survives the warmup calls) that
+    drag a mean upward, without under-reporting steady-state cost the
+    way a min does on a frequency-drifting host -- keeping
+    BENCH_conv.json rows comparable across PRs and autotune sweeps
+    (`kernels/tiling.py` times candidates through this same helper)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    best = float("inf")
+    samples = []
     for _ in range(iters):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6  # us
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2] * 1e6  # us
+
+
+def _time_interleaved(fns, iters=5, warmup=1):
+    """Median per-call latency (us) for several zero-arg callables,
+    measured INTERLEAVED: each sweep times one call of every callable
+    before the next sweep starts.  Sequential per-backend timing folds
+    slow host drift (frequency scaling, co-tenant load) straight into
+    the backend *comparison* -- interleaving gives every callable the
+    same drift exposure, so the ratios BENCH_conv.json exists to track
+    are stable even when absolute numbers wander."""
+    for f in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(f())
+    samples = {k: [] for k in fns}
+    for _ in range(iters):
+        for k, f in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            samples[k].append(time.perf_counter() - t0)
+    return {k: sorted(v)[len(v) // 2] * 1e6 for k, v in samples.items()}
 
 
 # (name, N_err, K, S, Cin, Cout): error-map size, filter, stride, channels.
@@ -133,9 +157,22 @@ STRIDED_DILATED_CASES = [
 ]
 
 
+def _plan_dict(op, spec, x_shape, dy_shape):
+    """The planner's decision for one (op, geometry) -- recorded per
+    BENCH_conv.json row so the perf trajectory is attributable to the
+    tiling that produced it."""
+    from repro.kernels import tiling
+    plan = tiling.plan_tiles(op, spec, x_shape=x_shape, dy_shape=dy_shape,
+                             interpret=jax.default_backend() != "tpu")
+    return {"cin_tile": plan.cin_tile, "cout_tile": plan.cout_tile,
+            "spatial_tile": plan.spatial_tile,
+            "tap_unroll": plan.tap_unroll,
+            "phase_unroll": plan.phase_unroll, "source": plan.source}
+
+
 def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                        dilated_cases=None, strided_dilated_cases=None,
-                       json_path=None):
+                       json_path=None, name_filter=None, records_out=None):
     """Time tconv + filter-grad through the xla_zero_free and pallas
     backends for each geometry -- plus the dilated-forward conv (d in
     {2, 4}) and the general strided+dilated input gradient through the
@@ -143,12 +180,21 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
     materialized-filter naive baseline); write BENCH_conv.json and return
     CSV rows.  `cases`/`dilated_cases`/`strided_dilated_cases`/`json_path`
     exist for the CI smoke run (one tiny geometry per family).
+    `name_filter` (case-name substring) reruns single rows cheaply during
+    autotuning -- a filtered run never writes BENCH_conv.json (it would
+    drop the unselected rows).  `records_out`, if a list, receives the
+    per-case record dicts (the delta gate consumes them).
     """
     rows, records = [], []
+    if name_filter is not None:
+        write_json = False
+        flt = lambda cs: [c for c in cs if name_filter in c[0]]
+    else:
+        flt = lambda cs: cs
     rng = np.random.default_rng(0)
     backends = ("xla_zero_free", "pallas")
-    for name, O, K, S, Ci, Co in (CONV_BACKEND_CASES if cases is None
-                                  else cases):
+    for name, O, K, S, Ci, Co in flt(CONV_BACKEND_CASES if cases is None
+                                     else cases):
         B, P = 1, 0
         spec = ConvSpec.make(stride=S, padding=P, filter_shape=K)
         N = spec.input_size((O, O))[0]
@@ -158,57 +204,73 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
         rec = {"layer": name, "error_map": O, "k": K, "stride": S,
                "c_in": Ci, "c_out": Co, "batch": B,
                "interpret_mode": jax.default_backend() != "tpu",
+               "tiling": {
+                   "input_grad": _plan_dict("input_grad", spec,
+                                            x.shape, dy.shape),
+                   "filter_grad": _plan_dict("filter_grad", spec,
+                                             x.shape, dy.shape)},
                "tconv_us": {}, "filter_grad_us": {}}
+        fns_t, fns_g = {}, {}
         for bname in backends:
             be = resolve_backend(bname)
             f_t = jax.jit(lambda dy_, w_, be=be: be.input_grad(
                 dy_, w_, spec, (N, N)))
             f_g = jax.jit(lambda x_, dy_, be=be: be.filter_grad(
                 x_, dy_, spec))
-            t_t = _time(f_t, dy, w, iters=iters, warmup=warmup)
-            t_g = _time(f_g, x, dy, iters=iters, warmup=warmup)
-            rec["tconv_us"][bname] = round(t_t, 1)
-            rec["filter_grad_us"][bname] = round(t_g, 1)
-            rows.append((f"wallclock.tconv.{bname}.{name}", round(t_t, 1),
-                         ""))
+            fns_t[bname] = lambda f=f_t: f(dy, w)
+            fns_g[bname] = lambda f=f_g: f(x, dy)
+        t_t = _time_interleaved(fns_t, iters=iters, warmup=warmup)
+        t_g = _time_interleaved(fns_g, iters=iters, warmup=warmup)
+        for bname in backends:
+            rec["tconv_us"][bname] = round(t_t[bname], 1)
+            rec["filter_grad_us"][bname] = round(t_g[bname], 1)
+            rows.append((f"wallclock.tconv.{bname}.{name}",
+                         round(t_t[bname], 1), ""))
             rows.append((f"wallclock.filtergrad.{bname}.{name}",
-                         round(t_g, 1), ""))
+                         round(t_g[bname], 1), ""))
         records.append(rec)
-    for name, N, K, S, P, D, Ci, Co in (DILATED_FORWARD_CASES
-                                        if dilated_cases is None
-                                        else dilated_cases):
+    for name, N, K, S, P, D, Ci, Co in flt(DILATED_FORWARD_CASES
+                                           if dilated_cases is None
+                                           else dilated_cases):
         B = 1
         spec = ConvSpec.make(stride=S, padding=P, filter_shape=K,
                              dilation=D)
         x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
         w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+        Oh, Ow = spec.out_size((N, N))
         zf = naive.dilated_forward_zero_mac_fraction(K, D)
         rec = {"layer": name, "n_in": N, "k": K, "stride": S,
                "dilation": D, "c_in": Ci, "c_out": Co, "batch": B,
                "interpret_mode": jax.default_backend() != "tpu",
                "zero_mac_fraction_naive": round(zf, 4),
+               "tiling": {
+                   "forward": _plan_dict("forward", spec, x.shape,
+                                         (B, Oh, Ow, Co))},
                "dilated_forward_us": {}}
         f_nai = jax.jit(lambda x_, w_: naive.dilated_forward_naive(
             x_, w_, stride=S, padding=P, dilation=D))
-        t_nai = _time(f_nai, x, w, iters=iters, warmup=warmup)
-        rec["dilated_forward_us"]["naive_materialized"] = round(t_nai, 1)
-        rows.append((f"wallclock.dilated_forward.naive.{name}",
-                     round(t_nai, 1), f"zero_frac={zf:.2f}"))
+        fns_d = {"naive_materialized": lambda: f_nai(x, w)}
         for bname in backends:
             be = resolve_backend(bname)
             f_d = jax.jit(lambda x_, w_, be=be: be.forward(x_, w_, spec))
             np.testing.assert_allclose(np.asarray(f_d(x, w)),
                                        np.asarray(f_nai(x, w)),
                                        rtol=1e-3, atol=1e-3)
-            t_d = _time(f_d, x, w, iters=iters, warmup=warmup)
-            rec["dilated_forward_us"][bname] = round(t_d, 1)
+            fns_d[bname] = lambda f=f_d: f(x, w)
+        t_d = _time_interleaved(fns_d, iters=iters, warmup=warmup)
+        t_nai = t_d["naive_materialized"]
+        rec["dilated_forward_us"]["naive_materialized"] = round(t_nai, 1)
+        rows.append((f"wallclock.dilated_forward.naive.{name}",
+                     round(t_nai, 1), f"zero_frac={zf:.2f}"))
+        for bname in backends:
+            rec["dilated_forward_us"][bname] = round(t_d[bname], 1)
             rows.append((f"wallclock.dilated_forward.{bname}.{name}",
-                         round(t_d, 1),
-                         f"speedup_vs_naive={t_nai/t_d:.2f}x"))
+                         round(t_d[bname], 1),
+                         f"speedup_vs_naive={t_nai/t_d[bname]:.2f}x"))
         records.append(rec)
-    for name, O, K, S, P, D, Ci, Co in (STRIDED_DILATED_CASES
-                                        if strided_dilated_cases is None
-                                        else strided_dilated_cases):
+    for name, O, K, S, P, D, Ci, Co in flt(STRIDED_DILATED_CASES
+                                           if strided_dilated_cases is None
+                                           else strided_dilated_cases):
         B = 2
         spec = ConvSpec.make(stride=S, padding=P, filter_shape=K,
                              dilation=D)
@@ -218,28 +280,131 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
         rec = {"layer": name, "error_map": O, "k": K, "stride": S,
                "dilation": D, "c_in": Ci, "c_out": Co, "batch": B,
                "interpret_mode": jax.default_backend() != "tpu",
+               "tiling": {
+                   "input_grad": _plan_dict(
+                       "input_grad", spec,
+                       (B, n_out[0], n_out[1], Ci), dy.shape)},
                "input_grad_us": {}}
-        outs = {}
+        outs, fns_i = {}, {}
         for bname in backends:
             be = resolve_backend(bname)
             f_i = jax.jit(lambda dy_, w_, be=be: be.input_grad(
                 dy_, w_, spec, n_out))
             outs[bname] = np.asarray(f_i(dy, w))
-            t_i = _time(f_i, dy, w, iters=iters, warmup=warmup)
-            rec["input_grad_us"][bname] = round(t_i, 1)
+            fns_i[bname] = lambda f=f_i: f(dy, w)
+        t_i = _time_interleaved(fns_i, iters=iters, warmup=warmup)
+        for bname in backends:
+            rec["input_grad_us"][bname] = round(t_i[bname], 1)
             rows.append((f"wallclock.input_grad.{bname}.{name}",
-                         round(t_i, 1), ""))
+                         round(t_i[bname], 1), ""))
         np.testing.assert_allclose(outs["pallas"], outs["xla_zero_free"],
                                    rtol=1e-3, atol=1e-3)
         records.append(rec)
+    if records_out is not None:
+        records_out.extend(records)
     if write_json:
         path = BENCH_JSON if json_path is None else pathlib.Path(json_path)
         path.write_text(json.dumps(
-            {"note": "conv backend wall-clock (us/call); pallas runs in "
-                     "interpret mode off-TPU, so absolute numbers are only "
-                     "comparable within a backend+host class",
+            {"note": "conv backend wall-clock (us/call): median-of-iters, "
+                     "backends interleaved per case (PR 4 methodology -- "
+                     "NOT comparable to the pre-PR-4 min-of-iters rows); "
+                     "pallas runs in interpret mode off-TPU, so absolute "
+                     "numbers are only comparable within a backend+host "
+                     "class; `tiling` records the planner decision each "
+                     "pallas row ran under",
              "cases": records}, indent=2) + "\n")
         rows.append(("wallclock.conv_backend.json", str(path), ""))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# CI delta gate: re-time the committed geometries, fail on pallas
+# regression vs BENCH_conv.json
+# ---------------------------------------------------------------------------
+
+# Per-op timing fields and the baseline each op's pallas number is
+# normalized against.  Ratios -- pallas / same-row baseline -- are the
+# host-class-portable quantity (the JSON's own note: absolute us are only
+# comparable within a backend+host class, and CI does not run on the
+# host that generated the committed file).
+_GATE_FIELDS = {
+    "tconv_us": "xla_zero_free",
+    "filter_grad_us": "xla_zero_free",
+    "dilated_forward_us": "xla_zero_free",
+    "input_grad_us": "xla_zero_free",
+}
+
+
+def delta_gate(threshold=1.5, iters=21, warmup=2):
+    """Re-run every committed BENCH_conv.json geometry on this host and
+    fail (RuntimeError) if any pallas timing regresses more than
+    `threshold`x against its committed row.
+
+    `iters` defaults higher than the plain bench: the gate's job is a
+    stable ratio, and on noisy shared hosts the interleaved median needs
+    ~20 sweeps before its run-to-run spread sits well inside the 1.5x
+    threshold.
+
+    Comparison is by pallas/baseline RATIO, and only between rows of the
+    same host class (`interpret_mode` must match): a ratio regression
+    means the fused kernel lost ground against the dense zero-free
+    baseline *on the same host in the same run*, which is the signal a
+    kernel/tiling change actually degraded -- absolute us would just
+    flag every hardware difference between CI and the committing host.
+    """
+    committed = {rec["layer"]: rec
+                 for rec in json.loads(BENCH_JSON.read_text())["cases"]}
+    records = []
+    rows = conv_backend_bench(iters=iters, warmup=warmup,
+                              write_json=False, records_out=records)
+    failures, compared, skipped = [], 0, 0
+    timing_keys = set(_GATE_FIELDS) | {"tiling", "interpret_mode"}
+    for rec in records:
+        base = committed.get(rec["layer"])
+        if base is None or base.get("interpret_mode") != \
+                rec.get("interpret_mode"):
+            skipped += 1
+            continue
+        # A name can only gate against the SAME conv: if the case's
+        # geometry fields drifted from the committed row (edited without
+        # regenerating the JSON), comparing ratios of different problems
+        # would be silently meaningless -- fail loudly instead.
+        geom_drift = [k for k in sorted(set(rec) & set(base) - timing_keys)
+                      if rec[k] != base[k]]
+        if geom_drift:
+            failures.append(
+                f"{rec['layer']}: geometry drift vs committed row on "
+                f"{geom_drift} -- regenerate BENCH_conv.json")
+            continue
+        for field, baseline in _GATE_FIELDS.items():
+            if field not in rec or field not in base:
+                continue
+            new_p, new_b = rec[field].get("pallas"), \
+                rec[field].get(baseline)
+            old_p, old_b = base[field].get("pallas"), \
+                base[field].get(baseline)
+            if None in (new_p, new_b, old_p, old_b) or not old_p \
+                    or not new_b or not old_b:
+                continue
+            compared += 1
+            new_ratio, old_ratio = new_p / new_b, old_p / old_b
+            if new_ratio > threshold * old_ratio:
+                failures.append(
+                    f"{rec['layer']}.{field}: pallas/{baseline} ratio "
+                    f"{new_ratio:.2f} vs committed {old_ratio:.2f} "
+                    f"(> {threshold}x)")
+    if failures:
+        raise RuntimeError(
+            "pallas perf regression vs BENCH_conv.json:\n  "
+            + "\n  ".join(failures))
+    if compared == 0:
+        raise RuntimeError(
+            "delta gate compared ZERO ratios (all rows skipped: "
+            f"skipped={skipped}) -- a vacuous pass would hide every "
+            "regression; check host class / BENCH_conv.json layer names")
+    rows.append(("wallclock.delta_gate", "ok",
+                 f"{compared} ratios within {threshold}x"
+                 f";skipped={skipped}"))
     return rows
 
 

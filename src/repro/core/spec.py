@@ -21,7 +21,10 @@ under a name:
   * ``pallas``         -- the fused single-launch Pallas TPU kernels
                           (`kernels/tconv_phase.py`,
                           `kernels/dconv_filtergrad.py`); interpret mode
-                          off-TPU.
+                          off-TPU.  Tile extents are NOT pinned here:
+                          every kernel resolves its tiling per geometry
+                          through `kernels/tiling.py` (the old
+                          `tile: int = 128` defaults are gone).
 
 `resolve_backend` also accepts the legacy `use_pallas` booleans
 (False -> xla_zero_free, True -> pallas) so old call sites keep working.

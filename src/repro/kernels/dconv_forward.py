@@ -16,17 +16,19 @@ on the MXU.  Partial products accumulate into the fp32 output tile across
 the sequential (Cin-tile, tap) steps -- the Pallas equivalent of the
 paper's local psum register.
 
-BlockSpec tiling: grid (B, Cout_t, Cin_t, T) with T = Kh*Kw innermost;
-per step the kernel holds
+BlockSpec tiling: grid (B, Cout_t, Cin_t, T/u) with the tap steps
+innermost (u taps unroll per step -- static offsets when a single step
+remains); per step the kernel holds
   x block   (1, Hp, Wp, Ci_t)    -- padded once; index map depends only on
                                     (b, ci), so it is NOT re-fetched
                                     across the tap axis
-  w block   (1, Ci_t, Co_t)      -- this tap's weights for this Cin tile
+  w block   (u, Ci_t, Co_t)      -- this step's taps' weights, Cin tile
   out block (1, Oh, Ow, Co_t)    -- fp32 accumulator across (ci, tap)
 in VMEM.  The Cin axis is a second sequential-accumulation axis, so the
 padded-input working set no longer spans full channel depth (the old
-layout held (1, Hp, Wp, Cin) whole).  Ci_t = Co_t = 128 aligns the
-matmul to the MXU.
+layout held (1, Hp, Wp, Cin) whole).  Tile extents are chosen per
+geometry by `kernels/tiling.py` (exact channel counts when small --
+no pad/slice -- MXU-aligned 128 tiles at depth); see DESIGN.md Sec. 2.6.
 """
 from __future__ import annotations
 
@@ -37,43 +39,59 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.spec import ConvSpec, _pair
+from repro.kernels import tiling
 from repro.kernels.tap_gather import gather_tap, pad_to_tap_windows
 
 
 def _df_kernel(x_ref, w_ref, out_ref, *, sh: int, sw: int, dh: int, dw: int,
-               oh: int, ow: int, kw: int):
+               oh: int, ow: int, kw: int, u: int, n_t: int, seq1: bool):
     ci = pl.program_id(2)
-    t = pl.program_id(3)
-    kx, ky = t // kw, t % kw
+    # With a single tap step, t0 is a python int and every tap gather
+    # below lowers to STATIC strided slices of the resident block.
+    t0 = pl.program_id(3) * u if n_t > 1 else 0
     ci_t = x_ref.shape[-1]
-    tap = gather_tap(x_ref[0], kx, ky, sh=sh, sw=sw, dh=dh, dw=dw,
-                     oh=oh, ow=ow)                     # (oh, ow, ci_t)
-    lhs = tap.reshape(oh * ow, ci_t).astype(jnp.float32)
-    rhs = w_ref[0].astype(jnp.float32)                 # (ci_t, co_t)
-    prod = jax.lax.dot(lhs, rhs, preferred_element_type=jnp.float32)
-    prod = prod.reshape(oh, ow, out_ref.shape[-1])
+    xv = x_ref[0]
+    acc = None
+    for j in range(u):
+        t = t0 + j
+        kx, ky = t // kw, t % kw
+        tap = gather_tap(xv, kx, ky, sh=sh, sw=sw, dh=dh, dw=dw,
+                         oh=oh, ow=ow)                 # (oh, ow, ci_t)
+        lhs = tap.reshape(oh * ow, ci_t).astype(jnp.float32)
+        rhs = w_ref[j].astype(jnp.float32)             # (ci_t, co_t)
+        prod = jax.lax.dot(lhs, rhs, preferred_element_type=jnp.float32)
+        acc = prod if acc is None else acc + prod
+    acc = acc.reshape(oh, ow, out_ref.shape[-1])
+    if seq1:       # single sequential step: every visit initializes
+        out_ref[0] = acc
+        return
+    first = (ci == 0) if n_t == 1 else ((ci == 0) & (pl.program_id(3) == 0))
 
-    @pl.when((t == 0) & (ci == 0))
+    @pl.when(first)
     def _init():
-        out_ref[0] = prod
+        out_ref[0] = acc
 
-    @pl.when((t > 0) | (ci > 0))
+    @pl.when(jnp.logical_not(first))
     def _acc():
-        out_ref[0] += prod
+        out_ref[0] += acc
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "dilation",
                                              "cin_tile", "cout_tile",
-                                             "interpret"))
+                                             "tap_unroll", "interpret"))
 def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
                          padding=(0, 0), dilation=(2, 2),
-                         cin_tile: int = 128, cout_tile: int = 128,
+                         cin_tile: int | None = None,
+                         cout_tile: int | None = None,
+                         tap_unroll: int | None = None,
                          interpret: bool = True) -> jax.Array:
     """Zero-free dilated forward conv in a SINGLE `pallas_call`.
 
     x: (B, Nh, Nw, Cin) input.
     w: (Kh, Kw, Cin, Cout) undilated filter, applied at tap spacing D.
     Returns (B, Oh, Ow, Cout) with O = floor((N + 2P - K_eff)/S) + 1.
+    Channel tiles default to the geometry-aware planner in
+    `kernels/tiling.py`; pass them explicitly to pin a tiling.
     """
     sh, sw = _pair(stride)
     ph, pw = _pair(padding)
@@ -87,6 +105,14 @@ def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
         raise ValueError(
             f"input {(Nh, Nw)} too small for effective filter "
             f"{spec.dilated_filter_shape} at padding {(ph, pw)}")
+    if None in (cin_tile, cout_tile, tap_unroll):
+        plan = tiling.plan_tiles("forward", spec, x_shape=x.shape,
+                                 dy_shape=(B, Oh, Ow, Cout),
+                                 itemsize=x.dtype.itemsize,
+                                 interpret=interpret)
+        cin_tile = plan.cin_tile if cin_tile is None else cin_tile
+        cout_tile = plan.cout_tile if cout_tile is None else cout_tile
+        tap_unroll = plan.tap_unroll if tap_unroll is None else tap_unroll
     xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
     xp = pad_to_tap_windows(xp, stride=(sh, sw), dilation=(dh, dw),
                             k=(Kh, Kw), out_size=(Oh, Ow))
@@ -103,15 +129,18 @@ def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
     if Cout % co_t:
         w_taps = jnp.pad(w_taps,
                          ((0, 0), (0, 0), (0, n_co * co_t - Cout)))
+    u = tiling.largest_divisor_leq(T, tap_unroll)
+    n_t = T // u
     kern = functools.partial(_df_kernel, sh=sh, sw=sw, dh=dh, dw=dw,
-                             oh=Oh, ow=Ow, kw=Kw)
+                             oh=Oh, ow=Ow, kw=Kw, u=u, n_t=n_t,
+                             seq1=(n_ci == 1 and n_t == 1))
     out = pl.pallas_call(
         kern,
-        grid=(B, n_co, n_ci, T),
+        grid=(B, n_co, n_ci, n_t),
         in_specs=[
             pl.BlockSpec((1, hp, wp, ci_t),
                          lambda b, co, ci, t: (b, 0, 0, ci)),
-            pl.BlockSpec((1, ci_t, co_t),
+            pl.BlockSpec((u, ci_t, co_t),
                          lambda b, co, ci, t: (t, ci, co)),
         ],
         out_specs=pl.BlockSpec((1, Oh, Ow, co_t),
@@ -120,4 +149,26 @@ def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
                                        jnp.float32),
         interpret=interpret,
     )(xp, w_taps)
-    return out[..., :Cout].astype(x.dtype)
+    if Cout % co_t:   # slice only when channel padding occurred
+        out = out[..., :Cout]
+    return out.astype(x.dtype)
+
+
+def _autotune_runner(spec: ConvSpec, x_shape, dy_shape):
+    """Autotune hook: execute the real kernel at one candidate plan."""
+    x = jnp.zeros(x_shape, jnp.float32)
+    w = jnp.zeros(spec.filter_shape + (x_shape[-1], dy_shape[-1]),
+                  jnp.float32)
+    interp = jax.default_backend() != "tpu"
+
+    def run(plan: tiling.TilePlan):
+        return jax.block_until_ready(dconv_forward_pallas(
+            x, w, stride=spec.stride, padding=spec.padding,
+            dilation=spec.dilation, cin_tile=plan.cin_tile,
+            cout_tile=plan.cout_tile, tap_unroll=plan.tap_unroll,
+            interpret=interp))
+
+    return run
+
+
+tiling.register_autotune_runner("forward", _autotune_runner)

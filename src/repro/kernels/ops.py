@@ -17,11 +17,26 @@ changes afterwards (e.g. a TPU runtime initialized late, or tests that
 swap platforms).  The kernel entry points are themselves jit'd with
 `interpret` static, so each resolved value gets its own compiled cache
 entry and nothing re-traces per call.
+
+Tiling is geometry-aware: these wrappers resolve the TilePlan
+(cin/cout/spatial tiles, tap/phase unroll) through
+`repro.kernels.tiling.plan_tiles` ON EVERY CALL -- from the ConvSpec,
+operand shapes, dtype, and the VMEM budget -- and pass it to the kernels
+as explicit static arguments.  Resolving OUTSIDE the jit'd kernels
+matters: a plan change (flipping `ECOFLOW_TILING=autotune`, a refreshed
+tile cache, a new `ECOFLOW_VMEM_BUDGET`) re-keys the kernel's compile
+cache and takes effect on the next call, instead of being frozen into
+the first trace the way a kernel-internal default would be (kernels
+called directly with tile arguments left as None plan at trace time and
+carry that caveat).  Analytical model by default; see DESIGN.md
+Sec. 2.6.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.core.spec import ConvSpec, _pair
+from repro.kernels import tiling
 from repro.kernels.attention import flash_attention_pallas
 from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
 from repro.kernels.dconv_forward import dconv_forward_pallas
@@ -47,18 +62,39 @@ def tconv_phase(dy: jax.Array, w: jax.Array, *, stride, padding,
 
     dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout) -> dx (B,Nh,Nw,Cin).
     """
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=(w.shape[0], w.shape[1]),
+                         dilation=dilation)
+    nh, nw = _pair(n_out)
+    plan = tiling.plan_tiles(
+        "input_grad", spec, x_shape=(dy.shape[0], nh, nw, w.shape[2]),
+        dy_shape=dy.shape, itemsize=dy.dtype.itemsize,
+        interpret=_interpret())
     return tconv_fused_pallas(dy, w, stride=tuple(stride),
-                              padding=tuple(padding), n_out=tuple(n_out),
+                              padding=tuple(padding), n_out=(nh, nw),
                               dilation=tuple(dilation),
+                              cin_tile=plan.cin_tile,
+                              cout_tile=plan.cout_tile,
+                              tap_unroll=plan.tap_unroll,
+                              phase_unroll=plan.phase_unroll,
                               interpret=_interpret())
 
 
 def dconv_filter_grad(x: jax.Array, dy: jax.Array, *, stride, padding,
                       k, dilation=(1, 1)) -> jax.Array:
     """Zero-free filter gradient via the in-kernel tap-gather matmul."""
+    spec = ConvSpec.make(stride=stride, padding=padding, filter_shape=k,
+                         dilation=dilation)
+    plan = tiling.plan_tiles("filter_grad", spec, x_shape=x.shape,
+                             dy_shape=dy.shape, itemsize=x.dtype.itemsize,
+                             interpret=_interpret())
     return dconv_filter_grad_pallas(x, dy, stride=tuple(stride),
                                     padding=tuple(padding), k=tuple(k),
                                     dilation=tuple(dilation),
+                                    cin_tile=plan.cin_tile,
+                                    cout_tile=plan.cout_tile,
+                                    spatial_tile=plan.spatial_tile,
+                                    tap_unroll=plan.tap_unroll,
                                     interpret=_interpret())
 
 
@@ -69,7 +105,25 @@ def dconv_forward(x: jax.Array, w: jax.Array, *, stride, padding,
 
     x (B,Nh,Nw,Cin), w (Kh,Kw,Cin,Cout) -> y (B,Oh,Ow,Cout).
     """
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=(w.shape[0], w.shape[1]),
+                         dilation=dilation)
+    oh, ow = spec.out_size((x.shape[1], x.shape[2]))
+    if oh < 1 or ow < 1:
+        # Degenerate geometry: skip planning, let the kernel raise its
+        # too-small-input ValueError with the full context.
+        return dconv_forward_pallas(x, w, stride=tuple(stride),
+                                    padding=tuple(padding),
+                                    dilation=tuple(dilation),
+                                    interpret=_interpret())
+    plan = tiling.plan_tiles("forward", spec, x_shape=x.shape,
+                             dy_shape=(x.shape[0], oh, ow, w.shape[3]),
+                             itemsize=x.dtype.itemsize,
+                             interpret=_interpret())
     return dconv_forward_pallas(x, w, stride=tuple(stride),
                                 padding=tuple(padding),
                                 dilation=tuple(dilation),
+                                cin_tile=plan.cin_tile,
+                                cout_tile=plan.cout_tile,
+                                tap_unroll=plan.tap_unroll,
                                 interpret=_interpret())

@@ -40,10 +40,18 @@ def pad_to_tap_windows(xp: jax.Array, *, stride, dilation, k,
 
 def gather_tap(x_hwc: jax.Array, kx, ky, *, sh: int, sw: int, dh: int,
                dw: int, oh: int, ow: int) -> jax.Array:
-    """In-kernel per-tap multicast group: dynamic tap offset (kx*D, ky*D)
-    into a VMEM-resident (H, W, C) block, then static-stride subsample --
-    x[i*S + kx*D, j*S + ky*D, :] for i < oh, j < ow.  (kx, ky) may be
-    traced (derived from a grid index)."""
+    """In-kernel per-tap multicast group: tap offset (kx*D, ky*D) into a
+    VMEM-resident (H, W, C) block, then static-stride subsample --
+    x[i*S + kx*D, j*S + ky*D, :] for i < oh, j < ow.
+
+    (kx, ky) may be traced (derived from a grid index) or python ints
+    (an unrolled tap with a single tap grid step): static taps lower to
+    ONE fused strided slice instead of a dynamic_slice + subsample pair,
+    which is both cheaper in interpret mode and friendlier to the Mosaic
+    lowering."""
+    if isinstance(kx, int) and isinstance(ky, int):
+        return x_hwc[kx * dh:kx * dh + (oh - 1) * sh + 1:sh,
+                     ky * dw:ky * dw + (ow - 1) * sw + 1:sw]
     win = jax.lax.dynamic_slice(
         x_hwc, (kx * dh, ky * dw, 0),
         ((oh - 1) * sh + 1, (ow - 1) * sw + 1, x_hwc.shape[-1]))

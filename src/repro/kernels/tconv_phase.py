@@ -28,15 +28,18 @@ TPU mapping (the EcoFlow -> MXU translation, see DESIGN.md Sec. 2/2.5):
     sequentially over the (Cout-tile, tap) grid axes;
   * grouping/expansion onto the array becomes channel tiling.
 
-BlockSpec tiling: grid (B, T, Cin_t, Cout_t, TK) with T = non-empty
-phases, TK = taps per phase; per grid step the kernel holds
+BlockSpec tiling: grid (B, T/pu, Cin_t, Cout_t, TK/u) with T = non-empty
+phases, TK = taps per phase (pu phases x u taps unroll per step --
+static window offsets when a single step remains); per grid step the
+kernel holds
   dy block  (1, Hp, Wp, Co_t)     -- padded once; index map (b, co) only,
                                      so it is NOT re-fetched across the
                                      phase-local (tap) axis
-  w block   (1, 1, Co_t, Ci_t)    -- this (phase, tap)'s packed weights
-  out block (1, 1, ho, wo, Ci_t)  -- fp32 accumulator across (co, tap)
+  w block   (pu, u, Co_t, Ci_t)   -- this step's packed (phase, tap)s
+  out block (1, pu, ho, wo, Ci_t) -- fp32 accumulator across (co, tap)
 in VMEM.  Neither block scales with full channel depth: dy carries a
-Cout tile and the output a Cin tile (default 128, MXU-aligned).  Output
+Cout tile and the output a Cin tile, with extents chosen per geometry by
+`kernels/tiling.py` (DESIGN.md Sec. 2.6).  Output
 is phase-major (B, T, ho, wo, Cin); host-side assembly places each phase
 plane at its stride residue (a gather -- identity at D == 1) and
 interleaves with one reshape/transpose, exactly as before.
@@ -51,6 +54,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import ecoflow
 from repro.core.spec import ConvSpec, _pair
+from repro.kernels import tiling
 
 
 def pack_phase_filters(w: jax.Array, stride, dilation=(1, 1)) -> jax.Array:
@@ -97,43 +101,69 @@ def pack_phase_filters(w: jax.Array, stride, dilation=(1, 1)) -> jax.Array:
 
 def _fused_tap_kernel(dy_ref, w_ref, out_ref, *, tpw: int, kp: int, kq: int,
                       sh: int, sw: int, dh: int, dw: int, step_h: int,
-                      step_w: int, pad_h: int, pad_w: int, ho: int, wo: int):
-    """One (phase, tap) per sequential grid step: `dynamic_slice` the tap's
-    window out of the VMEM-resident padded dy block, one MXU matmul with
-    that tap's (Cout_t, Cin_t) weights, accumulate into the fp32 phase
-    tile across the (Cout-tile, tap) axes.  Zero-padded taps of ragged
-    phases multiply by zero -- the step body is uniform across phases."""
-    t = pl.program_id(1)
+                      step_w: int, pad_h: int, pad_w: int, ho: int, wo: int,
+                      pu: int, n_t: int, u: int, n_k: int, seq1: bool):
+    """`pu` phases x `u` taps per sequential grid step: `dynamic_slice`
+    each tap's window out of the VMEM-resident padded dy block, one MXU
+    matmul per tap with its (Cout_t, Cin_t) weights, accumulate each
+    phase's fp32 tile across the (Cout-tile, tap-step) axes.
+    Zero-padded taps of ragged phases multiply by zero -- the step body
+    is uniform across phases.  When a single (phase, tap) grid step
+    remains, every window offset is a python int and the gathers lower
+    to STATIC slices."""
+    t0 = pl.program_id(1) * pu if n_t > 1 else 0
     co = pl.program_id(3)
-    k = pl.program_id(4)
-    a, b = t // tpw, t % tpw
-    uf, vf = k // kq, k % kq
-    # Flipped-slot tap index u = KP-1-uf (see pack_phase_filters): window
-    # offset base(a) + u*step, shifted into the padded frame.
-    start_h = pad_h - (a * dh) // sh - (kp - 1 - uf) * step_h
-    start_w = pad_w - (b * dw) // sw - (kq - 1 - vf) * step_w
-    win = jax.lax.dynamic_slice(
-        dy_ref[0], (start_h, start_w, 0), (ho, wo, dy_ref.shape[-1]))
-    lhs = win.reshape(ho * wo, win.shape[-1]).astype(jnp.float32)
-    rhs = w_ref[0, 0].astype(jnp.float32)            # (co_t, ci_t)
-    prod = jax.lax.dot(lhs, rhs, preferred_element_type=jnp.float32)
-    prod = prod.reshape(ho, wo, out_ref.shape[-1])
+    k0 = pl.program_id(4) * u if n_k > 1 else 0
+    dyv = dy_ref[0]
+    # seq1: single sequential (Cout-tile, tap) step -> every visit to an
+    # out block is its first, the predication compiles away.
+    first = None if seq1 else (
+        (co == 0) if n_k == 1 else ((co == 0) & (pl.program_id(4) == 0)))
+    for p in range(pu):
+        t = t0 + p
+        a, b = t // tpw, t % tpw
+        acc = None
+        for j in range(u):
+            k = k0 + j
+            uf, vf = k // kq, k % kq
+            # Flipped-slot tap index u' = KP-1-uf (see
+            # pack_phase_filters): window offset base(a) + u'*step,
+            # shifted into the padded frame.
+            start_h = pad_h - (a * dh) // sh - (kp - 1 - uf) * step_h
+            start_w = pad_w - (b * dw) // sw - (kq - 1 - vf) * step_w
+            if isinstance(start_h, int) and isinstance(start_w, int):
+                win = dyv[start_h:start_h + ho, start_w:start_w + wo]
+            else:
+                win = jax.lax.dynamic_slice(
+                    dyv, (start_h, start_w, 0), (ho, wo, dyv.shape[-1]))
+            lhs = win.reshape(ho * wo, win.shape[-1]).astype(jnp.float32)
+            rhs = w_ref[p, j].astype(jnp.float32)    # (co_t, ci_t)
+            prod = jax.lax.dot(lhs, rhs,
+                               preferred_element_type=jnp.float32)
+            acc = prod if acc is None else acc + prod
+        acc = acc.reshape(ho, wo, out_ref.shape[-1])
+        if first is None:
+            out_ref[0, p] = acc
+        else:
+            @pl.when(first)
+            def _init(p=p, acc=acc):
+                out_ref[0, p] = acc
 
-    @pl.when((k == 0) & (co == 0))
-    def _init():
-        out_ref[0, 0] = prod
-
-    @pl.when((k > 0) | (co > 0))
-    def _acc():
-        out_ref[0, 0] += prod
+            @pl.when(jnp.logical_not(first))
+            def _acc(p=p, acc=acc):
+                out_ref[0, p] += acc
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out",
                                              "dilation", "cin_tile",
-                                             "cout_tile", "interpret"))
+                                             "cout_tile", "tap_unroll",
+                                             "phase_unroll", "interpret"))
 def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
-                       n_out=None, dilation=(1, 1), cin_tile: int = 128,
-                       cout_tile: int = 128,
+                       n_out=None, dilation=(1, 1),
+                       cin_tile: int | None = None,
+                       cout_tile: int | None = None,
+                       tap_unroll: int | None = None,
+                       phase_unroll: int | None = None,
                        interpret: bool = True) -> jax.Array:
     """Zero-free transposed conv in a SINGLE `pallas_call`, any (S, D).
 
@@ -141,6 +171,8 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
     w:  (Kh, Kw, Cin, Cout) forward filter (undilated taps; `dilation` is
         the forward filter dilation D whose adjoint this computes).
     Returns (B, Nh, Nw, Cin) where (Nh, Nw) = n_out (default exact fit).
+    Channel tiles default to the geometry-aware planner in
+    `kernels/tiling.py`; pass them explicitly to pin a tiling.
     """
     sh, sw = _pair(stride)
     ph, pw = _pair(padding)
@@ -171,6 +203,17 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
                           (0, 0)))
     hp, wp = dy_pad.shape[1], dy_pad.shape[2]
 
+    if None in (cin_tile, cout_tile, tap_unroll, phase_unroll):
+        plan = tiling.plan_tiles("input_grad", spec,
+                                 x_shape=(B, Nh, Nw, Cin),
+                                 dy_shape=dy.shape,
+                                 itemsize=dy.dtype.itemsize,
+                                 interpret=interpret)
+        cin_tile = plan.cin_tile if cin_tile is None else cin_tile
+        cout_tile = plan.cout_tile if cout_tile is None else cout_tile
+        tap_unroll = plan.tap_unroll if tap_unroll is None else tap_unroll
+        phase_unroll = plan.phase_unroll if phase_unroll is None \
+            else phase_unroll
     ci_t = min(cin_tile, Cin)
     co_t = min(cout_tile, Cout)
     n_ci, n_co = -(-Cin // ci_t), -(-Cout // co_t)
@@ -181,20 +224,24 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
     if Cin % ci_t:
         w_flat = jnp.pad(w_flat, ((0, 0),) * 3 + ((0, n_ci * ci_t - Cin),))
 
+    u = tiling.largest_divisor_leq(TK, tap_unroll)
+    pu = tiling.largest_divisor_leq(T, phase_unroll)
+    n_k, n_t = TK // u, T // pu
     kern = functools.partial(_fused_tap_kernel, tpw=TPw, kp=KP, kq=KQ,
                              sh=sh, sw=sw, dh=dh, dw=dw, step_h=step_h,
                              step_w=step_w, pad_h=pad_h, pad_w=pad_w,
-                             ho=ho, wo=wo)
+                             ho=ho, wo=wo, pu=pu, n_t=n_t, u=u, n_k=n_k,
+                             seq1=(n_co == 1 and n_k == 1))
     out = pl.pallas_call(
         kern,
-        grid=(B, T, n_ci, n_co, TK),
+        grid=(B, n_t, n_ci, n_co, n_k),
         in_specs=[
             pl.BlockSpec((1, hp, wp, co_t),
                          lambda b, t, ci, co, k: (b, 0, 0, co)),
-            pl.BlockSpec((1, 1, co_t, ci_t),
+            pl.BlockSpec((pu, u, co_t, ci_t),
                          lambda b, t, ci, co, k: (t, k, co, ci)),
         ],
-        out_specs=pl.BlockSpec((1, 1, ho, wo, ci_t),
+        out_specs=pl.BlockSpec((1, pu, ho, wo, ci_t),
                                lambda b, t, ci, co, k: (b, t, 0, 0, ci)),
         out_shape=jax.ShapeDtypeStruct((B, T, ho, wo, n_ci * ci_t),
                                        jnp.float32),
@@ -207,7 +254,9 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
     # upsampling.  Place the planes with a static gather (identity at
     # D == 1 with S <= K), then one reshape/transpose chain: rows of
     # dx_full are r = m*S + p  <->  (m, p) of phase row m.
-    out = out[..., :Cin].reshape(B, TPh, TPw, ho, wo, Cin)
+    if Cin % ci_t:   # slice only when channel padding occurred
+        out = out[..., :Cin]
+    out = out.reshape(B, TPh, TPw, ho, wo, Cin)
     idx_h = [TPh] * sh   # sentinel TPh/TPw -> all-zero plane
     for a in range(TPh):
         idx_h[spec.tap_phase_residue(a, 0)] = a
@@ -226,3 +275,24 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
     if eh or ew:
         dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
     return dx_full[:, ph:ph + Nh, pw:pw + Nw, :].astype(dy.dtype)
+
+
+def _autotune_runner(spec: ConvSpec, x_shape, dy_shape):
+    """Autotune hook: execute the real kernel at one candidate plan."""
+    dy = jnp.zeros(dy_shape, jnp.float32)
+    w = jnp.zeros(spec.filter_shape + (x_shape[-1], dy_shape[-1]),
+                  jnp.float32)
+    n_out = (x_shape[1], x_shape[2])
+    interp = jax.default_backend() != "tpu"
+
+    def run(plan: tiling.TilePlan):
+        return jax.block_until_ready(tconv_fused_pallas(
+            dy, w, stride=spec.stride, padding=spec.padding, n_out=n_out,
+            dilation=spec.dilation, cin_tile=plan.cin_tile,
+            cout_tile=plan.cout_tile, tap_unroll=plan.tap_unroll,
+            phase_unroll=plan.phase_unroll, interpret=interp))
+
+    return run
+
+
+tiling.register_autotune_runner("input_grad", _autotune_runner)

@@ -1,0 +1,515 @@
+"""Geometry-aware tile selection for the Pallas conv kernels.
+
+Every fused kernel in this package used to hard-code 128-wide channel
+tiles (`tile: int = 128`) regardless of geometry -- the right call for a
+ResNet trunk, the wrong one for a 3-channel stem, a 29-channel
+ShuffleNet block, or an 11x11 AlexNet filter whose tap loop then costs
+121 grid launch-steps.  This module makes the tiling a *function of the
+geometry*: given a `ConvSpec`, the operand shapes, the dtype, and a VMEM
+budget, `plan_tiles` returns a `TilePlan` -- channel tiles, an output-row
+(spatial) tile, a tap-unroll factor, and the grid order -- from an
+analytical working-set / traffic model (CARLA-style per-layer
+reconfigurable tiling, expressed for a BlockSpec machine).
+
+Two modes:
+
+  * **analytical** (default): enumerate the candidate tilings whose VMEM
+    working set fits the budget, score each by modeled HBM traffic (block
+    re-streams under the kernel's index maps) plus a per-grid-step launch
+    cost, and pick the cheapest.  The step cost is weighted heavily in
+    interpret mode (where per-step dispatch dominates wall clock) and
+    lightly for compiled TPU execution (where traffic dominates).
+  * **autotune** (`ECOFLOW_TILING=autotune` or `mode="autotune"`): sweep
+    the same candidate set empirically -- each kernel module registers a
+    runner that executes the real kernel at a candidate plan -- timing
+    with `benchmarks.wallclock._time` (median-of-iters) when the
+    benchmarks package is importable, else a local fallback with the same
+    semantics.  Winners persist to a JSON cache keyed by (op, geometry)
+    (`ECOFLOW_TILE_CACHE`, default ~/.cache/ecoflow/tile_cache.json) so a
+    sweep is paid once per geometry per host.
+
+The model's constraints encode the kernels' invariants rather than
+guessing at them:
+
+  * the working set is computed from the kernels' actual block shapes
+    (doubled for the in/out streams, Pallas double-buffers blocks);
+  * unrolled taps are consumed one matmul at a time against the resident
+    blocks (never a concatenated K^2-replicated tap stack -- peak
+    intermediate stays bounded by a small multiple of the padded input,
+    pinned by
+    `tests/test_dispatch.py::test_filter_grad_memory_not_k2_replicated`),
+    and compiled-mode unrolling is capped at `MAX_TAP_UNROLL_COMPILED`
+    because Mosaic kernel code size, not VMEM, is the binding constraint;
+  * channel tiles prefer the exact channel count when it is small enough
+    to fit (no host-side pad/slice at all) and MXU-aligned powers of two
+    otherwise.
+
+See DESIGN.md Sec. 2.6 for the policy rules and the cache format.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import math
+import os
+import pathlib
+from typing import Callable, Dict, Optional
+
+from repro.core.spec import ConvSpec
+
+# Fraction of a TPU core's ~16 MiB VMEM the planner budgets for one
+# kernel's resident blocks (the rest covers double-buffering slack,
+# scalar state, and the compiler's own scratch).  Overridable per call
+# and via ECOFLOW_VMEM_BUDGET (bytes).
+DEFAULT_VMEM_BUDGET = 8 * 2 ** 20
+
+# Modeled cost of one grid step, in traffic-equivalent bytes.  The
+# interpret emulation re-materializes every block and re-dispatches the
+# kernel body per step, so steps are expensive; compiled TPU steps cost
+# roughly a DMA descriptor + pipeline bubble.
+STEP_COST_INTERPRET = 1 << 18
+STEP_COST_COMPILED = 1 << 12
+
+# Compiled-mode cap on taps unrolled per grid step: each unrolled tap is
+# a distinct matmul in the kernel body, and Mosaic code size (not VMEM)
+# is the binding constraint.  Interpret mode has no code-size limit and
+# profits most from single-step launches, so it may unroll fully.
+MAX_TAP_UNROLL_COMPILED = 16
+
+OPS = ("filter_grad", "forward", "input_grad")
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """One kernel launch's tiling decision.
+
+    cin_tile / cout_tile -- channel block extents (<= actual channels;
+        equal to them when the planner found the exact count cheapest,
+        in which case the kernels skip the pad/slice entirely).
+    spatial_tile -- output rows per block (Oh for the filter gradient;
+        kernels that do not spatially tile carry their full extent here).
+    tap_unroll -- taps computed per grid step (a divisor of the tap
+        count; 1 = one tap per step, T = all taps in one step).
+    phase_unroll -- stride phases computed per grid step of the unified
+        input-gradient kernel (a divisor of the phase count; other
+        kernels have no phase axis and carry 1).
+    grid_order -- the kernel's grid axes outermost-first, for
+        documentation and structural pins.
+    source -- "analytical" | "autotune" | "cache".
+    """
+    cin_tile: int
+    cout_tile: int
+    spatial_tile: int
+    tap_unroll: int = 1
+    phase_unroll: int = 1
+    grid_order: tuple = ()
+    source: str = "analytical"
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["grid_order"] = list(self.grid_order)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+def _channel_candidates(c: int) -> tuple[int, ...]:
+    """Candidate channel-tile extents for a `c`-channel axis: the exact
+    count when small enough to be a single unpadded tile, MXU-aligned
+    powers of two below it otherwise."""
+    cands = {min(c, 256)}
+    if c <= 256:
+        cands.add(c)  # exact: no pad, no slice
+    for p in (256, 128, 64, 32, 16, 8):
+        if p < c:
+            cands.add(p)
+    return tuple(sorted(cands, reverse=True))
+
+
+def _spatial_candidates(oh: int) -> tuple[int, ...]:
+    """Candidate output-row tiles: the full extent, then halvings."""
+    cands, v = [], oh
+    while v >= 1:
+        cands.append(v)
+        if v == 1:
+            break
+        v = -(-v // 2)
+    return tuple(dict.fromkeys(cands))
+
+
+def _divisors(t: int) -> tuple[int, ...]:
+    return tuple(d for d in range(t, 0, -1) if t % d == 0)
+
+
+def largest_divisor_leq(n: int, request: int) -> int:
+    """Largest divisor of `n` that is <= max(1, request): the kernels'
+    clamp from a planned unroll factor to one their grid can realize.
+    Lives here so the kernel-side clamp and the planner's candidate set
+    (which only emits exact divisors) cannot drift apart."""
+    request = max(1, min(request, n))
+    return max(d for d in range(1, request + 1) if n % d == 0)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Analytical model: working set + traffic per op family
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Geom:
+    """Normalized problem geometry shared by the per-op models."""
+    spec: ConvSpec
+    b: int
+    nh: int
+    nw: int
+    cin: int
+    oh: int
+    ow: int
+    cout: int
+    itemsize: int
+
+
+def _geom(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize) -> _Geom:
+    b, nh, nw, cin = x_shape
+    _, oh, ow, cout = dy_shape
+    return _Geom(spec, b, nh, nw, cin, oh, ow, cout, itemsize)
+
+
+def _padded_input_extent(g: _Geom) -> tuple[int, int]:
+    """Tap-window extent of the once-padded input (the x block's spatial
+    frame): (O-1)*S + D*(K-1) + 1 per axis."""
+    sh, sw = g.spec.stride
+    dh, dw = g.spec.dilation
+    kh, kw = g.spec.filter_shape
+    return ((g.oh - 1) * sh + dh * (kh - 1) + 1,
+            (g.ow - 1) * sw + dw * (kw - 1) + 1)
+
+
+def _filter_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+    """(ws, traffic, steps, step_blk) for the rebuilt filter-grad kernel:
+    grid (Cin_t, Cout_t, B, spatial, tap_steps), out block
+    (T, ci_t, co_t) stationary across the sequential (B, spatial, tap)
+    accumulation axes.  Tap slices are consumed one at a time (per-tap
+    matmuls, no concatenated stack), so the unroll factor adds no
+    resident transient."""
+    sh, _ = g.spec.stride
+    dh, _ = g.spec.dilation
+    kh, kw = g.spec.filter_shape
+    t = kh * kw
+    _, wp = _padded_input_extent(g)
+    sp = min(sp_t, g.oh)
+    rows_x = (sp - 1) * sh + dh * (kh - 1) + 1
+    n_ci, n_co = _cdiv(g.cin, ci_t), _cdiv(g.cout, co_t)
+    n_sp, n_t = _cdiv(g.oh, sp), _cdiv(t, u)
+
+    x_blk = rows_x * wp * ci_t * g.itemsize
+    dy_blk = sp * g.ow * co_t * g.itemsize
+    out_blk = t * ci_t * co_t * 4                      # fp32 accumulator
+    ws = 2 * (x_blk + dy_blk) + out_blk + sp * g.ow * ci_t * 4 \
+        + ci_t * co_t * 4
+
+    # Compiled traffic (blocks DMA'd on index-map change): x streams once
+    # per Cout tile, dy once per Cin tile, out written once.
+    traffic = (n_co * (g.b * n_sp * n_ci * x_blk)
+               + n_ci * (g.b * n_sp * n_co * dy_blk)
+               + t * n_ci * ci_t * n_co * co_t * 4)
+    if n_sp > 1:   # host-side overlapping-slab stack: one extra x copy
+        traffic += g.b * n_sp * rows_x * wp * g.cin * g.itemsize
+    steps = n_ci * n_co * g.b * n_sp * n_t
+    return ws, traffic, steps, x_blk + dy_blk
+
+
+def _forward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+    """dconv_forward: grid (B, Cout_t, Cin_t, T/u); x block holds the
+    full padded frame at a Cin tile, the w block `u` taps' weights, out
+    accumulates over the sequential (Cin_t, tap-step) axes."""
+    kh, kw = g.spec.filter_shape
+    t = kh * kw
+    hp, wp = _padded_input_extent(g)
+    n_ci, n_co = _cdiv(g.cin, ci_t), _cdiv(g.cout, co_t)
+    x_blk = hp * wp * ci_t * g.itemsize
+    w_blk = u * ci_t * co_t * g.itemsize
+    out_blk = g.oh * g.ow * co_t * 4
+    ws = 2 * (x_blk + w_blk) + out_blk + g.oh * g.ow * ci_t * 4
+    traffic = (n_co * (g.b * n_ci * x_blk)
+               + g.b * t * n_ci * n_co * ci_t * co_t * g.itemsize
+               + g.b * g.oh * g.ow * n_co * co_t * 4)
+    steps = g.b * n_co * n_ci * _cdiv(t, u)
+    return ws, traffic, steps, x_blk + w_blk
+
+
+def _input_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+    """tconv_phase: grid (B, T/pu, Cin_t, Cout_t, TK/u); dy block holds
+    the full padded frame at a Cout tile, the w block `pu * u` packed
+    (phase, tap)s, the out block `pu` phase planes; out accumulates over
+    the sequential (Cout_t, tap-step) axes."""
+    s = g.spec
+    tph, tpw = s.n_tap_phases
+    kp, kq = s.taps_per_phase
+    t, tk = tph * tpw, kp * kq
+    fh, fw = s.full_size((g.oh, g.ow))
+    ho, wo = _cdiv(fh, s.stride[0]), _cdiv(fw, s.stride[1])
+    pad_h = s.tap_phase_base(tph - 1, 0) + (kp - 1) * s.tap_phase_step[0]
+    pad_w = s.tap_phase_base(tpw - 1, 1) + (kq - 1) * s.tap_phase_step[1]
+    hp, wp = pad_h + ho, pad_w + wo
+    n_ci, n_co = _cdiv(g.cin, ci_t), _cdiv(g.cout, co_t)
+    dy_blk = hp * wp * co_t * g.itemsize
+    w_blk = pu * u * co_t * ci_t * g.itemsize
+    out_blk = pu * ho * wo * ci_t * 4
+    ws = 2 * (dy_blk + w_blk) + out_blk + ho * wo * co_t * 4
+    traffic = (g.b * _cdiv(t, pu) * n_ci * n_co * dy_blk
+               + g.b * t * tk * n_ci * n_co * co_t * ci_t * g.itemsize
+               + g.b * t * ho * wo * n_ci * ci_t * 4)
+    steps = g.b * _cdiv(t, pu) * n_ci * n_co * _cdiv(tk, u)
+    return ws, traffic, steps, dy_blk + w_blk
+
+
+_MODELS: Dict[str, Callable] = {
+    "filter_grad": _filter_grad_model,
+    "forward": _forward_model,
+    "input_grad": _input_grad_model,
+}
+
+_GRID_ORDERS = {
+    "filter_grad": ("cin", "cout", "batch", "spatial", "tap"),
+    "forward": ("batch", "cout", "cin", "tap"),
+    "input_grad": ("batch", "phase", "cin", "cout", "tap"),
+}
+
+
+def _candidates(op: str, g: _Geom):
+    """The candidate (ci_t, co_t, sp_t, u, pu) lattice for one op
+    family.  `u` ranges over divisors of the op's tap-axis extent:
+    Kh*Kw for the tap-on-grid kernels, KP*KQ packed taps per phase for
+    the unified input gradient -- whose phase axis additionally unrolls
+    by `pu` (a divisor of the non-empty phase count).  Only the
+    filter-grad grid spatially tiles."""
+    kh, kw = g.spec.filter_shape
+    t = kh * kw
+    ci_cands = _channel_candidates(g.cin)
+    co_cands = _channel_candidates(g.cout)
+    sp_cands = _spatial_candidates(g.oh) if op == "filter_grad" \
+        else (g.oh,)
+    if op == "input_grad":
+        kp, kq = g.spec.taps_per_phase
+        tph, tpw = g.spec.n_tap_phases
+        u_cands = _divisors(kp * kq)
+        pu_cands = _divisors(tph * tpw)
+    else:
+        u_cands = _divisors(t)
+        pu_cands = (1,)
+    for ci_t in ci_cands:
+        for co_t in co_cands:
+            for sp_t in sp_cands:
+                for u in u_cands:
+                    for pu in pu_cands:
+                        yield ci_t, co_t, sp_t, u, pu
+
+
+def _score(op: str, g: _Geom, ci_t, co_t, sp_t, u, pu, budget, interpret):
+    """Modeled cost of one candidate, or None if it violates a constraint."""
+    ws, traffic, steps, step_blk = _MODELS[op](g, ci_t, co_t, sp_t, u, pu)
+    if ws > budget:
+        return None
+    if not interpret and pu * u > MAX_TAP_UNROLL_COMPILED:
+        return None   # kernel code size, not VMEM, binds the unroll
+    if interpret:
+        # The interpret emulation re-materializes every block each step,
+        # so its traffic is per-step, not per-index-change.
+        traffic = steps * step_blk
+        return traffic + steps * STEP_COST_INTERPRET
+    return traffic + steps * STEP_COST_COMPILED
+
+
+@functools.lru_cache(maxsize=4096)
+def _analytical_plan(op: str, spec: ConvSpec, x_shape, dy_shape,
+                     itemsize: int, budget: int,
+                     interpret: bool) -> TilePlan:
+    g = _geom(op, spec, x_shape, dy_shape, itemsize)
+    best, best_cost = None, None
+    for ci_t, co_t, sp_t, u, pu in _candidates(op, g):
+        cost = _score(op, g, ci_t, co_t, sp_t, u, pu, budget, interpret)
+        if cost is None:
+            continue
+        # Deterministic tie-break: prefer larger tiles, then larger unroll
+        # (better MXU occupancy at equal modeled cost).
+        key = (cost, -ci_t * co_t, -u * pu, -sp_t)
+        if best is None or key < best_cost:
+            best, best_cost = (ci_t, co_t, sp_t, u, pu), key
+    if best is None:   # nothing fits: fall back to the smallest candidate
+        best = (min(8, g.cin), min(8, g.cout), 1, 1, 1)
+    ci_t, co_t, sp_t, u, pu = best
+    return TilePlan(cin_tile=ci_t, cout_tile=co_t, spatial_tile=sp_t,
+                    tap_unroll=u, phase_unroll=pu,
+                    grid_order=_GRID_ORDERS[op], source="analytical")
+
+
+# ---------------------------------------------------------------------------
+# Empirical autotune: sweep candidates with the real kernel, cache winners
+# ---------------------------------------------------------------------------
+
+# Each kernel module registers `runner(plan) -> seconds` factories here at
+# import (keyed by op); tiling itself never imports the kernels, so there
+# is no cycle.  A runner factory receives the concrete geometry and
+# returns a callable that executes the kernel at one candidate plan.
+_RUNNERS: Dict[str, Callable] = {}
+
+
+def register_autotune_runner(op: str, factory: Callable) -> None:
+    _RUNNERS[op] = factory
+
+
+def _median_time_us(fn, iters: int = 5, warmup: int = 2) -> float:
+    """Median-of-iters timing, preferring the shared benchmark timer so
+    autotune numbers and BENCH_conv.json rows are directly comparable."""
+    try:
+        from benchmarks.wallclock import _time
+        return _time(fn, iters=iters, warmup=warmup)
+    except ImportError:
+        import statistics
+        import time as _t
+        fn()
+        for _ in range(warmup):
+            fn()
+        samples = []
+        for _ in range(iters):
+            t0 = _t.perf_counter()
+            fn()
+            samples.append(_t.perf_counter() - t0)
+        return statistics.median(samples) * 1e6
+
+
+def cache_path() -> pathlib.Path:
+    env = os.environ.get("ECOFLOW_TILE_CACHE")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path(os.path.expanduser("~")) / ".cache" / "ecoflow" / \
+        "tile_cache.json"
+
+
+def _cache_key(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
+               budget, interpret) -> str:
+    """Execution mode and budget are part of the key: an interpret-tuned
+    winner (which may unroll far past MAX_TAP_UNROLL_COMPILED) must never
+    be served to a compiled TPU run, and a tightened VMEM budget must
+    re-tune rather than replay a plan scored against the old budget."""
+    sh, sw = spec.stride
+    ph, pw = spec.padding
+    kh, kw = spec.filter_shape
+    dh, dw = spec.dilation
+    b, nh, nw, cin = x_shape
+    _, oh, ow, cout = dy_shape
+    mode = "interp" if interpret else "compiled"
+    return (f"{op}|b{b}|n{nh}x{nw}|o{oh}x{ow}|k{kh}x{kw}|s{sh}x{sw}"
+            f"|p{ph}x{pw}|d{dh}x{dw}|ci{cin}|co{cout}|w{itemsize}"
+            f"|vm{budget}|{mode}")
+
+
+_MEM_CACHE: Dict[str, TilePlan] = {}
+
+
+def _load_disk_cache(path: pathlib.Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_disk_cache(path: pathlib.Path, doc: dict) -> None:
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    except OSError:
+        pass   # cache is an optimization; never fail the conv over it
+
+
+def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
+                   budget, interpret, path: pathlib.Path,
+                   runner_factory: Optional[Callable]) -> TilePlan:
+    key = _cache_key(op, spec, x_shape, dy_shape, itemsize, budget,
+                     interpret)
+    if key in _MEM_CACHE:
+        return _MEM_CACHE[key]
+    disk = _load_disk_cache(path)
+    if key in disk:
+        rec = disk[key]
+        plan = TilePlan(cin_tile=rec["cin_tile"], cout_tile=rec["cout_tile"],
+                        spatial_tile=rec["spatial_tile"],
+                        tap_unroll=rec.get("tap_unroll", 1),
+                        phase_unroll=rec.get("phase_unroll", 1),
+                        grid_order=tuple(rec.get("grid_order",
+                                                 _GRID_ORDERS[op])),
+                        source="cache")
+        _MEM_CACHE[key] = plan
+        return plan
+    factory = runner_factory or _RUNNERS.get(op)
+    if factory is None:   # no runner registered: analytical fallback
+        return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
+                                budget, interpret)
+    g = _geom(op, spec, x_shape, dy_shape, itemsize)
+    run = factory(spec, x_shape, dy_shape)
+    best_plan, best_us = None, math.inf
+    for ci_t, co_t, sp_t, u, pu in _candidates(op, g):
+        if _score(op, g, ci_t, co_t, sp_t, u, pu, budget,
+                  interpret) is None:
+            continue
+        plan = TilePlan(cin_tile=ci_t, cout_tile=co_t, spatial_tile=sp_t,
+                        tap_unroll=u, phase_unroll=pu,
+                        grid_order=_GRID_ORDERS[op], source="autotune")
+        try:
+            us = _median_time_us(lambda p=plan: run(p))
+        except Exception:   # candidate failed to lower/run: skip it
+            continue
+        if us < best_us:
+            best_plan, best_us = plan, us
+    if best_plan is None:
+        return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
+                                budget, interpret)
+    disk[key] = dict(best_plan.as_dict(), us=round(best_us, 1))
+    _store_disk_cache(path, disk)
+    _MEM_CACHE[key] = best_plan
+    return best_plan
+
+
+# ---------------------------------------------------------------------------
+# Public entry
+# ---------------------------------------------------------------------------
+
+def plan_tiles(op: str, spec: ConvSpec, *, x_shape, dy_shape,
+               itemsize: int = 4, vmem_budget: Optional[int] = None,
+               interpret: bool = False, mode: Optional[str] = None,
+               runner_factory: Optional[Callable] = None,
+               tile_cache_path=None) -> TilePlan:
+    """Select (cin_tile, cout_tile, spatial_tile, tap_unroll, grid order)
+    for one kernel launch.
+
+    op        -- "filter_grad" | "forward" | "input_grad".
+    x_shape   -- (B, Nh, Nw, Cin) forward-input shape.
+    dy_shape  -- (B, Oh, Ow, Cout) forward-output / error shape.
+    itemsize  -- operand dtype bytes (accumulators are always fp32).
+    interpret -- True when the kernel will run in interpret mode; weights
+                 the per-grid-step cost accordingly.
+    mode      -- "analytical" (default) | "autotune"; defaults to the
+                 ECOFLOW_TILING env var.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+    x_shape, dy_shape = tuple(map(int, x_shape)), tuple(map(int, dy_shape))
+    if vmem_budget is None:
+        vmem_budget = int(os.environ.get("ECOFLOW_VMEM_BUDGET",
+                                         DEFAULT_VMEM_BUDGET))
+    if mode is None:
+        mode = os.environ.get("ECOFLOW_TILING", "analytical")
+    if mode == "autotune":
+        path = pathlib.Path(tile_cache_path) if tile_cache_path \
+            else cache_path()
+        return _autotune_plan(op, spec, x_shape, dy_shape, itemsize,
+                              vmem_budget, interpret, path, runner_factory)
+    return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
+                            vmem_budget, interpret)

@@ -244,31 +244,70 @@ def test_backward_pass_is_two_pallas_launches(rng):
     assert _count_pallas_calls(g, x, w) == 2
 
 
-def test_filter_grad_batch_not_innermost(rng):
-    """B>1 re-fetch regression: the filter-grad grid iterates batch
-    OUTERMOST (so the padded-input block stays VMEM-resident across the
-    tap/Cout axes, its index map depending only on outer axes) and emits
-    per-batch partials reduced host-side -- and the gradient still
-    matches `reference`."""
+def test_filter_grad_batch_sequential_no_hbm_partials(rng):
+    """Batch is an IN-KERNEL sequential accumulation axis: the grid is
+    (Cin_t, Cout_t, B, SP, T'), the single pallas output is the
+    (T, Cin, Cout) gradient itself -- no (B, T, Cin, Cout) HBM partial
+    slab anywhere in the jaxpr and no host-side batch reduction (the
+    out block is stationary across every (B, SP, tap) step).  The
+    padded-input block's index map still ignores the tap axis, so the
+    PR 2 B>1 re-fetch cannot recur.  Gradient matches `reference`."""
     B, N, K, S, Ci, Co = 3, 9, 2, 2, 4, 4
+    T = K * K
     O = (N - K) // S + 1
     x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
     dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
     fn = lambda x_, dy_: ops.dconv_filter_grad(x_, dy_, stride=(S, S),
                                                padding=(0, 0), k=(K, K))
     grids = _pallas_grids(fn, x, dy)
     assert len(grids) == 1
     grid = grids[0]
-    # grid = (B, Cin_tiles, T, Cout_tiles): batch leads, taps/Cout trail.
-    assert grid[0] == B, grid
-    assert grid[-1] != B and grid[-2] == K * K, grid
+    # grid = (Cin_t, Cout_t, B, SP, T'): batch is the third, SEQUENTIAL
+    # axis (inside the output-tile axes, outside the tap axis).
+    assert len(grid) == 5 and grid[2] == B, grid
+    # No (B, T, Cin, Cout) partial slab in the traced computation ...
+    from conftest import walk_eqns
+    jaxpr = jax.make_jaxpr(fn)(x, dy)
+    for e in walk_eqns(jaxpr.jaxpr):
+        for v in e.outvars:
+            shape = getattr(v.aval, "shape", ())
+            assert tuple(shape[:2]) != (B, T), (e.primitive, shape)
+        # ... and no host-side batch `sum` after the launch.
+        assert e.primitive.name != "reduce_sum", e
 
     dw = fn(x, dy)
     be = resolve_backend("reference")
     spec = ConvSpec.make(stride=S, padding=0, filter_shape=K)
     want = be.filter_grad(x, dy, spec)
     assert_allclose(dw, want, rtol=1e-4, atol=1e-4)
+
+
+# (name, B, N, K, S, P, Ci, Co): B > 1 and channels that are NOT
+# multiples of any planner tile the pallas path might choose -- Cin/Cout
+# above 128 force a 128 tile with a ragged remainder through the
+# planner itself, not just through explicit test tiles.
+FILTER_GRAD_RAGGED_GEOMS = [
+    ("ragged_cin", 2, 7, 3, 2, 1, 130, 3),
+    ("ragged_cout", 3, 7, 3, 2, 0, 3, 131),
+    ("ragged_both_b3", 3, 5, 2, 1, 0, 29, 21),
+]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name,B,N,K,S,P,Ci,Co", FILTER_GRAD_RAGGED_GEOMS)
+def test_filter_grad_ragged_batched_all_backends(rng, backend, name, B, N,
+                                                 K, S, P, Ci, Co):
+    """Filter-grad parity at B > 1 with ragged channel counts, through
+    every backend's dispatch path (the pallas planner must keep the
+    in-kernel batch accumulation and channel pad/slice exact)."""
+    O = (N + 2 * P - K) // S + 1
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    spec = ConvSpec.make(stride=S, padding=P, filter_shape=K)
+    got = resolve_backend(backend).filter_grad(x, dy, spec)
+    want = resolve_backend("reference").filter_grad(x, dy, spec)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4,
+                    err_msg=f"{name}/{backend}")
 
 
 def test_filter_grad_memory_not_k2_replicated(rng):

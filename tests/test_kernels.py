@@ -111,7 +111,7 @@ def test_tconv_cout_tiled_dy_block(rng):
     N = S * (O - 1) + K
     fn = lambda dy_, w_: tconv_fused_pallas(
         dy_, w_, stride=(S, S), padding=(P, P), n_out=(N, N),
-        cout_tile=tile, cin_tile=4, interpret=True)
+        cout_tile=tile, cin_tile=4, tap_unroll=1, interpret=True)
     grids = _pallas_grids(fn, dy, w)
     assert len(grids) == 1
     # grid (B, T, Cin_t, Cout_t, TK): sequential Cout axis of ceil(Co/tile).
@@ -229,6 +229,70 @@ def test_dconv_filtergrad_dilated_sweep(rng, B, N, K, S, P, D, Ci, Co):
     assert_allclose(dw, want, rtol=1e-4, atol=1e-4)
 
 
+def test_filter_grad_spatially_tiled_batch_sequential(rng):
+    """Block-shape pins for the rebuilt filter-grad grid: with a spatial
+    tile the x block holds ONE overlapping slab -- never the full
+    Hp x Wp padded frame -- the out block carries ALL taps of a channel
+    tile (stationary across the sequential (B, SP, tap) axes, no
+    (B, T, Ci, Co) HBM partials), and the result still matches the
+    oracle (fp32 accumulation across batch and spatial slabs)."""
+    B, N, K, S, P, Ci, Co = 2, 33, 3, 2, 0, 12, 20
+    O = (N - K) // S + 1                     # 16 output rows
+    ci_t, co_t, sp, u = 8, 8, 4, 3
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    fn = lambda x_, dy_: dconv_filter_grad_pallas(
+        x_, dy_, stride=(S, S), padding=(P, P), k=(K, K),
+        cin_tile=ci_t, cout_tile=co_t, spatial_tile=sp, tap_unroll=u,
+        interpret=True)
+    grids = _pallas_grids(fn, x, dy)
+    assert len(grids) == 1
+    n_sp = -(-O // sp)
+    # grid (Cin_t, Cout_t, B, SP, T'): batch + spatial SEQUENTIAL.
+    assert grids[0] == (-(-Ci // ci_t), -(-Co // co_t), B, n_sp,
+                        K * K // u), grids[0]
+    x_block, dy_block, out_block = pallas_block_shapes(fn, x, dy)[0]
+    rows_x = (sp - 1) * S + (K - 1) + 1      # slab rows incl. tap halo
+    hp = (O - 1) * S + K                     # full padded frame rows
+    assert x_block[2] == rows_x < hp, (x_block, hp)
+    assert x_block[-1] == ci_t, x_block      # channel tile, not Ci
+    assert dy_block[2:] == (sp, O, co_t), dy_block
+    # out block: ALL K*K taps of one (ci, co) tile -- the accumulator is
+    # stationary, so there is no (B, T, Ci, Co) partial to reduce.
+    assert out_block == (K * K, ci_t, co_t), out_block
+    dw = fn(x, dy)
+    want = ref.dconv_filter_grad_ref(x, dy, stride=(S, S), padding=(P, P),
+                                     k=(K, K))
+    assert_allclose(dw, want, rtol=1e-4, atol=1e-4)
+
+
+RAGGED_TILE_SWEEP = [
+    # (B, N, K, S, P, Ci, Co, ci_t, co_t, sp, u): tiles that do NOT
+    # divide the channel counts, plus spatial tiles that do not divide O.
+    (2, 9, 3, 2, 0, 13, 21, 8, 16, 3, 9),
+    (3, 11, 3, 1, 1, 5, 7, 4, 4, 4, 1),
+    (1, 23, 11, 4, 2, 3, 5, 2, 4, 2, 11),
+]
+
+
+@pytest.mark.parametrize("B,N,K,S,P,Ci,Co,ci_t,co_t,sp,u",
+                         RAGGED_TILE_SWEEP)
+def test_dconv_filtergrad_ragged_tiles(rng, B, N, K, S, P, Ci, Co, ci_t,
+                                       co_t, sp, u):
+    """Explicitly pinned tilings with ragged channel/spatial remainders
+    (pad-then-slice paths) still match the oracle at B > 1."""
+    O = (N + 2 * P - K) // S + 1
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    dw = dconv_filter_grad_pallas(x, dy, stride=(S, S), padding=(P, P),
+                                  k=(K, K), cin_tile=ci_t, cout_tile=co_t,
+                                  spatial_tile=sp, tap_unroll=u,
+                                  interpret=True)
+    want = ref.dconv_filter_grad_ref(x, dy, stride=(S, S), padding=(P, P),
+                                     k=(K, K))
+    assert_allclose(dw, want, rtol=1e-4, atol=1e-4)
+
+
 def test_dconv_filtergrad_bf16(rng):
     B, N, K, S, Ci, Co = 2, 9, 3, 2, 4, 4
     O = (N - K) // S + 1
@@ -278,7 +342,7 @@ def test_dconv_forward_cin_tiled(rng):
     w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
     fn = lambda x_, w_: dconv_forward_pallas(
         x_, w_, stride=(S, S), padding=(P, P), dilation=(D, D),
-        cin_tile=tile, cout_tile=tile, interpret=True)
+        cin_tile=tile, cout_tile=tile, tap_unroll=1, interpret=True)
     grids = _pallas_grids(fn, x, w)
     assert len(grids) == 1
     # grid (B, Cout_t, Cin_t, T): batch leads, taps innermost, and a

@@ -1,0 +1,197 @@
+"""Geometry-aware tile planner (`kernels/tiling.py`): analytical model
+invariants (budget respected, exact channel tiles preferred, spatial
+tiling under VMEM pressure, interpret-vs-compiled step weighting) and the
+empirical autotune mode (candidate sweep through a registered runner,
+JSON cache persistence, memory + disk cache hits)."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.core.spec import ConvSpec
+from repro.kernels import tiling
+
+
+def _shapes(B, N, O, Ci, Co):
+    return (B, N, N, Ci), (B, O, O, Co)
+
+
+def test_plan_respects_vmem_budget():
+    """Every returned plan's modeled working set fits the budget, across
+    op families and budgets."""
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=3)
+    x_shape, dy_shape = _shapes(2, 127, 63, 256, 256)
+    for op in tiling.OPS:
+        # filter_grad can always shrink its spatial slab to fit a tight
+        # budget; forward/input_grad hold a full spatial frame, so only
+        # test budgets a frame can fit (below that the planner falls
+        # back to the minimum-footprint candidate by design).
+        budgets = (1 << 20, 4 << 20, tiling.DEFAULT_VMEM_BUDGET) \
+            if op == "filter_grad" else (4 << 20, tiling.DEFAULT_VMEM_BUDGET)
+        for budget in budgets:
+            plan = tiling.plan_tiles(op, spec, x_shape=x_shape,
+                                     dy_shape=dy_shape,
+                                     vmem_budget=budget, interpret=False)
+            g = tiling._geom(op, spec, x_shape, dy_shape, 4)
+            ws, _, _, _ = tiling._MODELS[op](
+                g, plan.cin_tile, plan.cout_tile, plan.spatial_tile,
+                plan.tap_unroll, plan.phase_unroll)
+            assert ws <= budget, (op, budget, plan)
+            assert plan.grid_order == tiling._GRID_ORDERS[op]
+            assert plan.source == "analytical"
+
+
+def test_exact_channel_tiles_preferred_when_small():
+    """Sub-128 channel counts get their EXACT extent as the tile (no
+    host pad/slice at all) -- the ShuffleNet-29 case that a hard-coded
+    128 default handled with pad-to-128 waste."""
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 29, 14, 29, 29)
+    for interpret in (False, True):
+        plan = tiling.plan_tiles("filter_grad", spec, x_shape=x_shape,
+                                 dy_shape=dy_shape, interpret=interpret)
+        assert plan.cin_tile == 29 and plan.cout_tile == 29, plan
+
+
+def test_spatial_tiling_engages_under_vmem_pressure():
+    """A big padded frame with a tight budget forces the filter-grad x
+    block down to a spatial slab (spatial_tile < Oh), instead of either
+    busting the budget or shrinking channel tiles to nothing."""
+    spec = ConvSpec.make(stride=1, padding=1, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 256, 256, 64, 64)
+    plan = tiling.plan_tiles("filter_grad", spec, x_shape=x_shape,
+                             dy_shape=dy_shape, vmem_budget=1 << 20,
+                             interpret=False)
+    assert plan.spatial_tile < 256, plan
+    g = tiling._geom("filter_grad", spec, x_shape, dy_shape, 4)
+    ws, _, _, _ = tiling._MODELS["filter_grad"](
+        g, plan.cin_tile, plan.cout_tile, plan.spatial_tile,
+        plan.tap_unroll)
+    assert ws <= 1 << 20
+
+
+def test_interpret_mode_prefers_fewer_steps():
+    """Interpret mode pays per grid step, so the planner unrolls the tap
+    loop (fewer, fatter steps); compiled mode caps the unroll at the
+    code-size bound."""
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 29, 14, 29, 29)
+    interp = tiling.plan_tiles("filter_grad", spec, x_shape=x_shape,
+                               dy_shape=dy_shape, interpret=True)
+    comp = tiling.plan_tiles("filter_grad", spec, x_shape=x_shape,
+                             dy_shape=dy_shape, interpret=False)
+    assert interp.tap_unroll == 9, interp       # all taps in one step
+    assert comp.tap_unroll <= tiling.MAX_TAP_UNROLL_COMPILED, comp
+
+
+def test_plan_is_deterministic():
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=5, dilation=2)
+    x_shape, dy_shape = _shapes(2, 33, 13, 48, 96)
+    plans = [tiling.plan_tiles(op, spec, x_shape=x_shape,
+                               dy_shape=dy_shape, interpret=True)
+             for op in ("filter_grad", "forward", "input_grad")
+             for _ in range(2)]
+    assert plans[0] == plans[1] and plans[2] == plans[3] \
+        and plans[4] == plans[5]
+
+
+def test_unknown_op_rejected():
+    spec = ConvSpec.make(stride=1, filter_shape=1)
+    with pytest.raises(ValueError, match="unknown op"):
+        tiling.plan_tiles("nope", spec, x_shape=(1, 4, 4, 1),
+                          dy_shape=(1, 4, 4, 1))
+
+
+def test_autotune_sweeps_caches_and_persists(tmp_path):
+    """Autotune mode sweeps the candidate set through the registered
+    runner exactly once per geometry: the winner persists to the JSON
+    cache and later calls hit the in-memory / on-disk caches without
+    re-running a single candidate."""
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=2)
+    x_shape, dy_shape = _shapes(1, 8, 4, 4, 4)
+    cache = tmp_path / "tile_cache.json"
+    calls = []
+
+    def factory(spec_, x_s, dy_s):
+        assert spec_ == spec and x_s == x_shape and dy_s == dy_shape
+
+        def run(plan):
+            calls.append(plan)
+            return None
+
+        return run
+
+    kw = dict(x_shape=x_shape, dy_shape=dy_shape, mode="autotune",
+              runner_factory=factory, tile_cache_path=cache)
+    tiling._MEM_CACHE.clear()
+    plan = tiling.plan_tiles("filter_grad", spec, **kw)
+    assert calls, "autotune never invoked the runner"
+    assert plan.source == "autotune"
+    n_swept = len(calls)
+
+    # Second call: in-memory cache, no new runner invocations.
+    plan2 = tiling.plan_tiles("filter_grad", spec, **kw)
+    assert len(calls) == n_swept
+    assert (plan2.cin_tile, plan2.cout_tile) == (plan.cin_tile,
+                                                 plan.cout_tile)
+
+    # Fresh "process": disk cache only.
+    tiling._MEM_CACHE.clear()
+    plan3 = tiling.plan_tiles("filter_grad", spec, **kw)
+    assert len(calls) == n_swept
+    assert plan3.source == "cache"
+    assert plan3.cin_tile == plan.cin_tile
+
+    doc = json.loads(cache.read_text())
+    assert len(doc) == 1
+    (key, rec), = doc.items()
+    assert key.startswith("filter_grad|") and "us" in rec
+    assert rec["cin_tile"] == plan.cin_tile
+
+
+def test_autotune_without_runner_falls_back_analytical(tmp_path):
+    """No registered runner for an op -> autotune degrades to the
+    analytical model instead of failing the conv."""
+    spec = ConvSpec.make(stride=1, filter_shape=1)
+    saved = dict(tiling._RUNNERS)
+    tiling._RUNNERS.clear()
+    try:
+        plan = tiling.plan_tiles(
+            "forward", spec, x_shape=(1, 4, 4, 3), dy_shape=(1, 4, 4, 5),
+            mode="autotune", tile_cache_path=tmp_path / "c.json")
+    finally:
+        tiling._RUNNERS.update(saved)
+    assert plan.source == "analytical"
+
+
+def test_autotune_through_real_kernel(tmp_path):
+    """End to end: the filter-grad kernel's registered runner really
+    executes the kernel per candidate and the cached winner reproduces
+    the reference gradient when used."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ref
+    from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
+    rng = np.random.default_rng(0)
+    B, N, K, S, Ci, Co = 1, 7, 2, 2, 3, 4
+    O = (N - K) // S + 1
+    x_shape, dy_shape = (B, N, N, Ci), (B, O, O, Co)
+    spec = ConvSpec.make(stride=S, padding=0, filter_shape=K)
+    tiling._MEM_CACHE.clear()
+    plan = tiling.plan_tiles("filter_grad", spec, x_shape=x_shape,
+                             dy_shape=dy_shape, mode="autotune",
+                             tile_cache_path=tmp_path / "c.json")
+    assert plan.source == "autotune"
+    assert (tmp_path / "c.json").exists()
+    x = jnp.asarray(rng.normal(size=x_shape), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=dy_shape), jnp.float32)
+    dw = dconv_filter_grad_pallas(
+        x, dy, stride=(S, S), padding=(0, 0), k=(K, K),
+        cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
+        spatial_tile=plan.spatial_tile, tap_unroll=plan.tap_unroll,
+        interpret=True)
+    want = ref.dconv_filter_grad_ref(x, dy, stride=(S, S),
+                                     padding=(0, 0), k=(K, K))
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
