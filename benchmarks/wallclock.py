@@ -3,10 +3,14 @@ naive dataflows, executed for real in JAX on this host (CPU here; the same
 code paths compile for TPU) -- plus the conv *backend* comparison
 (multi-launch `xla_zero_free` vs fused single-launch `pallas`) across the
 paper's Table 5/7 layer geometries, the dilated-forward (atrous)
-geometries at rates d in {2, 4}, and the general strided+dilated
+geometries at rates d in {2, 4}, the general strided+dilated
 input-gradient geometries (S > 1 AND D > 1, the unified (phase, tap)
-kernel's family), emitted to BENCH_conv.json so future PRs have a perf
-trajectory.
+kernel's family), the FUSED dual-gradient backward (dx + dW from one
+launch vs the two-launch pair it replaced), and end-to-end TRAINING-STEP
+rows (a CNN SGD step and a GAN generator step per backend -- the paper's
+headline numbers are training-step speedups, so the trajectory file
+tracks the same quantity), emitted to BENCH_conv.json so future PRs have
+a perf trajectory.
 
 Reported as name,us_per_call,derived -- `derived` carries the speedup and
 the useful-MAC fraction from the analytical model for cross-checking.
@@ -156,6 +160,67 @@ STRIDED_DILATED_CASES = [
     ("strided-atrous-s3d2", 7, 3, 3, 1, 2, 16, 16),
 ]
 
+# End-to-end training-step cases: one full jit'd SGD step (forward +
+# backward + update) through the real models, per backend -- the paper's
+# headline metric.  `config` values stay JSON-round-trip stable (lists,
+# ints) because the delta gate diffs them against the committed rows.
+TRAIN_STEP_CASES = [
+    ("train-step-cnn", "cnn",
+     {"widths": [8, 16], "batch": 2, "image": 12, "n_classes": 10}),
+    ("train-step-gan-gen", "gan_gen",
+     {"base": 8, "z_dim": 16, "batch": 2}),
+]
+
+
+def _train_step_fns(kind, cfg, backends, rng):
+    """Zero-arg jit'd SGD-step callables per backend for one train-step
+    case: forward + `jax.grad` (which dispatches the FUSED backward on
+    the pallas backend) + parameter update, on shared params/data so the
+    interleaved timing compares backends on identical work."""
+    lr = 0.05
+
+    def _sgd(params, grads):
+        return jax.tree_util.tree_map(lambda p, g: p - lr * g, params,
+                                      grads)
+
+    if kind == "cnn":
+        from repro.models import cnn
+        params = cnn.simple_cnn_init(jax.random.PRNGKey(0), in_ch=3,
+                                     widths=tuple(cfg["widths"]),
+                                     n_classes=cfg["n_classes"])
+        x = jnp.asarray(rng.normal(size=(cfg["batch"], cfg["image"],
+                                         cfg["image"], 3)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, cfg["n_classes"],
+                                          size=cfg["batch"]))
+        fns = {}
+        for bname in backends:
+            f = jax.jit(lambda p, be=bname: _sgd(p, jax.grad(
+                lambda q: cnn.cnn_loss(q, x, labels, stride=2,
+                                       backend=be))(p)))
+            fns[bname] = lambda f=f: f(params)
+        return fns
+    if kind == "gan_gen":
+        from repro.models import gan
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        gp = gan.generator_init(k1, z_dim=cfg["z_dim"], base=cfg["base"],
+                                out_ch=3)
+        dp = gan.discriminator_init(k2, in_ch=3, base=cfg["base"])
+        z = jnp.asarray(rng.normal(size=(cfg["batch"], cfg["z_dim"])),
+                        jnp.float32)
+
+        def gen_loss(gp_, be):
+            fake = gan.generator_apply(gp_, z, backend=be)
+            return jax.nn.softplus(
+                -gan.discriminator_apply(dp, fake, backend=be)).mean()
+
+        fns = {}
+        for bname in backends:
+            f = jax.jit(lambda p, be=bname: _sgd(p, jax.grad(
+                lambda q: gen_loss(q, be))(p)))
+            fns[bname] = lambda f=f: f(gp)
+        return fns
+    raise ValueError(f"unknown train-step kind {kind!r}")
+
 
 def _plan_dict(op, spec, x_shape, dy_shape):
     """The planner's decision for one (op, geometry) -- recorded per
@@ -172,18 +237,25 @@ def _plan_dict(op, spec, x_shape, dy_shape):
 
 def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                        dilated_cases=None, strided_dilated_cases=None,
-                       json_path=None, name_filter=None, records_out=None):
-    """Time tconv + filter-grad through the xla_zero_free and pallas
-    backends for each geometry -- plus the dilated-forward conv (d in
-    {2, 4}) and the general strided+dilated input gradient through the
-    same two zero-free backends (and, for the dilated forward, the
-    materialized-filter naive baseline); write BENCH_conv.json and return
-    CSV rows.  `cases`/`dilated_cases`/`strided_dilated_cases`/`json_path`
-    exist for the CI smoke run (one tiny geometry per family).
-    `name_filter` (case-name substring) reruns single rows cheaply during
-    autotuning -- a filtered run never writes BENCH_conv.json (it would
-    drop the unselected rows).  `records_out`, if a list, receives the
-    per-case record dicts (the delta gate consumes them).
+                       train_cases=None, json_path=None, name_filter=None,
+                       records_out=None):
+    """Time tconv + filter-grad + the FUSED dual-gradient backward
+    through the xla_zero_free and pallas backends for each geometry --
+    plus the dilated-forward conv (d in {2, 4}), the general
+    strided+dilated input gradient, and end-to-end TRAINING-STEP rows
+    (CNN SGD step, GAN generator step) through the same backends (and,
+    for the dilated forward, the materialized-filter naive baseline);
+    write BENCH_conv.json and return CSV rows.  The backward rows carry a
+    third timing, `two_launch`: the pallas input_grad + filter_grad pair
+    the fused kernel replaced, timed in the same interleaved sweep -- the
+    fused/two-launch ratio is the quantity the delta gate pins.
+    `cases`/`dilated_cases`/`strided_dilated_cases`/`train_cases`/
+    `json_path` exist for the CI smoke run (one tiny geometry per
+    family).  `name_filter` (case-name substring) reruns single rows
+    cheaply during autotuning -- a filtered run never writes
+    BENCH_conv.json (it would drop the unselected rows).  `records_out`,
+    if a list, receives the per-case record dicts (the delta gate
+    consumes them).
     """
     rows, records = [], []
     if name_filter is not None:
@@ -208,19 +280,32 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                    "input_grad": _plan_dict("input_grad", spec,
                                             x.shape, dy.shape),
                    "filter_grad": _plan_dict("filter_grad", spec,
-                                             x.shape, dy.shape)},
-               "tconv_us": {}, "filter_grad_us": {}}
-        fns_t, fns_g = {}, {}
+                                             x.shape, dy.shape),
+                   "backward": _plan_dict("backward", spec,
+                                          x.shape, dy.shape)},
+               "tconv_us": {}, "filter_grad_us": {}, "backward_us": {}}
+        fns_t, fns_g, fns_b = {}, {}, {}
         for bname in backends:
             be = resolve_backend(bname)
             f_t = jax.jit(lambda dy_, w_, be=be: be.input_grad(
                 dy_, w_, spec, (N, N)))
             f_g = jax.jit(lambda x_, dy_, be=be: be.filter_grad(
                 x_, dy_, spec))
+            f_b = jax.jit(lambda x_, dy_, w_, be=be: be.backward(
+                x_, dy_, w_, spec, (N, N)))
             fns_t[bname] = lambda f=f_t: f(dy, w)
             fns_g[bname] = lambda f=f_g: f(x, dy)
+            fns_b[bname] = lambda f=f_b: f(x, dy, w)
+        # The two-launch pair the fused backward replaced, on the SAME
+        # pallas kernels, timed in the same interleaved sweep.
+        be_pl = resolve_backend("pallas")
+        f_two = jax.jit(lambda x_, dy_, w_: (
+            be_pl.input_grad(dy_, w_, spec, (N, N)),
+            be_pl.filter_grad(x_, dy_, spec)))
+        fns_b["two_launch"] = lambda: f_two(x, dy, w)
         t_t = _time_interleaved(fns_t, iters=iters, warmup=warmup)
         t_g = _time_interleaved(fns_g, iters=iters, warmup=warmup)
+        t_b = _time_interleaved(fns_b, iters=iters, warmup=warmup)
         for bname in backends:
             rec["tconv_us"][bname] = round(t_t[bname], 1)
             rec["filter_grad_us"][bname] = round(t_g[bname], 1)
@@ -228,6 +313,13 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                          round(t_t[bname], 1), ""))
             rows.append((f"wallclock.filtergrad.{bname}.{name}",
                          round(t_g[bname], 1), ""))
+        for bname in list(backends) + ["two_launch"]:
+            rec["backward_us"][bname] = round(t_b[bname], 1)
+            derived = "" if bname != "pallas" else (
+                f"fused_vs_two_launch="
+                f"{t_b['two_launch'] / t_b['pallas']:.2f}x")
+            rows.append((f"wallclock.backward.{bname}.{name}",
+                         round(t_b[bname], 1), derived))
         records.append(rec)
     for name, N, K, S, P, D, Ci, Co in flt(DILATED_FORWARD_CASES
                                            if dilated_cases is None
@@ -300,6 +392,20 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
         np.testing.assert_allclose(outs["pallas"], outs["xla_zero_free"],
                                    rtol=1e-3, atol=1e-3)
         records.append(rec)
+    for name, kind, cfg in flt(TRAIN_STEP_CASES if train_cases is None
+                               else train_cases):
+        rec = {"layer": name, "kind": kind, "config": cfg,
+               "interpret_mode": jax.default_backend() != "tpu",
+               "train_step_us": {}}
+        fns_s = _train_step_fns(kind, cfg, backends, rng)
+        t_s = _time_interleaved(fns_s, iters=iters, warmup=warmup)
+        for bname in backends:
+            rec["train_step_us"][bname] = round(t_s[bname], 1)
+            derived = "" if bname == "xla_zero_free" else (
+                f"vs_xla={t_s['xla_zero_free'] / t_s[bname]:.2f}x")
+            rows.append((f"wallclock.train_step.{bname}.{name}",
+                         round(t_s[bname], 1), derived))
+        records.append(rec)
     if records_out is not None:
         records_out.extend(records)
     if write_json:
@@ -311,7 +417,10 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                      "pallas runs in interpret mode off-TPU, so absolute "
                      "numbers are only comparable within a backend+host "
                      "class; `tiling` records the planner decision each "
-                     "pallas row ran under",
+                     "pallas row ran under; `backward_us.pallas` is the "
+                     "FUSED dual-gradient launch vs the `two_launch` "
+                     "pallas pair it replaced; `train_step_us` rows time "
+                     "one full jit'd SGD step (fwd + fused bwd + update)",
              "cases": records}, indent=2) + "\n")
         rows.append(("wallclock.conv_backend.json", str(path), ""))
     return rows
@@ -326,12 +435,18 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
 # normalized against.  Ratios -- pallas / same-row baseline -- are the
 # host-class-portable quantity (the JSON's own note: absolute us are only
 # comparable within a backend+host class, and CI does not run on the
-# host that generated the committed file).
+# host that generated the committed file).  The fused backward gates
+# against the SAME-row two-launch pallas pair (a fused/two-launch ratio
+# regression > 1.5x means the fusion itself lost its reason to exist);
+# the train-step rows gate against the xla_zero_free step like the
+# per-op families.
 _GATE_FIELDS = {
     "tconv_us": "xla_zero_free",
     "filter_grad_us": "xla_zero_free",
     "dilated_forward_us": "xla_zero_free",
     "input_grad_us": "xla_zero_free",
+    "backward_us": "two_launch",
+    "train_step_us": "xla_zero_free",
 }
 
 
@@ -413,11 +528,18 @@ def delta_gate(threshold=1.5, iters=21, warmup=2):
 # ---------------------------------------------------------------------------
 
 # Smoke geometries: minimal sizes that still exercise every op family
-# (tconv, filter-grad, dilated forward, strided+dilated input grad)
-# through both zero-free backends in seconds on an interpret-mode host.
+# (tconv, filter-grad, fused dual-gradient backward, dilated forward,
+# strided+dilated input grad, CNN/GAN train step) through both zero-free
+# backends in seconds on an interpret-mode host.
 SMOKE_CASES = [("smoke-tconv", 5, 3, 2, 4, 4)]
 SMOKE_DILATED_CASES = [("smoke-d2", 9, 3, 1, 2, 2, 4, 4)]
 SMOKE_STRIDED_DILATED_CASES = [("smoke-s2d2", 4, 3, 2, 1, 2, 4, 4)]
+SMOKE_TRAIN_CASES = [
+    ("smoke-train-cnn", "cnn",
+     {"widths": [4], "batch": 1, "image": 8, "n_classes": 4}),
+    ("smoke-train-gan-gen", "gan_gen",
+     {"base": 4, "z_dim": 8, "batch": 1}),
+]
 
 
 def _record_schema(doc) -> set[frozenset]:
@@ -444,6 +566,7 @@ def smoke():
             iters=1, warmup=1, cases=SMOKE_CASES,
             dilated_cases=SMOKE_DILATED_CASES,
             strided_dilated_cases=SMOKE_STRIDED_DILATED_CASES,
+            train_cases=SMOKE_TRAIN_CASES,
             json_path=smoke_json)
         got = _record_schema(json.loads(smoke_json.read_text()))
         committed_doc = json.loads(BENCH_JSON.read_text())
@@ -462,7 +585,7 @@ def smoke():
     finally:
         smoke_json.unlink(missing_ok=True)
     rows.append(("wallclock.smoke.schema", "ok",
-                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES)}"
+                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES)}"
                  " families"))
     return rows
 

@@ -49,12 +49,15 @@ def _fwd(x, w, stride, padding, backend, dilation):
 
 
 def _bwd(stride, padding, backend, dilation, res, g):
+    """Both gradients through the backend's `backward` method: ONE fused
+    dual-output launch on the `pallas` backend (dx and dW from a single
+    dy fetch, kernels/dconv_backward.py), the two-launch input_grad +
+    filter_grad composition elsewhere."""
     x, w = res
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
     be = resolve_backend(backend)
-    dx = be.input_grad(g, w, spec, (x.shape[1], x.shape[2]))
-    dw = be.filter_grad(x, g, spec)
+    dx, dw = be.backward(x, g, w, spec, (x.shape[1], x.shape[2]))
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
@@ -76,8 +79,12 @@ def ecoflow_dilated_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
 def _conv_transpose(dy, w, stride, padding, n_out, backend, dilation):
-    spec = ConvSpec(stride=stride, padding=padding,
-                    filter_shape=w.shape[:2], dilation=dilation)
+    # ConvSpec.make, NOT the raw dataclass: every other entry point gets
+    # int -> pair normalization + geometry validation here, and a direct
+    # call with a scalar stride otherwise produces an unusable spec deep
+    # inside the backend (`stride[i]` on an int).
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2], dilation=dilation)
     return resolve_backend(backend).input_grad(dy, w, spec, n_out)
 
 
@@ -92,15 +99,17 @@ def _ct_bwd(stride, padding, n_out, backend, dilation, res, g):
     The transposed conv is the adjoint of the direct conv's linear map, so
     the pullback of a cotangent g w.r.t. `dy` is the *direct* conv of g,
     and w.r.t. `w` it is the same zero-free dilated filter gradient with g
-    in the input role.  This keeps the GAN generator differentiable
-    through every backend (the Pallas kernels have no autodiff rule of
-    their own) and routes its backward through the paper's dataflows."""
+    in the input role -- the cotangent sits in the INPUT role of both, so
+    the backend's `ct_backward` computes the pair from one g fetch (ONE
+    fused launch on `pallas`; forward + filter_grad elsewhere).  This
+    keeps the GAN generator differentiable through every backend (the
+    Pallas kernels have no autodiff rule of their own) and routes its
+    backward through the paper's dataflows."""
     dy, w = res
-    spec = ConvSpec(stride=stride, padding=padding,
-                    filter_shape=w.shape[:2], dilation=dilation)
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2], dilation=dilation)
     be = resolve_backend(backend)
-    ddy = be.forward(g, w, spec)
-    dw = be.filter_grad(g, dy, spec)
+    ddy, dw = be.ct_backward(g, dy, w, spec)
     return ddy.astype(dy.dtype), dw.astype(w.dtype)
 
 

@@ -215,7 +215,7 @@ class ConvSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ConvBackend:
-    """One implementation of the three conv ops.
+    """One implementation of the conv ops.
 
     forward(x, w, spec)                -> y     (B,N,N,Cin)x(K,K,Cin,Cout)
     input_grad(dy, w, spec, n_out)     -> dx    zero-free transposed conv
@@ -223,11 +223,46 @@ class ConvBackend:
 
     All three honor `spec.dilation` (forward filter dilation): the forward
     op is then a dilated/atrous conv and the gradients are its adjoints.
+
+    A backend may additionally provide FUSED backward implementations
+    (`fused_backward` / `fused_ct_backward`): both gradients of a conv's
+    VJP from a single kernel launch sharing one fetch of the common
+    operand (see kernels/dconv_backward.py, DESIGN.md Sec. 2.7).  The
+    `backward` / `ct_backward` methods below are what `core/conv.py`
+    dispatches through: they use the fused path when the backend has one
+    and otherwise fall back to the equivalent two-launch composition of
+    the primitive ops -- so `reference` and `xla_zero_free` (and any
+    externally registered three-op backend) keep working unchanged.
     """
     name: str
     forward: Callable
     input_grad: Callable
     filter_grad: Callable
+    # (x, dy, w, spec, n_out) -> (dx, dw): direct-conv VJP, shared dy.
+    fused_backward: Union[Callable, None] = None
+    # (g, dy, w, spec) -> (ddy, dw): transposed-conv VJP, shared g.
+    fused_ct_backward: Union[Callable, None] = None
+
+    def backward(self, x, dy, w, spec: "ConvSpec", n_out):
+        """Both gradients of direct_conv(x, w, spec) w.r.t. cotangent dy:
+        (dx, dw).  One launch on backends with a fused kernel; the
+        two-launch input_grad + filter_grad composition otherwise."""
+        if self.fused_backward is not None:
+            return self.fused_backward(x, dy, w, spec, n_out)
+        dx = self.input_grad(dy, w, spec, n_out)
+        dw = self.filter_grad(x, dy, spec)
+        return dx, dw
+
+    def ct_backward(self, g, dy, w, spec: "ConvSpec"):
+        """Both gradients of the transposed conv tconv(dy, w, spec)
+        w.r.t. cotangent g: (ddy, dw).  The adjoint pair is (direct conv
+        of g, filter grad with g in the input role) -- the shared operand
+        is g, so the fused kernel shares its fetch (and tap gathers)."""
+        if self.fused_ct_backward is not None:
+            return self.fused_ct_backward(g, dy, w, spec)
+        ddy = self.forward(g, w, spec)
+        dw = self.filter_grad(g, dy, spec)
+        return ddy, dw
 
 
 _BACKENDS: Dict[str, ConvBackend] = {}
@@ -352,8 +387,23 @@ def _ensure_default_backends() -> None:
                                       k=spec.filter_shape,
                                       dilation=spec.dilation)
 
+    def _pl_backward(x, dy, w, spec: ConvSpec, n_out):
+        from repro.kernels import ops as kops
+        return kops.conv_backward(x, dy, w, stride=spec.stride,
+                                  padding=spec.padding,
+                                  n_out=_pair(n_out),
+                                  dilation=spec.dilation)
+
+    def _pl_ct_backward(g, dy, w, spec: ConvSpec):
+        from repro.kernels import ops as kops
+        return kops.tconv_backward(g, dy, w, stride=spec.stride,
+                                   padding=spec.padding,
+                                   dilation=spec.dilation)
+
     register_backend(ConvBackend("pallas", _pl_forward,
-                                 _pl_input_grad, _pl_filter_grad))
+                                 _pl_input_grad, _pl_filter_grad,
+                                 fused_backward=_pl_backward,
+                                 fused_ct_backward=_pl_ct_backward))
 
     # Only mark done once every default registered -- a failure above
     # surfaces on the next call instead of poisoning the registry.

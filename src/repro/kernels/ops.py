@@ -6,9 +6,13 @@ forward conv via the unified (phase, tap) grid; `dconv_filter_grad` is
 the zero-free filter gradient with in-kernel tap gathering (no K^2 input
 replication, dilation-aware tap offsets); `dconv_forward` is the fused
 zero-free dilated (atrous) forward conv with the dilation taps on the
-grid.  All run the kernels in interpret mode on CPU (the container
-target) and compiled mode on real TPUs.  These are the `pallas` conv
-backend (`repro.core.spec.resolve_backend("pallas")`).
+grid; `conv_backward` / `tconv_backward` are the fused DUAL-GRADIENT
+backwards -- both gradients of a conv VJP from one launch sharing a
+single fetch of the common operand (dy for the direct conv, the
+cotangent for the transposed conv).  All run the kernels in interpret
+mode on CPU (the container target) and compiled mode on real TPUs.
+These are the `pallas` conv backend
+(`repro.core.spec.resolve_backend("pallas")`).
 
 The interpret/compiled decision is resolved PER CALL, not at import: an
 import-time `jax.default_backend()` both forces backend initialization as
@@ -38,6 +42,8 @@ import jax
 from repro.core.spec import ConvSpec, _pair
 from repro.kernels import tiling
 from repro.kernels.attention import flash_attention_pallas
+from repro.kernels.dconv_backward import (conv_backward_pallas,
+                                          tconv_backward_pallas)
 from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
 from repro.kernels.dconv_forward import dconv_forward_pallas
 from repro.kernels.tconv_phase import tconv_fused_pallas
@@ -96,6 +102,57 @@ def dconv_filter_grad(x: jax.Array, dy: jax.Array, *, stride, padding,
                                     spatial_tile=plan.spatial_tile,
                                     tap_unroll=plan.tap_unroll,
                                     interpret=_interpret())
+
+
+def conv_backward(x: jax.Array, dy: jax.Array, w: jax.Array, *, stride,
+                  padding, n_out, dilation=(1, 1)):
+    """Fused dual-gradient conv backward: (dx, dW) from ONE Pallas
+    launch sharing a single dy fetch (kernels/dconv_backward.py).
+
+    x (B,Nh,Nw,Cin), dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout)
+    -> (dx (B,Nh,Nw,Cin), dW (Kh,Kw,Cin,Cout)).
+    """
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=(w.shape[0], w.shape[1]),
+                         dilation=dilation)
+    nh, nw = _pair(n_out)
+    plan = tiling.plan_tiles("backward", spec, x_shape=x.shape,
+                             dy_shape=dy.shape,
+                             itemsize=dy.dtype.itemsize,
+                             interpret=_interpret())
+    return conv_backward_pallas(x, dy, w, stride=spec.stride,
+                                padding=spec.padding, n_out=(nh, nw),
+                                dilation=spec.dilation,
+                                cin_tile=plan.cin_tile,
+                                cout_tile=plan.cout_tile,
+                                tap_unroll=plan.tap_unroll,
+                                phase_unroll=plan.phase_unroll,
+                                interpret=_interpret())
+
+
+def tconv_backward(g: jax.Array, dy: jax.Array, w: jax.Array, *, stride,
+                   padding, dilation=(1, 1)):
+    """Fused transposed-conv backward: (ddy, dW) from ONE Pallas launch
+    sharing a single cotangent fetch (every tap gather feeds both the
+    conv matmul and the filter-grad matmul).
+
+    g (B,Nh,Nw,Cin) cotangent, dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout)
+    -> (ddy (B,Oh,Ow,Cout), dW (Kh,Kw,Cin,Cout)).
+    """
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=(w.shape[0], w.shape[1]),
+                         dilation=dilation)
+    plan = tiling.plan_tiles("ct_backward", spec, x_shape=g.shape,
+                             dy_shape=dy.shape,
+                             itemsize=g.dtype.itemsize,
+                             interpret=_interpret())
+    return tconv_backward_pallas(g, dy, w, stride=spec.stride,
+                                 padding=spec.padding,
+                                 dilation=spec.dilation,
+                                 cin_tile=plan.cin_tile,
+                                 cout_tile=plan.cout_tile,
+                                 tap_unroll=plan.tap_unroll,
+                                 interpret=_interpret())
 
 
 def dconv_forward(x: jax.Array, w: jax.Array, *, stride, padding,

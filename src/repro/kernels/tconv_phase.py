@@ -99,6 +99,44 @@ def pack_phase_filters(w: jax.Array, stride, dilation=(1, 1)) -> jax.Array:
     return jnp.stack(phases)
 
 
+def assemble_phase_major(out: jax.Array, spec: ConvSpec, *, n_out,
+                         full_size) -> jax.Array:
+    """Phase-major kernel output (B, T, ho, wo, Cin) -> dx (B, Nh, Nw,
+    Cin): place each phase plane at its stride residue with a static
+    gather (identity at D == 1 with S <= K; residues outside the image
+    are structural zeros of the upsampling), interleave with one
+    reshape/transpose chain (rows of dx_full are r = m*S + p <-> (m, p)
+    of phase row m), then crop padding / zero-pad non-exact-fit tails.
+    Shared by `tconv_fused_pallas` and the fused dual-gradient backward
+    (kernels/dconv_backward.py) so the residue-interleave logic cannot
+    drift between them."""
+    B, _, ho, wo, cin = out.shape
+    sh, sw = spec.stride
+    ph, pw = spec.padding
+    nh, nw = n_out
+    fh, fw = full_size
+    tph, tpw = spec.n_tap_phases
+    out = out.reshape(B, tph, tpw, ho, wo, cin)
+    idx_h = [tph] * sh   # sentinel TPh/TPw -> all-zero plane
+    for a in range(tph):
+        idx_h[spec.tap_phase_residue(a, 0)] = a
+    idx_w = [tpw] * sw
+    for b in range(tpw):
+        idx_w[spec.tap_phase_residue(b, 1)] = b
+    if (tph, tpw) != (sh, sw) or idx_h != list(range(sh)) \
+            or idx_w != list(range(sw)):
+        out = jnp.pad(out, ((0, 0), (0, 1), (0, 1)) + ((0, 0),) * 3)
+        out = jnp.take(out, jnp.asarray(idx_h), axis=1)
+        out = jnp.take(out, jnp.asarray(idx_w), axis=2)
+    dx_full = out.transpose(0, 3, 1, 4, 2, 5).reshape(
+        B, ho * sh, wo * sw, cin)[:, :fh, :fw, :]
+    # Non-exact-fit inputs (forward ignored tail rows/cols): zero-pad tail.
+    eh, ew = max(0, ph + nh - fh), max(0, pw + nw - fw)
+    if eh or ew:
+        dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
+    return dx_full[:, ph:ph + nh, pw:pw + nw, :]
+
+
 def _fused_tap_kernel(dy_ref, w_ref, out_ref, *, tpw: int, kp: int, kq: int,
                       sh: int, sw: int, dh: int, dw: int, step_h: int,
                       step_w: int, pad_h: int, pad_w: int, ho: int, wo: int,
@@ -248,33 +286,10 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
         interpret=interpret,
     )(dy_pad, w_flat)
 
-    # Phase-major -> strided interleave.  Phase (a, b) lives at stride
-    # residue ((a*D) mod S, (b*D) mod S); residues outside the image
-    # (gcd(S, D) > 1, or period > K) are structural zeros of the
-    # upsampling.  Place the planes with a static gather (identity at
-    # D == 1 with S <= K), then one reshape/transpose chain: rows of
-    # dx_full are r = m*S + p  <->  (m, p) of phase row m.
     if Cin % ci_t:   # slice only when channel padding occurred
         out = out[..., :Cin]
-    out = out.reshape(B, TPh, TPw, ho, wo, Cin)
-    idx_h = [TPh] * sh   # sentinel TPh/TPw -> all-zero plane
-    for a in range(TPh):
-        idx_h[spec.tap_phase_residue(a, 0)] = a
-    idx_w = [TPw] * sw
-    for b in range(TPw):
-        idx_w[spec.tap_phase_residue(b, 1)] = b
-    if (TPh, TPw) != (sh, sw) or idx_h != list(range(sh)) \
-            or idx_w != list(range(sw)):
-        out = jnp.pad(out, ((0, 0), (0, 1), (0, 1)) + ((0, 0),) * 3)
-        out = jnp.take(out, jnp.asarray(idx_h), axis=1)
-        out = jnp.take(out, jnp.asarray(idx_w), axis=2)
-    dx_full = out.transpose(0, 3, 1, 4, 2, 5).reshape(
-        B, ho * sh, wo * sw, Cin)[:, :Fh, :Fw, :]
-    # Non-exact-fit inputs (forward ignored tail rows/cols): zero-pad tail.
-    eh, ew = max(0, ph + Nh - Fh), max(0, pw + Nw - Fw)
-    if eh or ew:
-        dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
-    return dx_full[:, ph:ph + Nh, pw:pw + Nw, :].astype(dy.dtype)
+    return assemble_phase_major(out, spec, n_out=(Nh, Nw),
+                                full_size=(Fh, Fw)).astype(dy.dtype)
 
 
 def _autotune_runner(spec: ConvSpec, x_shape, dy_shape):

@@ -77,7 +77,7 @@ STEP_COST_COMPILED = 1 << 12
 # profits most from single-step launches, so it may unroll fully.
 MAX_TAP_UNROLL_COMPILED = 16
 
-OPS = ("filter_grad", "forward", "input_grad")
+OPS = ("filter_grad", "forward", "input_grad", "backward", "ct_backward")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,20 +244,30 @@ def _forward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
     return ws, traffic, steps, x_blk + w_blk
 
 
+def _phase_frame(spec: ConvSpec, oh: int, ow: int):
+    """Padded-dy frame geometry of the unified (phase, tap) kernels
+    (tconv_phase and the fused backward): (T phases, TK taps/phase,
+    ho, wo phase-plane extent, hp, wp padded frame extent).  One
+    definition so the working-set models cannot drift from each other
+    (the kernels themselves derive the same quantities from ConvSpec)."""
+    tph, tpw = spec.n_tap_phases
+    kp, kq = spec.taps_per_phase
+    t, tk = tph * tpw, kp * kq
+    fh, fw = spec.full_size((oh, ow))
+    ho, wo = _cdiv(fh, spec.stride[0]), _cdiv(fw, spec.stride[1])
+    pad_h = spec.tap_phase_base(tph - 1, 0) \
+        + (kp - 1) * spec.tap_phase_step[0]
+    pad_w = spec.tap_phase_base(tpw - 1, 1) \
+        + (kq - 1) * spec.tap_phase_step[1]
+    return t, tk, ho, wo, pad_h + ho, pad_w + wo
+
+
 def _input_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
     """tconv_phase: grid (B, T/pu, Cin_t, Cout_t, TK/u); dy block holds
     the full padded frame at a Cout tile, the w block `pu * u` packed
     (phase, tap)s, the out block `pu` phase planes; out accumulates over
     the sequential (Cout_t, tap-step) axes."""
-    s = g.spec
-    tph, tpw = s.n_tap_phases
-    kp, kq = s.taps_per_phase
-    t, tk = tph * tpw, kp * kq
-    fh, fw = s.full_size((g.oh, g.ow))
-    ho, wo = _cdiv(fh, s.stride[0]), _cdiv(fw, s.stride[1])
-    pad_h = s.tap_phase_base(tph - 1, 0) + (kp - 1) * s.tap_phase_step[0]
-    pad_w = s.tap_phase_base(tpw - 1, 1) + (kq - 1) * s.tap_phase_step[1]
-    hp, wp = pad_h + ho, pad_w + wo
+    t, tk, ho, wo, hp, wp = _phase_frame(g.spec, g.oh, g.ow)
     n_ci, n_co = _cdiv(g.cin, ci_t), _cdiv(g.cout, co_t)
     dy_blk = hp * wp * co_t * g.itemsize
     w_blk = pu * u * co_t * ci_t * g.itemsize
@@ -270,16 +280,78 @@ def _input_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
     return ws, traffic, steps, dy_blk + w_blk
 
 
+def _backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+    """Fused dual-gradient backward (kernels/dconv_backward.py): grid
+    (Cin_t, B, T/pu, Cout_t, TK/u); the dy block holds the full padded
+    frame at a Cout tile (the SHARED fetch), the x block the full padded
+    input at a Cin tile, and the working set carries BOTH accumulators:
+    `pu` phase planes of dx plus the stationary (T_w, ci_t, Cout_pad)
+    dW block (full padded Cout width, so the co axis never interrupts
+    its visit streak)."""
+    kh, kw = g.spec.filter_shape
+    t, tk, ho, wo, hp, wp = _phase_frame(g.spec, g.oh, g.ow)
+    xh, xw = _padded_input_extent(g)
+    n_ci, n_co = _cdiv(g.cin, ci_t), _cdiv(g.cout, co_t)
+    dy_blk = hp * wp * co_t * g.itemsize
+    x_blk = xh * xw * ci_t * g.itemsize
+    w_blk = pu * u * co_t * ci_t * g.itemsize
+    dx_blk = pu * ho * wo * ci_t * 4
+    dw_blk = kh * kw * ci_t * (n_co * co_t) * 4
+    ws = 2 * (dy_blk + x_blk + w_blk) + dx_blk + dw_blk \
+        + ho * wo * ci_t * 4 + g.oh * g.ow * ci_t * 4 + ci_t * co_t * 4
+    # dy stays resident across everything inside (ci, b) when n_co == 1;
+    # otherwise it re-streams per (phase-step, co) like tconv.
+    dy_streams = g.b * n_ci * (1 if n_co == 1 else _cdiv(t, pu) * n_co)
+    traffic = (dy_streams * dy_blk
+               + g.b * n_ci * x_blk
+               + t * tk * n_ci * n_co * co_t * ci_t * g.itemsize
+               + g.b * t * ho * wo * n_ci * ci_t * 4
+               + n_ci * kh * kw * ci_t * n_co * co_t * 4)
+    steps = n_ci * g.b * _cdiv(t, pu) * n_co * _cdiv(tk, u)
+    return ws, traffic, steps, dy_blk + x_blk + w_blk
+
+
+def _ct_backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+    """Fused transposed-conv backward: grid (B, Cin_t, Cout_t, T/u); the
+    g block holds the full padded frame at a Cin tile (the SHARED
+    fetch), ddy spans full padded Cout per batch row and dW spans full
+    padded channels (constant index map -- one streak over the whole
+    grid), so both accumulators are part of every candidate's resident
+    working set."""
+    kh, kw = g.spec.filter_shape
+    t = kh * kw
+    hp, wp = _padded_input_extent(g)
+    n_ci, n_co = _cdiv(g.cin, ci_t), _cdiv(g.cout, co_t)
+    g_blk = hp * wp * ci_t * g.itemsize
+    w_blk = u * ci_t * co_t * g.itemsize
+    dy_blk = g.oh * g.ow * co_t * g.itemsize
+    ddy_blk = g.oh * g.ow * (n_co * co_t) * 4
+    dw_blk = t * (n_ci * ci_t) * (n_co * co_t) * 4
+    ws = 2 * (g_blk + w_blk + dy_blk) + ddy_blk + dw_blk \
+        + g.oh * g.ow * ci_t * 4 + ci_t * co_t * 4
+    traffic = (g.b * n_ci * g_blk
+               + g.b * n_ci * n_co * dy_blk
+               + g.b * t * n_ci * n_co * ci_t * co_t * g.itemsize
+               + g.b * g.oh * g.ow * n_co * co_t * 4
+               + t * n_ci * ci_t * n_co * co_t * 4)
+    steps = g.b * n_ci * n_co * _cdiv(t, u)
+    return ws, traffic, steps, g_blk + w_blk + dy_blk
+
+
 _MODELS: Dict[str, Callable] = {
     "filter_grad": _filter_grad_model,
     "forward": _forward_model,
     "input_grad": _input_grad_model,
+    "backward": _backward_model,
+    "ct_backward": _ct_backward_model,
 }
 
 _GRID_ORDERS = {
     "filter_grad": ("cin", "cout", "batch", "spatial", "tap"),
     "forward": ("batch", "cout", "cin", "tap"),
     "input_grad": ("batch", "phase", "cin", "cout", "tap"),
+    "backward": ("cin", "batch", "phase", "cout", "tap"),
+    "ct_backward": ("batch", "cin", "cout", "tap"),
 }
 
 
@@ -296,7 +368,7 @@ def _candidates(op: str, g: _Geom):
     co_cands = _channel_candidates(g.cout)
     sp_cands = _spatial_candidates(g.oh) if op == "filter_grad" \
         else (g.oh,)
-    if op == "input_grad":
+    if op in ("input_grad", "backward"):
         kp, kq = g.spec.taps_per_phase
         tph, tpw = g.spec.n_tap_phases
         u_cands = _divisors(kp * kq)
@@ -327,7 +399,6 @@ def _score(op: str, g: _Geom, ci_t, co_t, sp_t, u, pu, budget, interpret):
     return traffic + steps * STEP_COST_COMPILED
 
 
-@functools.lru_cache(maxsize=4096)
 def _analytical_plan(op: str, spec: ConvSpec, x_shape, dy_shape,
                      itemsize: int, budget: int,
                      interpret: bool) -> TilePlan:
@@ -449,9 +520,12 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
         _MEM_CACHE[key] = plan
         return plan
     factory = runner_factory or _RUNNERS.get(op)
-    if factory is None:   # no runner registered: analytical fallback
-        return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
-                                budget, interpret)
+    if factory is None:
+        # No runner registered: analytical fallback, through the memo
+        # (a distinct mode string so a later call with the runner's
+        # module imported still sweeps instead of replaying this plan).
+        return _planned(op, spec, x_shape, dy_shape, itemsize, budget,
+                        "autotune:analytical-fallback", interpret)
     g = _geom(op, spec, x_shape, dy_shape, itemsize)
     run = factory(spec, x_shape, dy_shape)
     best_plan, best_us = None, math.inf
@@ -468,9 +542,9 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
             continue
         if us < best_us:
             best_plan, best_us = plan, us
-    if best_plan is None:
-        return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
-                                budget, interpret)
+    if best_plan is None:   # every candidate failed to lower/run
+        return _planned(op, spec, x_shape, dy_shape, itemsize, budget,
+                        "autotune:analytical-fallback", interpret)
     disk[key] = dict(best_plan.as_dict(), us=round(best_us, 1))
     _store_disk_cache(path, disk)
     _MEM_CACHE[key] = best_plan
@@ -481,6 +555,27 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
 # Public entry
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=4096)
+def _planned(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize: int,
+             budget: int, mode: str, interpret: bool) -> TilePlan:
+    """Memoized analytical resolution.  `kernels/ops.py` re-resolves the
+    plan on EVERY conv call (so env flips take effect on the next call,
+    not the first trace), which previously re-ran the Python planner each
+    time; this memo makes the steady-state cost a dict lookup.  The
+    env-derived `budget` and `mode` are part of the key -- resolved by
+    `plan_tiles` BEFORE the lookup -- so flipping `ECOFLOW_VMEM_BUDGET`
+    or `ECOFLOW_TILING` still re-plans instead of replaying a winner
+    scored against stale constraints."""
+    return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
+                            budget, interpret)
+
+
+def plan_cache_info():
+    """Hit/miss statistics of the memoized analytical path (tests and
+    benchmarks use this to prove the per-call planner cost is a lookup)."""
+    return _planned.cache_info()
+
+
 def plan_tiles(op: str, spec: ConvSpec, *, x_shape, dy_shape,
                itemsize: int = 4, vmem_budget: Optional[int] = None,
                interpret: bool = False, mode: Optional[str] = None,
@@ -489,7 +584,9 @@ def plan_tiles(op: str, spec: ConvSpec, *, x_shape, dy_shape,
     """Select (cin_tile, cout_tile, spatial_tile, tap_unroll, grid order)
     for one kernel launch.
 
-    op        -- "filter_grad" | "forward" | "input_grad".
+    op        -- "filter_grad" | "forward" | "input_grad" | "backward"
+                 (fused dual-gradient) | "ct_backward" (fused
+                 transposed-conv backward).
     x_shape   -- (B, Nh, Nw, Cin) forward-input shape.
     dy_shape  -- (B, Oh, Ow, Cout) forward-output / error shape.
     itemsize  -- operand dtype bytes (accumulators are always fp32).
@@ -511,5 +608,5 @@ def plan_tiles(op: str, spec: ConvSpec, *, x_shape, dy_shape,
             else cache_path()
         return _autotune_plan(op, spec, x_shape, dy_shape, itemsize,
                               vmem_budget, interpret, path, runner_factory)
-    return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
-                            vmem_budget, interpret)
+    return _planned(op, spec, x_shape, dy_shape, itemsize, vmem_budget,
+                    mode, interpret)

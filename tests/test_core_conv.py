@@ -128,6 +128,38 @@ def test_conv_transpose_standalone(rng):
     assert_allclose(up, ref, rtol=1e-4, atol=1e-4)
 
 
+def test_conv_transpose_normalizes_scalar_geometry(rng):
+    """Regression: `_conv_transpose` / `_ct_bwd` construct their spec via
+    `ConvSpec.make` (int -> pair normalization + validation), not the raw
+    dataclass -- a direct call with SCALAR stride/padding previously
+    built a spec whose `stride[i]` indexing failed deep inside the
+    backend, and degenerate geometry slipped past validation entirely."""
+    from repro.core.conv import _conv_transpose
+    B, O, K, S, Ci, Co = 2, 5, 4, 2, 3, 4
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    N = S * (O - 1) + K - 2
+    # Un-normalized scalar stride/padding/dilation through the custom-vjp
+    # primitive directly (the public wrapper normalizes before calling).
+    up = _conv_transpose(dy, w, S, 1, (N, N), None, 1)
+    want = _conv_transpose(dy, w, (S, S), (1, 1), (N, N), None, (1, 1))
+    assert_allclose(up, want, rtol=0, atol=0)
+    # ... and through its backward rule (the _ct_bwd spec construction).
+    loss = lambda dy_, w_: jnp.sum(
+        _conv_transpose(dy_, w_, S, 1, (N, N), None, 1) ** 2)
+    g_dy, g_w = jax.grad(loss, argnums=(0, 1))(dy, w)
+    loss_t = lambda dy_, w_: jnp.sum(
+        _conv_transpose(dy_, w_, (S, S), (1, 1), (N, N), None,
+                        (1, 1)) ** 2)
+    g_dy_t, g_w_t = jax.grad(loss_t, argnums=(0, 1))(dy, w)
+    assert_allclose(g_dy, g_dy_t, rtol=1e-6, atol=1e-6)
+    assert_allclose(g_w, g_w_t, rtol=1e-6, atol=1e-6)
+    # Validation now fires on degenerate geometry too.
+    import pytest
+    with pytest.raises(ValueError, match="stride"):
+        _conv_transpose(dy, w, 0, 1, (N, N), None, 1)
+
+
 def test_bf16_inputs(rng):
     x, w, dy = _case(rng, 2, 9, 3, 2, 0, 4, 4, jnp.bfloat16)
     dx = ecoflow.transposed_conv_zero_free(dy, w, stride=(2, 2),

@@ -153,10 +153,11 @@ def test_dilated_forward_single_pallas_launch(rng, S, D):
 
 @pytest.mark.parametrize("S,P", [(1, 2), (2, 1)])
 def test_dilated_backward_stays_fused(rng, S, P):
-    """Atrous conv backward on the `pallas` backend: forward, input-grad
-    (the unified (phase, tap) kernel -- stride 1 AND the general strided
-    case alike), and filter-grad are one fused launch each -- a full
-    jax.grad traces exactly 3 pallas_calls."""
+    """Atrous conv backward on the `pallas` backend: the forward is one
+    fused launch and the ENTIRE backward (input-grad AND filter-grad,
+    stride 1 and the general strided case alike) is one fused
+    dual-output launch -- a full jax.grad traces exactly 2 pallas_calls
+    (down from 3 before the fused dual-gradient backward)."""
     K, D, Ci, Co = 3, 2, 3, 3
     N = 11
     x = jnp.asarray(rng.normal(size=(1, N, N, Ci)), jnp.float32)
@@ -164,7 +165,7 @@ def test_dilated_backward_stays_fused(rng, S, P):
     loss = lambda x_, w_: jnp.sum(
         ecoflow_dilated_conv(x_, w_, S, P, D, "pallas") ** 2)
     g = lambda x_, w_: jax.grad(loss, argnums=(0, 1))(x_, w_)
-    assert _count_pallas_calls(g, x, w) == 3
+    assert _count_pallas_calls(g, x, w) == 2
 
 
 @pytest.mark.parametrize("S,D", [(2, 2), (2, 3), (3, 2), (3, 3)])

@@ -235,13 +235,15 @@ def test_filter_grad_single_pallas_launch(rng):
     assert _count_pallas_calls(fn, x, dy) == 1
 
 
-def test_backward_pass_is_two_pallas_launches(rng):
-    """One training conv backward = 1 fused tconv + 1 filter-grad launch."""
+def test_backward_pass_is_single_fused_launch(rng):
+    """One training conv backward = ONE fused dual-output launch (dx and
+    dW from the same dy fetch, kernels/dconv_backward.py) -- down from
+    the 1 tconv + 1 filter-grad pair of earlier revisions."""
     x = jnp.asarray(rng.normal(size=(1, 9, 9, 4)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(3, 3, 4, 4)), jnp.float32)
     loss = lambda x_, w_: jnp.sum(ecoflow_conv(x_, w_, 2, 0, "pallas") ** 2)
     g = lambda x_, w_: jax.grad(loss, argnums=(0, 1))(x_, w_)
-    assert _count_pallas_calls(g, x, w) == 2
+    assert _count_pallas_calls(g, x, w) == 1
 
 
 def test_filter_grad_batch_sequential_no_hbm_partials(rng):

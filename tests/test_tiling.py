@@ -22,13 +22,20 @@ def test_plan_respects_vmem_budget():
     op families and budgets."""
     spec = ConvSpec.make(stride=2, padding=0, filter_shape=3)
     x_shape, dy_shape = _shapes(2, 127, 63, 256, 256)
+    # filter_grad can always shrink its spatial slab to fit a tight
+    # budget; forward/input_grad/backward hold a full spatial frame, so
+    # only test budgets a frame can fit; ct_backward's working set has
+    # an irreducible floor (full-Cout ddy row + full-channel stationary
+    # dW block), so only the default budget is guaranteed feasible at
+    # this 256-channel geometry.  Below the listed budgets the planner
+    # falls back to the minimum-footprint candidate by design.
+    budgets_by_op = {
+        "filter_grad": (1 << 20, 4 << 20, tiling.DEFAULT_VMEM_BUDGET),
+        "ct_backward": (tiling.DEFAULT_VMEM_BUDGET,),
+    }
     for op in tiling.OPS:
-        # filter_grad can always shrink its spatial slab to fit a tight
-        # budget; forward/input_grad hold a full spatial frame, so only
-        # test budgets a frame can fit (below that the planner falls
-        # back to the minimum-footprint candidate by design).
-        budgets = (1 << 20, 4 << 20, tiling.DEFAULT_VMEM_BUDGET) \
-            if op == "filter_grad" else (4 << 20, tiling.DEFAULT_VMEM_BUDGET)
+        budgets = budgets_by_op.get(op,
+                                    (4 << 20, tiling.DEFAULT_VMEM_BUDGET))
         for budget in budgets:
             plan = tiling.plan_tiles(op, spec, x_shape=x_shape,
                                      dy_shape=dy_shape,
@@ -88,12 +95,37 @@ def test_interpret_mode_prefers_fewer_steps():
 def test_plan_is_deterministic():
     spec = ConvSpec.make(stride=2, padding=1, filter_shape=5, dilation=2)
     x_shape, dy_shape = _shapes(2, 33, 13, 48, 96)
-    plans = [tiling.plan_tiles(op, spec, x_shape=x_shape,
-                               dy_shape=dy_shape, interpret=True)
-             for op in ("filter_grad", "forward", "input_grad")
-             for _ in range(2)]
-    assert plans[0] == plans[1] and plans[2] == plans[3] \
-        and plans[4] == plans[5]
+    for op in tiling.OPS:
+        a, b = (tiling.plan_tiles(op, spec, x_shape=x_shape,
+                                  dy_shape=dy_shape, interpret=True)
+                for _ in range(2))
+        assert a == b, op
+
+
+def test_plan_tiles_memoized_with_env_in_key():
+    """The analytical `plan_tiles` path is memoized (ops.py re-resolves
+    the plan on every conv call -- the steady-state cost must be a dict
+    lookup), and the env-derived budget/mode are PART OF THE KEY: an
+    `ECOFLOW_VMEM_BUDGET` flip re-plans instead of replaying a winner
+    scored against the old constraints."""
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 65, 32, 64, 64)
+    kw = dict(x_shape=x_shape, dy_shape=dy_shape, interpret=True)
+    tiling._planned.cache_clear()
+    p1 = tiling.plan_tiles("backward", spec, **kw)
+    miss1 = tiling.plan_cache_info().misses
+    p2 = tiling.plan_tiles("backward", spec, **kw)
+    info = tiling.plan_cache_info()
+    assert p1 == p2
+    assert info.misses == miss1 and info.hits >= 1, info
+    # A different budget is a different key (re-plan, not a cache hit) --
+    # plan_tiles resolves the env BEFORE the lookup, so this is exactly
+    # the ECOFLOW_VMEM_BUDGET-flip path.
+    tiling.plan_tiles("backward", spec, vmem_budget=1 << 22, **kw)
+    assert tiling.plan_cache_info().misses == miss1 + 1
+    # ... and so is a different ECOFLOW_TILING mode string.
+    tiling.plan_tiles("backward", spec, mode="analytical-v2", **kw)
+    assert tiling.plan_cache_info().misses == miss1 + 2
 
 
 def test_unknown_op_rejected():
