@@ -5,12 +5,14 @@ the wall-clock microbenchmarks and the (arch x shape) roofline table.
   PYTHONPATH=src python -m benchmarks.run --fast     # skip wallclock
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI: one tiny
         # geometry per op family (incl. the fused dual-gradient
-        # backward and the CNN/GAN train-step rows) + BENCH_conv.json
-        # schema-drift guard
+        # backward, the epilogue-fused direct/transposed families, and
+        # the CNN/GAN train-step rows with epilogue fusion on and off)
+        # + BENCH_conv.json schema-drift guard
   PYTHONPATH=src python -m benchmarks.run --delta-gate   # CI: re-time
         # the committed geometries, fail if a pallas/baseline ratio
         # regressed > 1.5x vs the corresponding BENCH_conv.json row
-        # (incl. fused-backward/two-launch and train-step ratios)
+        # (incl. fused-backward/two-launch, epilogue-fused/unfused,
+        # and train-step ratios)
   PYTHONPATH=src python -m benchmarks.run --filter shufflenet
         # single-row rerun (substring match; never rewrites the JSON)
 
@@ -33,14 +35,17 @@ def main() -> None:
                     help="skip the wall-clock microbenchmarks")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: one tiny geometry per conv op family "
-                         "(incl. fused backward + train-step rows) "
-                         "through the real backend entry points, failing "
-                         "on BENCH_conv.json schema drift")
+                         "(incl. fused backward, epilogue-fused "
+                         "direct/transposed families, and train-step "
+                         "rows with epilogue fusion on/off) through the "
+                         "real backend entry points, failing on "
+                         "BENCH_conv.json schema drift")
     ap.add_argument("--delta-gate", action="store_true",
                     help="CI perf gate: re-time the committed "
                          "BENCH_conv.json geometries and fail if any "
                          "pallas/baseline ratio (incl. fused-backward/"
-                         "two-launch and train-step) regressed > 1.5x")
+                         "two-launch, epilogue fused/unfused, and "
+                         "train-step) regressed > 1.5x")
     ap.add_argument("--filter", metavar="SUBSTR", default=None,
                     help="run only conv-backend rows whose case name "
                          "contains SUBSTR (cheap single-row rerun during "

@@ -6,17 +6,21 @@ paper's Table 5/7 layer geometries, the dilated-forward (atrous)
 geometries at rates d in {2, 4}, the general strided+dilated
 input-gradient geometries (S > 1 AND D > 1, the unified (phase, tap)
 kernel's family), the FUSED dual-gradient backward (dx + dW from one
-launch vs the two-launch pair it replaced), and end-to-end TRAINING-STEP
-rows (a CNN SGD step and a GAN generator step per backend -- the paper's
-headline numbers are training-step speedups, so the trajectory file
-tracks the same quantity), emitted to BENCH_conv.json so future PRs have
-a perf trajectory.
+launch vs the two-launch pair it replaced), the EPILOGUE-fused families
+(layer tails -- bias/activation forward, cotangent mask + db backward --
+folded into the same launches vs the identical kernels with the tail as
+separate XLA ops), and end-to-end TRAINING-STEP rows (a CNN SGD step and
+a GAN generator step per backend, with and without fused epilogues --
+the paper's headline numbers are training-step speedups, so the
+trajectory file tracks the same quantity), emitted to BENCH_conv.json so
+future PRs have a perf trajectory.
 
 Reported as name,us_per_call,derived -- `derived` carries the speedup and
 the useful-MAC fraction from the analytical model for cross-checking.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 import time
@@ -26,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ecoflow, naive
-from repro.core.spec import ConvSpec, resolve_backend
+from repro.core.spec import ConvSpec, Epilogue, resolve_backend
 
 
 def _time(fn, *args, iters=5, warmup=2):
@@ -160,19 +164,52 @@ STRIDED_DILATED_CASES = [
     ("strided-atrous-s3d2", 7, 3, 3, 1, 2, 16, 16),
 ]
 
+# Epilogue-fusion families (DESIGN.md Sec. 2.8): the layer tail
+# act(scale * conv + bias) folded into the fused launches.  Each direct
+# case times the fused forward-with-epilogue and the fused
+# backward-with-epilogue (mask + dx + dW + db from ONE launch) per
+# backend, plus a `pallas_unfused` arm -- the same pallas kernels with
+# the tail/mask/reduce as separate XLA ops -- so the fusion itself (not
+# the kernel) is the measured quantity.  (name, O, K, S, Ci, Co, Epilogue).
+EPILOGUE_CASES = [
+    ("resnet50-CONV3-brelu", 14, 3, 2, 32, 32,
+     Epilogue(activation="relu", bias=True)),
+    ("dcgan-disc-leaky02", 14, 4, 2, 16, 32,
+     Epilogue(activation="leaky_relu", slope=0.2)),
+]
+
+# Transposed-conv epilogue cases (GAN generator layer tails): fused
+# tconv-with-epilogue forward and fused ct-backward (mask + ddy + dW +
+# db from one launch).  (name, O, K, S, Ci, Co, Epilogue) -- Ci is the
+# tconv OUTPUT side, where the bias rides.
+TCONV_EPILOGUE_CASES = [
+    ("dcgan-gen-TCONV2-brelu", 8, 4, 2, 16, 32,
+     Epilogue(activation="relu", bias=True)),
+    ("dcgan-gen-TCONV4-tanh", 16, 4, 2, 3, 16,
+     Epilogue(activation="tanh")),
+]
+
 # End-to-end training-step cases: one full jit'd SGD step (forward +
 # backward + update) through the real models, per backend -- the paper's
 # headline metric.  `config` values stay JSON-round-trip stable (lists,
 # ints) because the delta gate diffs them against the committed rows.
+# The trailing flag is `fuse_epilogue`: the `-ep` variants request every
+# layer tail (relu / leaky_relu / tanh) declaratively through the conv
+# epilogue slot, so each layer's forward AND backward stay at one launch
+# on the pallas backend (DESIGN.md Sec. 2.8).
 TRAIN_STEP_CASES = [
     ("train-step-cnn", "cnn",
-     {"widths": [8, 16], "batch": 2, "image": 12, "n_classes": 10}),
+     {"widths": [8, 16], "batch": 2, "image": 12, "n_classes": 10}, False),
+    ("train-step-cnn-ep", "cnn",
+     {"widths": [8, 16], "batch": 2, "image": 12, "n_classes": 10}, True),
     ("train-step-gan-gen", "gan_gen",
-     {"base": 8, "z_dim": 16, "batch": 2}),
+     {"base": 8, "z_dim": 16, "batch": 2}, False),
+    ("train-step-gan-gen-ep", "gan_gen",
+     {"base": 8, "z_dim": 16, "batch": 2}, True),
 ]
 
 
-def _train_step_fns(kind, cfg, backends, rng):
+def _train_step_fns(kind, cfg, backends, rng, fuse_epilogue=False):
     """Zero-arg jit'd SGD-step callables per backend for one train-step
     case: forward + `jax.grad` (which dispatches the FUSED backward on
     the pallas backend) + parameter update, on shared params/data so the
@@ -196,7 +233,8 @@ def _train_step_fns(kind, cfg, backends, rng):
         for bname in backends:
             f = jax.jit(lambda p, be=bname: _sgd(p, jax.grad(
                 lambda q: cnn.cnn_loss(q, x, labels, stride=2,
-                                       backend=be))(p)))
+                                       backend=be,
+                                       fuse_epilogue=fuse_epilogue))(p)))
             fns[bname] = lambda f=f: f(params)
         return fns
     if kind == "gan_gen":
@@ -209,9 +247,12 @@ def _train_step_fns(kind, cfg, backends, rng):
                         jnp.float32)
 
         def gen_loss(gp_, be):
-            fake = gan.generator_apply(gp_, z, backend=be)
+            fake = gan.generator_apply(gp_, z, backend=be,
+                                       fuse_epilogue=fuse_epilogue)
             return jax.nn.softplus(
-                -gan.discriminator_apply(dp, fake, backend=be)).mean()
+                -gan.discriminator_apply(
+                    dp, fake, backend=be,
+                    fuse_epilogue=fuse_epilogue)).mean()
 
         fns = {}
         for bname in backends:
@@ -222,13 +263,14 @@ def _train_step_fns(kind, cfg, backends, rng):
     raise ValueError(f"unknown train-step kind {kind!r}")
 
 
-def _plan_dict(op, spec, x_shape, dy_shape):
+def _plan_dict(op, spec, x_shape, dy_shape, epilogue=None):
     """The planner's decision for one (op, geometry) -- recorded per
     BENCH_conv.json row so the perf trajectory is attributable to the
     tiling that produced it."""
     from repro.kernels import tiling
     plan = tiling.plan_tiles(op, spec, x_shape=x_shape, dy_shape=dy_shape,
-                             interpret=jax.default_backend() != "tpu")
+                             interpret=jax.default_backend() != "tpu",
+                             epilogue=epilogue)
     return {"cin_tile": plan.cin_tile, "cout_tile": plan.cout_tile,
             "spatial_tile": plan.spatial_tile,
             "tap_unroll": plan.tap_unroll,
@@ -237,8 +279,9 @@ def _plan_dict(op, spec, x_shape, dy_shape):
 
 def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                        dilated_cases=None, strided_dilated_cases=None,
-                       train_cases=None, json_path=None, name_filter=None,
-                       records_out=None):
+                       train_cases=None, epilogue_cases=None,
+                       tconv_epilogue_cases=None, json_path=None,
+                       name_filter=None, records_out=None):
     """Time tconv + filter-grad + the FUSED dual-gradient backward
     through the xla_zero_free and pallas backends for each geometry --
     plus the dilated-forward conv (d in {2, 4}), the general
@@ -248,10 +291,14 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
     write BENCH_conv.json and return CSV rows.  The backward rows carry a
     third timing, `two_launch`: the pallas input_grad + filter_grad pair
     the fused kernel replaced, timed in the same interleaved sweep -- the
-    fused/two-launch ratio is the quantity the delta gate pins.
-    `cases`/`dilated_cases`/`strided_dilated_cases`/`train_cases`/
-    `json_path` exist for the CI smoke run (one tiny geometry per
-    family).  `name_filter` (case-name substring) reruns single rows
+    fused/two-launch ratio is the quantity the delta gate pins.  The
+    EPILOGUE families time the same workloads with the layer tail (bias
+    / activation / cotangent mask / db reduce) fused into the launches,
+    against a `pallas_unfused` arm that runs the identical pallas
+    kernels with the tail as separate XLA ops -- isolating the fusion
+    itself.  `cases`/`dilated_cases`/`strided_dilated_cases`/
+    `train_cases`/`epilogue_cases`/`tconv_epilogue_cases`/`json_path`
+    exist for the CI smoke run (one tiny geometry per family).  `name_filter` (case-name substring) reruns single rows
     cheaply during autotuning -- a filtered run never writes
     BENCH_conv.json (it would drop the unselected rows).  `records_out`,
     if a list, receives the per-case record dicts (the delta gate
@@ -276,6 +323,7 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
         rec = {"layer": name, "error_map": O, "k": K, "stride": S,
                "c_in": Ci, "c_out": Co, "batch": B,
                "interpret_mode": jax.default_backend() != "tpu",
+               "epilogue": "none",
                "tiling": {
                    "input_grad": _plan_dict("input_grad", spec,
                                             x.shape, dy.shape),
@@ -335,6 +383,7 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                "dilation": D, "c_in": Ci, "c_out": Co, "batch": B,
                "interpret_mode": jax.default_backend() != "tpu",
                "zero_mac_fraction_naive": round(zf, 4),
+               "epilogue": "none",
                "tiling": {
                    "forward": _plan_dict("forward", spec, x.shape,
                                          (B, Oh, Ow, Co))},
@@ -372,6 +421,7 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
         rec = {"layer": name, "error_map": O, "k": K, "stride": S,
                "dilation": D, "c_in": Ci, "c_out": Co, "batch": B,
                "interpret_mode": jax.default_backend() != "tpu",
+               "epilogue": "none",
                "tiling": {
                    "input_grad": _plan_dict(
                        "input_grad", spec,
@@ -392,12 +442,131 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
         np.testing.assert_allclose(outs["pallas"], outs["xla_zero_free"],
                                    rtol=1e-3, atol=1e-3)
         records.append(rec)
-    for name, kind, cfg in flt(TRAIN_STEP_CASES if train_cases is None
-                               else train_cases):
+    for name, O, K, S, Ci, Co, ep in flt(EPILOGUE_CASES
+                                         if epilogue_cases is None
+                                         else epilogue_cases):
+        B, P = 1, 0
+        spec = ConvSpec.make(stride=S, padding=P, filter_shape=K)
+        N = spec.input_size((O, O))[0]
+        x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+        b = (jnp.asarray(rng.normal(size=(Co,)), jnp.float32)
+             if ep.bias else None)
+        dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+        rec = {"layer": name, "error_map": O, "k": K, "stride": S,
+               "c_in": Ci, "c_out": Co, "batch": B,
+               "interpret_mode": jax.default_backend() != "tpu",
+               "epilogue": ep.tag,
+               "tiling": {
+                   "forward": _plan_dict("forward", spec, x.shape,
+                                         dy.shape, epilogue=ep),
+                   "backward": _plan_dict("backward", spec, x.shape,
+                                          dy.shape, epilogue=ep)},
+               "forward_ep_us": {}, "backward_ep_us": {}}
+        fns_f, fns_b, ys = {}, {}, {}
+        for bname in backends:
+            be = resolve_backend(bname)
+            f_f = jax.jit(lambda x_, w_, b_, be=be: be.forward_ep(
+                x_, w_, b_, spec, ep))
+            ys[bname] = f_f(x, w, b)
+            f_b = jax.jit(lambda x_, y_, dy_, w_, be=be: be.backward_ep(
+                x_, y_, dy_, w_, spec, (N, N), ep))
+            fns_f[bname] = lambda f=f_f: f(x, w, b)
+            fns_b[bname] = lambda f=f_b, y=ys[bname]: f(x, y, dy, w)
+        np.testing.assert_allclose(np.asarray(ys["pallas"]),
+                                   np.asarray(ys["xla_zero_free"]),
+                                   rtol=1e-3, atol=1e-3)
+        # The tail as separate XLA ops around the SAME backend kernels:
+        # clearing the fused slots drops ConvBackend onto its generic
+        # mask/db-reduce composition, so this arm isolates the fusion.
+        be_unf = dataclasses.replace(resolve_backend("pallas"),
+                                     fused_forward_ep=None,
+                                     fused_backward_ep=None)
+        f_f_unf = jax.jit(lambda x_, w_, b_: be_unf.forward_ep(
+            x_, w_, b_, spec, ep))
+        f_b_unf = jax.jit(lambda x_, y_, dy_, w_: be_unf.backward_ep(
+            x_, y_, dy_, w_, spec, (N, N), ep))
+        fns_f["pallas_unfused"] = lambda: f_f_unf(x, w, b)
+        fns_b["pallas_unfused"] = lambda: f_b_unf(x, ys["pallas"], dy, w)
+        t_f = _time_interleaved(fns_f, iters=iters, warmup=warmup)
+        t_b = _time_interleaved(fns_b, iters=iters, warmup=warmup)
+        for bname in list(backends) + ["pallas_unfused"]:
+            rec["forward_ep_us"][bname] = round(t_f[bname], 1)
+            rec["backward_ep_us"][bname] = round(t_b[bname], 1)
+            derived = "" if bname != "pallas" else (
+                f"fused_vs_unfused="
+                f"{t_b['pallas_unfused'] / t_b['pallas']:.2f}x")
+            rows.append((f"wallclock.forward_ep.{bname}.{name}",
+                         round(t_f[bname], 1), ""))
+            rows.append((f"wallclock.backward_ep.{bname}.{name}",
+                         round(t_b[bname], 1), derived))
+        records.append(rec)
+    for name, O, K, S, Ci, Co, ep in flt(TCONV_EPILOGUE_CASES
+                                         if tconv_epilogue_cases is None
+                                         else tconv_epilogue_cases):
+        B, P = 1, 0
+        spec = ConvSpec.make(stride=S, padding=P, filter_shape=K)
+        n_out = spec.input_size((O, O))
+        dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+        b = (jnp.asarray(rng.normal(size=(Ci,)), jnp.float32)
+             if ep.bias else None)
+        g_shape = (B, n_out[0], n_out[1], Ci)
+        g = jnp.asarray(rng.normal(size=g_shape), jnp.float32)
+        rec = {"layer": name, "error_map": O, "k": K, "stride": S,
+               "c_in": Ci, "c_out": Co, "batch": B,
+               "interpret_mode": jax.default_backend() != "tpu",
+               "epilogue": ep.tag,
+               "tiling": {
+                   "input_grad": _plan_dict("input_grad", spec, g_shape,
+                                            dy.shape, epilogue=ep),
+                   "ct_backward": _plan_dict("ct_backward", spec, g_shape,
+                                             dy.shape, epilogue=ep)},
+               "tconv_ep_us": {}, "ct_backward_ep_us": {}}
+        fns_t, fns_c, zs = {}, {}, {}
+        for bname in backends:
+            be = resolve_backend(bname)
+            f_t = jax.jit(lambda dy_, w_, b_, be=be: be.input_grad_ep(
+                dy_, w_, b_, spec, n_out, ep))
+            zs[bname] = f_t(dy, w, b)
+            f_c = jax.jit(lambda g_, z_, dy_, w_, be=be:
+                          be.ct_backward_ep(g_, z_, dy_, w_, spec, ep))
+            fns_t[bname] = lambda f=f_t: f(dy, w, b)
+            fns_c[bname] = lambda f=f_c, z=zs[bname]: f(g, z, dy, w)
+        np.testing.assert_allclose(np.asarray(zs["pallas"]),
+                                   np.asarray(zs["xla_zero_free"]),
+                                   rtol=1e-3, atol=1e-3)
+        be_unf = dataclasses.replace(resolve_backend("pallas"),
+                                     fused_input_grad_ep=None,
+                                     fused_ct_backward_ep=None)
+        f_t_unf = jax.jit(lambda dy_, w_, b_: be_unf.input_grad_ep(
+            dy_, w_, b_, spec, n_out, ep))
+        f_c_unf = jax.jit(lambda g_, z_, dy_, w_: be_unf.ct_backward_ep(
+            g_, z_, dy_, w_, spec, ep))
+        fns_t["pallas_unfused"] = lambda: f_t_unf(dy, w, b)
+        fns_c["pallas_unfused"] = lambda: f_c_unf(g, zs["pallas"], dy, w)
+        t_t = _time_interleaved(fns_t, iters=iters, warmup=warmup)
+        t_c = _time_interleaved(fns_c, iters=iters, warmup=warmup)
+        for bname in list(backends) + ["pallas_unfused"]:
+            rec["tconv_ep_us"][bname] = round(t_t[bname], 1)
+            rec["ct_backward_ep_us"][bname] = round(t_c[bname], 1)
+            derived = "" if bname != "pallas" else (
+                f"fused_vs_unfused="
+                f"{t_c['pallas_unfused'] / t_c['pallas']:.2f}x")
+            rows.append((f"wallclock.tconv_ep.{bname}.{name}",
+                         round(t_t[bname], 1), ""))
+            rows.append((f"wallclock.ct_backward_ep.{bname}.{name}",
+                         round(t_c[bname], 1), derived))
+        records.append(rec)
+    for name, kind, cfg, fuse in flt(TRAIN_STEP_CASES
+                                     if train_cases is None
+                                     else train_cases):
         rec = {"layer": name, "kind": kind, "config": cfg,
                "interpret_mode": jax.default_backend() != "tpu",
+               "epilogue": "fused" if fuse else "none",
                "train_step_us": {}}
-        fns_s = _train_step_fns(kind, cfg, backends, rng)
+        fns_s = _train_step_fns(kind, cfg, backends, rng,
+                                fuse_epilogue=fuse)
         t_s = _time_interleaved(fns_s, iters=iters, warmup=warmup)
         for bname in backends:
             rec["train_step_us"][bname] = round(t_s[bname], 1)
@@ -420,7 +589,11 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                      "pallas row ran under; `backward_us.pallas` is the "
                      "FUSED dual-gradient launch vs the `two_launch` "
                      "pallas pair it replaced; `train_step_us` rows time "
-                     "one full jit'd SGD step (fwd + fused bwd + update)",
+                     "one full jit'd SGD step (fwd + fused bwd + update); "
+                     "`epilogue` tags each row's fused tail ('none' for "
+                     "the plain families), and the *_ep_us families "
+                     "carry a `pallas_unfused` arm -- the same pallas "
+                     "kernels with the tail/mask/db as separate XLA ops",
              "cases": records}, indent=2) + "\n")
         rows.append(("wallclock.conv_backend.json", str(path), ""))
     return rows
@@ -447,6 +620,14 @@ _GATE_FIELDS = {
     "input_grad_us": "xla_zero_free",
     "backward_us": "two_launch",
     "train_step_us": "xla_zero_free",
+    # Epilogue families: forwards gate against the XLA zero-free tail
+    # composition; backwards gate against the SAME pallas kernels with
+    # the tail unfused -- a fused/unfused ratio regression > threshold
+    # means the epilogue fusion itself stopped paying for its launch.
+    "forward_ep_us": "xla_zero_free",
+    "backward_ep_us": "pallas_unfused",
+    "tconv_ep_us": "xla_zero_free",
+    "ct_backward_ep_us": "pallas_unfused",
 }
 
 
@@ -529,16 +710,26 @@ def delta_gate(threshold=1.5, iters=21, warmup=2):
 
 # Smoke geometries: minimal sizes that still exercise every op family
 # (tconv, filter-grad, fused dual-gradient backward, dilated forward,
-# strided+dilated input grad, CNN/GAN train step) through both zero-free
-# backends in seconds on an interpret-mode host.
+# strided+dilated input grad, epilogue-fused forward/backward for both
+# direct and transposed conv, CNN/GAN train step -- the GAN one with the
+# fused epilogue path on) through both zero-free backends in seconds on
+# an interpret-mode host.
 SMOKE_CASES = [("smoke-tconv", 5, 3, 2, 4, 4)]
 SMOKE_DILATED_CASES = [("smoke-d2", 9, 3, 1, 2, 2, 4, 4)]
 SMOKE_STRIDED_DILATED_CASES = [("smoke-s2d2", 4, 3, 2, 1, 2, 4, 4)]
 SMOKE_TRAIN_CASES = [
     ("smoke-train-cnn", "cnn",
-     {"widths": [4], "batch": 1, "image": 8, "n_classes": 4}),
-    ("smoke-train-gan-gen", "gan_gen",
-     {"base": 4, "z_dim": 8, "batch": 1}),
+     {"widths": [4], "batch": 1, "image": 8, "n_classes": 4}, False),
+    ("smoke-train-gan-gen-ep", "gan_gen",
+     {"base": 4, "z_dim": 8, "batch": 1}, True),
+]
+SMOKE_EPILOGUE_CASES = [
+    ("smoke-ep-brelu", 4, 3, 2, 4, 4,
+     Epilogue(activation="relu", bias=True)),
+]
+SMOKE_TCONV_EPILOGUE_CASES = [
+    ("smoke-tconv-ep-tanh", 4, 3, 2, 4, 4,
+     Epilogue(activation="tanh")),
 ]
 
 
@@ -567,6 +758,8 @@ def smoke():
             dilated_cases=SMOKE_DILATED_CASES,
             strided_dilated_cases=SMOKE_STRIDED_DILATED_CASES,
             train_cases=SMOKE_TRAIN_CASES,
+            epilogue_cases=SMOKE_EPILOGUE_CASES,
+            tconv_epilogue_cases=SMOKE_TCONV_EPILOGUE_CASES,
             json_path=smoke_json)
         got = _record_schema(json.loads(smoke_json.read_text()))
         committed_doc = json.loads(BENCH_JSON.read_text())
@@ -585,7 +778,7 @@ def smoke():
     finally:
         smoke_json.unlink(missing_ok=True)
     rows.append(("wallclock.smoke.schema", "ok",
-                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES)}"
+                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES + SMOKE_EPILOGUE_CASES + SMOKE_TCONV_EPILOGUE_CASES)}"
                  " families"))
     return rows
 

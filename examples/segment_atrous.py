@@ -6,7 +6,11 @@ atrous convs apply the filter at rate D without losing resolution, and a
 naive accelerator lowering schedules (D*(K-1)+1)^2 / K^2 more MACs than
 useful.  Every branch here routes through `ecoflow_dilated_conv`, so the
 dilated filter is never materialized -- forward or backward -- on any
-backend.
+backend.  The branch relu tails ride the declarative epilogue slot
+(DESIGN Sec. 2.8): the head requests `Epilogue(activation="relu")` per
+branch, so on the pallas backend each branch's forward AND backward stay
+at one launch with the activation (and its gradient mask) fused in-VMEM.
+`--no-fuse-epilogue` falls back to separate XLA relu ops for comparison.
 
 Run:  PYTHONPATH=src python examples/segment_atrous.py [--steps 120]
 """
@@ -47,6 +51,10 @@ def main():
     ap.add_argument("--backend", default="xla_zero_free",
                     choices=("reference", "xla_zero_free", "pallas"),
                     help="conv dispatch backend (repro.core.spec)")
+    ap.add_argument("--no-fuse-epilogue", dest="fuse_epilogue",
+                    action="store_false",
+                    help="run the branch relu tails as separate XLA ops "
+                         "instead of the fused epilogue slot")
     args = ap.parse_args()
 
     rates = (1, 2, 4)
@@ -59,11 +67,13 @@ def main():
     @jax.jit
     def step_fn(params, opt, x, y):
         loss, grads = jax.value_and_grad(
-            lambda p: vision.atrous_seg_loss(p, x, y, rates=rates,
-                                             backend=args.backend))(params)
+            lambda p: vision.atrous_seg_loss(
+                p, x, y, rates=rates, backend=args.backend,
+                fuse_epilogue=args.fuse_epilogue))(params)
         params, opt, om = adamw_update(grads, opt, params, ocfg)
-        logits = vision.atrous_head_apply(params, x, rates=rates,
-                                          backend=args.backend)
+        logits = vision.atrous_head_apply(
+            params, x, rates=rates, backend=args.backend,
+            fuse_epilogue=args.fuse_epilogue)
         acc = jnp.mean(jnp.argmax(logits, -1) == y)
         return params, opt, loss, acc
 

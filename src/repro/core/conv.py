@@ -23,29 +23,62 @@ Legacy `use_pallas` booleans are still accepted (True -> "pallas").
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 
-from repro.core.spec import ConvSpec, resolve_backend
+from repro.core.spec import ConvSpec, Epilogue, resolve_backend
+
+
+def _normalize_epilogue(epilogue, bias):
+    """Fold the `bias=` / `epilogue=` kwargs into one descriptor (or None
+    for the plain path).  A bias array with no descriptor means a pure
+    bias-add epilogue; a descriptor with `bias=False` plus a bias array is
+    promoted; identity descriptors with no bias collapse to None so the
+    legacy jaxpr (and its structural pins) stay byte-identical."""
+    if epilogue is None:
+        return Epilogue(bias=True) if bias is not None else None
+    if bias is not None and not epilogue.bias:
+        epilogue = dataclasses.replace(epilogue, bias=True)
+    if epilogue.bias and bias is None:
+        raise ValueError("epilogue.bias=True but no bias array was given")
+    return None if epilogue.is_identity else epilogue
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def ecoflow_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
-                 backend=None, dilation=1) -> jax.Array:
-    """Direct conv (NHWC x HWIO -> NHWC) with EcoFlow zero-free backward.
-
-    `dilation` > 1 makes the forward a dilated/atrous conv -- zero-free on
-    the `xla_zero_free` and `pallas` backends (the dilated filter is never
-    materialized); see `ecoflow_dilated_conv` for the keyword-friendly
-    entry point."""
+def _conv_plain(x: jax.Array, w: jax.Array, stride=1, padding=0,
+                backend=None, dilation=1) -> jax.Array:
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
     return resolve_backend(backend).forward(x, w, spec)
 
 
+def ecoflow_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
+                 backend=None, dilation=1, *, bias=None,
+                 epilogue: Epilogue | None = None) -> jax.Array:
+    """Direct conv (NHWC x HWIO -> NHWC) with EcoFlow zero-free backward.
+
+    `dilation` > 1 makes the forward a dilated/atrous conv -- zero-free on
+    the `xla_zero_free` and `pallas` backends (the dilated filter is never
+    materialized); see `ecoflow_dilated_conv` for the keyword-friendly
+    entry point.
+
+    `bias` ((Cout,) array) and/or `epilogue` (an `Epilogue` descriptor)
+    fuse the layer tail act(scale * conv + bias) into the conv launch on
+    backends with an epilogue slot (DESIGN.md Sec. 2.8); other backends
+    compose the identical math.  The VJP then masks the cotangent with
+    act'(y) in-kernel and returns the bias gradient from the same fused
+    backward launch."""
+    ep = _normalize_epilogue(epilogue, bias)
+    if ep is None:
+        return _conv_plain(x, w, stride, padding, backend, dilation)
+    return _conv_ep(x, w, bias if ep.bias else None, stride, padding,
+                    backend, dilation, ep)
+
+
 def _fwd(x, w, stride, padding, backend, dilation):
-    return ecoflow_conv(x, w, stride, padding, backend, dilation), (x, w)
+    return _conv_plain(x, w, stride, padding, backend, dilation), (x, w)
 
 
 def _bwd(stride, padding, backend, dilation, res, g):
@@ -61,11 +94,42 @@ def _bwd(stride, padding, backend, dilation, res, g):
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
-ecoflow_conv.defvjp(_fwd, _bwd)
+_conv_plain.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _conv_ep(x, w, b, stride, padding, backend, dilation,
+             epilogue: Epilogue):
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2], dilation=dilation)
+    return resolve_backend(backend).forward_ep(x, w, b, spec, epilogue)
+
+
+def _ep_fwd(x, w, b, stride, padding, backend, dilation, epilogue):
+    y = _conv_ep(x, w, b, stride, padding, backend, dilation, epilogue)
+    # The activation-gradient mask is a function of the OUTPUT y (relu:
+    # y > 0; leaky: sign of y; tanh: 1 - y^2), so y is the only extra
+    # residual -- no pre-activation tensor is ever materialized.
+    return y, (x, w, y if epilogue.needs_y else None)
+
+
+def _ep_bwd(stride, padding, backend, dilation, epilogue, res, g):
+    x, w, y = res
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2], dilation=dilation)
+    be = resolve_backend(backend)
+    dx, dw, db = be.backward_ep(x, y, g, w, spec,
+                                (x.shape[1], x.shape[2]), epilogue)
+    db = None if db is None else db.astype(g.dtype)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db
+
+
+_conv_ep.defvjp(_ep_fwd, _ep_bwd)
 
 
 def ecoflow_dilated_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
-                         dilation=2, backend=None) -> jax.Array:
+                         dilation=2, backend=None, *, bias=None,
+                         epilogue: Epilogue | None = None) -> jax.Array:
     """Zero-free dilated (atrous) forward convolution with zero-free VJP.
 
     The segmentation-style workload of the paper (Sec. 1, Table 5): the
@@ -74,7 +138,8 @@ def ecoflow_dilated_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
     backend's zero-free adjoints (per-tap scatter for dx, per-tap gather
     for dW), so `jax.grad` through this op matches `jax.grad` of
     `lax.conv_general_dilated(..., rhs_dilation=D)`."""
-    return ecoflow_conv(x, w, stride, padding, backend, dilation)
+    return ecoflow_conv(x, w, stride, padding, backend, dilation,
+                        bias=bias, epilogue=epilogue)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
@@ -116,9 +181,39 @@ def _ct_bwd(stride, padding, n_out, backend, dilation, res, g):
 _conv_transpose.defvjp(_ct_fwd, _ct_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _conv_transpose_ep(dy, w, b, stride, padding, n_out, backend, dilation,
+                       epilogue: Epilogue):
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2], dilation=dilation)
+    return resolve_backend(backend).input_grad_ep(dy, w, b, spec, n_out,
+                                                  epilogue)
+
+
+def _ct_ep_fwd(dy, w, b, stride, padding, n_out, backend, dilation,
+               epilogue):
+    z = _conv_transpose_ep(dy, w, b, stride, padding, n_out, backend,
+                           dilation, epilogue)
+    return z, (dy, w, z if epilogue.needs_y else None)
+
+
+def _ct_ep_bwd(stride, padding, n_out, backend, dilation, epilogue, res, g):
+    dy, w, z = res
+    spec = ConvSpec.make(stride=stride, padding=padding,
+                         filter_shape=w.shape[:2], dilation=dilation)
+    be = resolve_backend(backend)
+    ddy, dw, db = be.ct_backward_ep(g, z, dy, w, spec, epilogue)
+    db = None if db is None else db.astype(g.dtype)
+    return ddy.astype(dy.dtype), dw.astype(w.dtype), db
+
+
+_conv_transpose_ep.defvjp(_ct_ep_fwd, _ct_ep_bwd)
+
+
 def ecoflow_conv_transpose(dy: jax.Array, w: jax.Array, stride=1, padding=0,
-                           n_out=None, backend=None,
-                           dilation=1) -> jax.Array:
+                           n_out=None, backend=None, dilation=1, *,
+                           bias=None,
+                           epilogue: Epilogue | None = None) -> jax.Array:
     """Standalone zero-free transposed conv (e.g. GAN generator layers),
     dispatched through the backend registry.
 
@@ -141,5 +236,10 @@ def ecoflow_conv_transpose(dy: jax.Array, w: jax.Array, stride=1, padding=0,
             f"padding={spec.padding}, filter={spec.filter_shape}, "
             f"dilation={spec.dilation}: a forward conv over n_out yields "
             f"{spec.out_size(n_out)}")
-    return _conv_transpose(dy, w, spec.stride, spec.padding,
-                           n_out, backend, spec.dilation)
+    ep = _normalize_epilogue(epilogue, bias)
+    if ep is None:
+        return _conv_transpose(dy, w, spec.stride, spec.padding,
+                               n_out, backend, spec.dilation)
+    return _conv_transpose_ep(dy, w, bias if ep.bias else None, spec.stride,
+                              spec.padding, n_out, backend, spec.dilation,
+                              ep)

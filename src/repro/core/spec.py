@@ -35,11 +35,110 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, Sequence, Union
+from typing import Callable, Dict, Optional, Sequence, Union
 
 BackendLike = Union[None, bool, str, "ConvBackend"]
 
 DEFAULT_BACKEND = "xla_zero_free"
+
+_ACTIVATIONS = ("none", "relu", "leaky_relu", "tanh")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Elementwise tail fused into a conv launch (DESIGN.md Sec. 2.8).
+
+    Describes y = act(scale * conv + bias): an optional scalar scale, an
+    optional per-output-channel bias add, then one of the supported
+    activations.  The descriptor is frozen/hashable so it can ride through
+    `jax.jit` static arguments and `jax.custom_vjp` nondiff argnums; the
+    bias VECTOR itself stays a traced operand (an extra kernel input).
+
+    The backward contract exploits that every supported activation's
+    derivative is recoverable from the activation OUTPUT y (no
+    pre-activation residual needed): relu' = (y > 0), leaky_relu' =
+    where(y > 0, 1, slope) for slope > 0, tanh' = 1 - y^2.  `grad_factor`
+    is that derivative; the fused backward kernels apply it in-VMEM to the
+    resident cotangent block before the dx/dW matmuls and accumulate the
+    bias gradient (sum of the masked cotangent) as a third kernel output.
+    """
+    activation: str = "none"
+    bias: bool = False
+    slope: float = 0.01           # leaky_relu negative slope (> 0)
+    scale: Optional[float] = None  # scalar multiplier on the conv output
+
+    def __post_init__(self):
+        if self.activation not in _ACTIVATIONS:
+            raise ValueError(f"unknown epilogue activation "
+                             f"{self.activation!r}; expected one of "
+                             f"{_ACTIVATIONS}")
+        if self.activation == "leaky_relu" and not self.slope > 0:
+            # slope 0 would be plain relu; slope < 0 breaks the
+            # y-recoverable-derivative contract (sign(y) != sign(pre)).
+            raise ValueError(f"leaky_relu slope must be > 0, "
+                             f"got {self.slope}")
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.activation == "none" and not self.bias
+                and self.scale is None)
+
+    @property
+    def needs_y(self) -> bool:
+        """True when the backward needs the forward output residual (the
+        activation-gradient mask is a function of y)."""
+        return self.activation != "none"
+
+    @property
+    def tag(self) -> str:
+        """Compact stable string for cache keys / bench rows."""
+        if self.is_identity:
+            return "none"
+        act = self.activation
+        if act == "leaky_relu":
+            act += f"{self.slope:g}"
+        parts = (["b"] if self.bias else []) \
+            + ([act] if act != "none" else [])
+        if self.scale is not None:
+            parts.append(f"s{self.scale:g}")
+        return "+".join(parts)
+
+    def apply(self, vals, bias=None):
+        """Forward tail: act(scale * vals + bias).  Pure jnp elementwise,
+        usable both host-side (reference/xla backends) and on a
+        VMEM-resident block inside a Pallas kernel."""
+        import jax.numpy as jnp
+        if self.bias and bias is None:
+            raise ValueError("epilogue requests a bias but none was given")
+        if self.scale is not None:
+            vals = vals * self.scale
+        if bias is not None:
+            vals = vals + bias.astype(vals.dtype)
+        if self.activation == "relu":
+            vals = jnp.maximum(vals, 0.0)
+        elif self.activation == "leaky_relu":
+            vals = jnp.where(vals > 0, vals, self.slope * vals)
+        elif self.activation == "tanh":
+            vals = jnp.tanh(vals)
+        return vals
+
+    def grad_factor(self, y):
+        """Activation derivative act'(pre), computed from the OUTPUT y."""
+        import jax.numpy as jnp
+        if self.activation == "relu":
+            return (y > 0).astype(y.dtype)
+        if self.activation == "leaky_relu":
+            return jnp.where(y > 0, 1.0, self.slope).astype(y.dtype)
+        if self.activation == "tanh":
+            return 1.0 - jnp.square(y)
+        return None
+
+    def mask_cotangent(self, y, g):
+        """g * act'(y): the masked (UNSCALED) cotangent.  The bias
+        gradient is its channel-wise sum; dx/dW additionally carry the
+        scalar `scale` factor."""
+        f = self.grad_factor(y)
+        return g if f is None else g * f.astype(g.dtype)
 
 
 def _pair(v) -> tuple[int, int]:
@@ -242,6 +341,18 @@ class ConvBackend:
     fused_backward: Union[Callable, None] = None
     # (g, dy, w, spec) -> (ddy, dw): transposed-conv VJP, shared g.
     fused_ct_backward: Union[Callable, None] = None
+    # Epilogue-fused variants (DESIGN.md Sec. 2.8).  When absent, the
+    # generic *_ep methods compose the plain ops with Epilogue.apply /
+    # Epilogue.mask_cotangent -- mathematically identical, so the parity
+    # grids hold across backends with or without fused implementations.
+    # (x, w, bias, spec, ep) -> y
+    fused_forward_ep: Union[Callable, None] = None
+    # (dy, w, bias, spec, n_out, ep) -> x
+    fused_input_grad_ep: Union[Callable, None] = None
+    # (x, y, dy, w, spec, n_out, ep) -> (dx, dw, db|None)
+    fused_backward_ep: Union[Callable, None] = None
+    # (g, z, dy, w, spec, ep) -> (ddy, dw, db|None)
+    fused_ct_backward_ep: Union[Callable, None] = None
 
     def backward(self, x, dy, w, spec: "ConvSpec", n_out):
         """Both gradients of direct_conv(x, w, spec) w.r.t. cotangent dy:
@@ -263,6 +374,49 @@ class ConvBackend:
         ddy = self.forward(g, w, spec)
         dw = self.filter_grad(g, dy, spec)
         return ddy, dw
+
+    # -- epilogue-fused entry points (DESIGN.md Sec. 2.8) ------------------
+
+    def forward_ep(self, x, w, bias, spec: "ConvSpec", ep: Epilogue):
+        """y = ep.apply(forward(x, w), bias), fused in-kernel when the
+        backend has an epilogue slot."""
+        if self.fused_forward_ep is not None:
+            return self.fused_forward_ep(x, w, bias, spec, ep)
+        return ep.apply(self.forward(x, w, spec), bias)
+
+    def input_grad_ep(self, dy, w, bias, spec: "ConvSpec", n_out,
+                      ep: Epilogue):
+        """Transposed conv with a fused tail: the generator-style
+        tconv-as-a-layer use, NOT the conv adjoint."""
+        if self.fused_input_grad_ep is not None:
+            return self.fused_input_grad_ep(dy, w, bias, spec, n_out, ep)
+        return ep.apply(self.input_grad(dy, w, spec, n_out), bias)
+
+    def backward_ep(self, x, y, dy, w, spec: "ConvSpec", n_out,
+                    ep: Epilogue):
+        """VJP of forward_ep: masks the cotangent with act'(y), then the
+        shared dx/dW launch; db (sum of the masked cotangent) rides along
+        as a third output when ep.bias.  Returns (dx, dw, db|None)."""
+        if self.fused_backward_ep is not None:
+            return self.fused_backward_ep(x, y, dy, w, spec, n_out, ep)
+        m = ep.mask_cotangent(y, dy)
+        db = m.sum(axis=(0, 1, 2)) if ep.bias else None
+        if ep.scale is not None:
+            m = m * ep.scale
+        dx, dw = self.backward(x, m, w, spec, n_out)
+        return dx, dw, db
+
+    def ct_backward_ep(self, g, z, dy, w, spec: "ConvSpec", ep: Epilogue):
+        """VJP of input_grad_ep (z is its forward output).  Returns
+        (ddy, dw, db|None)."""
+        if self.fused_ct_backward_ep is not None:
+            return self.fused_ct_backward_ep(g, z, dy, w, spec, ep)
+        m = ep.mask_cotangent(z, g)
+        db = m.sum(axis=(0, 1, 2)) if ep.bias else None
+        if ep.scale is not None:
+            m = m * ep.scale
+        ddy, dw = self.ct_backward(m, dy, w, spec)
+        return ddy, dw, db
 
 
 _BACKENDS: Dict[str, ConvBackend] = {}
@@ -400,10 +554,47 @@ def _ensure_default_backends() -> None:
                                    padding=spec.padding,
                                    dilation=spec.dilation)
 
+    # Epilogue-fused launches.  Note the forward: the plain pallas forward
+    # defers dilation (1, 1) to XLA, but with an epilogue requested the
+    # (dilation-general) Pallas kernel is always used so the tail is fused
+    # into the single conv launch.
+    def _pl_forward_ep(x, w, bias, spec: ConvSpec, ep: Epilogue):
+        from repro.kernels import ops as kops
+        return kops.dconv_forward(x, w, stride=spec.stride,
+                                  padding=spec.padding,
+                                  dilation=spec.dilation,
+                                  bias=bias, epilogue=ep)
+
+    def _pl_input_grad_ep(dy, w, bias, spec: ConvSpec, n_out,
+                          ep: Epilogue):
+        from repro.kernels import ops as kops
+        return kops.tconv_phase(dy, w, stride=spec.stride,
+                                padding=spec.padding, n_out=_pair(n_out),
+                                dilation=spec.dilation,
+                                bias=bias, epilogue=ep)
+
+    def _pl_backward_ep(x, y, dy, w, spec: ConvSpec, n_out, ep: Epilogue):
+        from repro.kernels import ops as kops
+        return kops.conv_backward(x, dy, w, stride=spec.stride,
+                                  padding=spec.padding, n_out=_pair(n_out),
+                                  dilation=spec.dilation,
+                                  y=y, epilogue=ep)
+
+    def _pl_ct_backward_ep(g, z, dy, w, spec: ConvSpec, ep: Epilogue):
+        from repro.kernels import ops as kops
+        return kops.tconv_backward(g, dy, w, stride=spec.stride,
+                                   padding=spec.padding,
+                                   dilation=spec.dilation,
+                                   z=z, epilogue=ep)
+
     register_backend(ConvBackend("pallas", _pl_forward,
                                  _pl_input_grad, _pl_filter_grad,
                                  fused_backward=_pl_backward,
-                                 fused_ct_backward=_pl_ct_backward))
+                                 fused_ct_backward=_pl_ct_backward,
+                                 fused_forward_ep=_pl_forward_ep,
+                                 fused_input_grad_ep=_pl_input_grad_ep,
+                                 fused_backward_ep=_pl_backward_ep,
+                                 fused_ct_backward_ep=_pl_ct_backward_ep))
 
     # Only mark done once every default registered -- a failure above
     # surfaces on the next call instead of poisoning the registry.

@@ -88,23 +88,67 @@ from repro.kernels.tconv_phase import (assemble_phase_major,
 # direct-conv VJP: (dx, dW) from one dy residency
 # ---------------------------------------------------------------------------
 
-def _bwd_kernel(dy_ref, w_ref, x_ref, dx_ref, dw_ref, *, tpw: int, kp: int,
+def _bwd_kernel(dy_ref, w_ref, x_ref, *refs, tpw: int, kp: int,
                 kq: int, kh: int, kwf: int, per_h: int, per_w: int, sh: int,
                 sw: int, dil_h: int, dil_w: int, step_h: int, step_w: int,
                 pad_h: int, pad_w: int, ho: int, wo: int, oh: int, ow: int,
-                pu: int, n_t: int, u: int, n_k: int, n_b: int, n_co: int,
-                co_t: int):
+                pu: int, n_t: int, u: int, n_k: int, n_b: int, n_ci: int,
+                n_co: int, co_t: int, ep=None, has_y: bool = False,
+                has_db: bool = False):
+    # refs = ([y_ref,] dx_ref, dw_ref [, db_ref]): the forward-output
+    # residual input and the bias-gradient output exist only when the
+    # epilogue needs them, so the epilogue-free launch keeps the exact
+    # legacy spec lists (and jaxpr pins).
+    y_ref = refs[0] if has_y else None
+    dx_ref, dw_ref = refs[1 if has_y else 0], refs[2 if has_y else 1]
+    db_ref = refs[-1] if has_db else None
     b = pl.program_id(1)
     t0 = pl.program_id(2) * pu if n_t > 1 else 0
     co = pl.program_id(3)
     k0 = pl.program_id(4) * u if n_k > 1 else 0
+    # Activation-gradient masking IN-VMEM on the resident cotangent block
+    # (DESIGN.md Sec. 2.8): dym = dy * act'(y) is the masked (unscaled)
+    # cotangent feeding the bias gradient; dx/dW additionally carry the
+    # epilogue's scalar scale.  Padded positions stay zero (dy pad is 0).
     dyv = dy_ref[0]
+    dym = dyv if y_ref is None else (
+        dyv * ep.grad_factor(y_ref[0]).astype(dyv.dtype))
+    dyv = dym if ep is None or ep.scale is None else dym * ep.scale
     xv = x_ref[0]
     # The shared residency: the filter-grad side's UNPADDED error window
     # is a static slice of the same VMEM-resident padded dy block the
     # input-grad windows come from -- dy is fetched exactly once.
     rhs_fg = dyv[pad_h:pad_h + oh, pad_w:pad_w + ow].reshape(
         oh * ow, dyv.shape[-1]).astype(jnp.float32)
+    if db_ref is not None:
+        # Bias gradient: channel-sum of the masked cotangent, accumulated
+        # in-kernel as the launch's third output.  One contribution per
+        # (batch, cout-tile) -- taken at the first (ci, phase, tap) step.
+        dbc = dym[pad_h:pad_h + oh, pad_w:pad_w + ow].astype(
+            jnp.float32).sum(axis=(0, 1))                # (co_t,)
+        db_cols = slice(None) if n_co == 1 else pl.ds(co * co_t, co_t)
+        take = []
+        if n_ci > 1:
+            take.append(pl.program_id(0) == 0)
+        if n_t > 1:
+            take.append(pl.program_id(2) == 0)
+        if n_k > 1:
+            take.append(pl.program_id(4) == 0)
+        if n_b == 1:
+            if take:
+                @pl.when(functools.reduce(jnp.logical_and, take))
+                def _db_set():
+                    db_ref[0, db_cols] = dbc
+            else:
+                db_ref[0, db_cols] = dbc
+        else:
+            @pl.when(functools.reduce(jnp.logical_and, take + [b == 0]))
+            def _db_init():
+                db_ref[0, db_cols] = dbc
+
+            @pl.when(functools.reduce(jnp.logical_and, take + [b > 0]))
+            def _db_acc():
+                db_ref[0, db_cols] += dbc
     dx_first = None if (n_co == 1 and n_k == 1) else (
         (co == 0) if n_k == 1 else ((co == 0) & (pl.program_id(4) == 0)))
     # Traced (phase, slot) indices (multiple phase/tap grid steps) cannot
@@ -205,10 +249,13 @@ def _bwd_kernel(dy_ref, w_ref, x_ref, dx_ref, dw_ref, *, tpw: int, kp: int,
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out",
                                              "dilation", "cin_tile",
                                              "cout_tile", "tap_unroll",
-                                             "phase_unroll", "interpret"))
+                                             "phase_unroll", "interpret",
+                                             "epilogue"))
 def conv_backward_pallas(x: jax.Array, dy: jax.Array, w: jax.Array, *,
                          stride, padding=(0, 0), n_out=None,
-                         dilation=(1, 1), cin_tile: int | None = None,
+                         dilation=(1, 1), y: jax.Array | None = None,
+                         epilogue=None,
+                         cin_tile: int | None = None,
                          cout_tile: int | None = None,
                          tap_unroll: int | None = None,
                          phase_unroll: int | None = None,
@@ -224,6 +271,13 @@ def conv_backward_pallas(x: jax.Array, dy: jax.Array, w: jax.Array, *,
              dW (Kh, Kw, Cin, Cout) as x.dtype).
     Bit-identical (up to fp accumulation order) to
     (tconv_fused_pallas(dy, w), dconv_filter_grad_pallas(x, dy)).
+
+    With `epilogue` (static `Epilogue`) this is the VJP of the
+    epilogue-fused forward: `y` is the forward OUTPUT residual, the
+    activation-gradient mask act'(y) is applied in-VMEM to the resident
+    dy block before both matmuls, and when the epilogue carries a bias
+    the bias gradient is accumulated in-kernel as a THIRD output --
+    the return becomes (dx, dW, db|None).
     """
     sh, sw = _pair(stride)
     ph, pw_ = _pair(padding)
@@ -265,11 +319,18 @@ def conv_backward_pallas(x: jax.Array, dy: jax.Array, w: jax.Array, *,
                             k=(Kh, Kw), out_size=(Oh, Ow))
     xh, xw = xp.shape[1], xp.shape[2]
 
+    if epilogue is not None and epilogue.is_identity:
+        epilogue = None
+    has_y = epilogue is not None and epilogue.needs_y
+    has_db = epilogue is not None and epilogue.bias
+    if has_y and y is None:
+        raise ValueError("epilogue has an activation but no forward "
+                         "output residual y was given")
     if None in (cin_tile, cout_tile, tap_unroll, phase_unroll):
         plan = tiling.plan_tiles("backward", spec, x_shape=x.shape,
                                  dy_shape=dy.shape,
                                  itemsize=dy.dtype.itemsize,
-                                 interpret=interpret)
+                                 interpret=interpret, epilogue=epilogue)
         cin_tile = plan.cin_tile if cin_tile is None else cin_tile
         cout_tile = plan.cout_tile if cout_tile is None else cout_tile
         tap_unroll = plan.tap_unroll if tap_unroll is None else tap_unroll
@@ -295,30 +356,50 @@ def conv_backward_pallas(x: jax.Array, dy: jax.Array, w: jax.Array, *,
         _bwd_kernel, tpw=TPw, kp=KP, kq=KQ, kh=Kh, kwf=Kw, per_h=per_h,
         per_w=per_w, sh=sh, sw=sw, dil_h=dil_h, dil_w=dil_w, step_h=step_h,
         step_w=step_w, pad_h=pad_h, pad_w=pad_w, ho=ho, wo=wo, oh=Oh,
-        ow=Ow, pu=pu, n_t=n_t, u=u, n_k=n_k, n_b=B, n_co=n_co, co_t=co_t)
-    dx_pm, dw_flat = pl.pallas_call(
+        ow=Ow, pu=pu, n_t=n_t, u=u, n_k=n_k, n_b=B, n_ci=n_ci, n_co=n_co,
+        co_t=co_t, ep=epilogue, has_y=has_y, has_db=has_db)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, co_t),
+                     lambda ci, b, t, co, k: (b, 0, 0, co)),
+        pl.BlockSpec((pu, u, co_t, ci_t),
+                     lambda ci, b, t, co, k: (t, k, co, ci)),
+        pl.BlockSpec((1, xh, xw, ci_t),
+                     lambda ci, b, t, co, k: (b, 0, 0, ci)),
+    ]
+    ins = [dy_pad, w_flat, xp]
+    if has_y:
+        # y rides next to dy with the identical padding/blocking so the
+        # mask multiply is pure resident-block elementwise work.
+        yp = jnp.pad(y, ((0, 0), (pad_h, ho - Oh), (pad_w, wo - Ow),
+                         (0, 0)))
+        if Cout % co_t:
+            yp = jnp.pad(yp, ((0, 0),) * 3 + ((0, co_pad - Cout),))
+        in_specs.append(pl.BlockSpec((1, hp, wp, co_t),
+                                     lambda ci, b, t, co, k: (b, 0, 0, co)))
+        ins.append(yp)
+    out_specs = [
+        pl.BlockSpec((1, pu, ho, wo, ci_t),
+                     lambda ci, b, t, co, k: (b, t, 0, 0, ci)),
+        pl.BlockSpec((T_w, ci_t, co_pad),
+                     lambda ci, b, t, co, k: (0, ci, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, T, ho, wo, n_ci * ci_t), jnp.float32),
+        jax.ShapeDtypeStruct((T_w, n_ci * ci_t, co_pad), jnp.float32),
+    ]
+    if has_db:
+        out_specs.append(pl.BlockSpec((1, co_pad),
+                                      lambda ci, b, t, co, k: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((1, co_pad), jnp.float32))
+    outs = pl.pallas_call(
         kern,
         grid=(n_ci, B, n_t, n_co, n_k),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, co_t),
-                         lambda ci, b, t, co, k: (b, 0, 0, co)),
-            pl.BlockSpec((pu, u, co_t, ci_t),
-                         lambda ci, b, t, co, k: (t, k, co, ci)),
-            pl.BlockSpec((1, xh, xw, ci_t),
-                         lambda ci, b, t, co, k: (b, 0, 0, ci)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, pu, ho, wo, ci_t),
-                         lambda ci, b, t, co, k: (b, t, 0, 0, ci)),
-            pl.BlockSpec((T_w, ci_t, co_pad),
-                         lambda ci, b, t, co, k: (0, ci, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, T, ho, wo, n_ci * ci_t), jnp.float32),
-            jax.ShapeDtypeStruct((T_w, n_ci * ci_t, co_pad), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(dy_pad, w_flat, xp)
+    )(*ins)
+    dx_pm, dw_flat = outs[0], outs[1]
 
     # dW: slice the channel pads, restore the (Kh, Kw) tap layout.
     if Cin % ci_t or Cout % co_t:
@@ -331,23 +412,63 @@ def conv_backward_pallas(x: jax.Array, dy: jax.Array, w: jax.Array, *,
         out = out[..., :Cin]
     dx = assemble_phase_major(out, spec, n_out=(Nh, Nw),
                               full_size=(Fh, Fw)).astype(dy.dtype)
-    return dx, dw
+    if epilogue is None:
+        return dx, dw
+    db = outs[2][0, :Cout].astype(dy.dtype) if has_db else None
+    return dx, dw, db
 
 
 # ---------------------------------------------------------------------------
 # transposed-conv VJP: (ddy, dW) from one g residency
 # ---------------------------------------------------------------------------
 
-def _ct_bwd_kernel(g_ref, w_ref, dy_ref, ddy_ref, dw_ref, *, sh: int,
+def _ct_bwd_kernel(g_ref, w_ref, dy_ref, *refs, sh: int,
                    sw: int, dil_h: int, dil_w: int, oh: int, ow: int,
                    kwf: int, u: int, n_t: int, n_b: int, n_ci: int,
-                   n_co: int, ci_t: int, co_t: int):
+                   n_co: int, ci_t: int, co_t: int, ep=None,
+                   has_z: bool = False, has_db: bool = False):
+    # refs = ([z_ref,] ddy_ref, dw_ref [, db_ref]); z is the fused
+    # transposed conv's own forward output, masking its cotangent g.
+    z_ref = refs[0] if has_z else None
+    ddy_ref, dw_ref = refs[1 if has_z else 0], refs[2 if has_z else 1]
+    db_ref = refs[-1] if has_db else None
     b, ci, co = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     t0 = pl.program_id(3) * u if n_t > 1 else 0
+    # In-VMEM activation-gradient mask on the resident cotangent block:
+    # every tap gather below reads the masked g, so both matmuls (ddy
+    # and dW) see the epilogue's pullback without an extra HBM pass.
     gv = g_ref[0]
+    gm = gv if z_ref is None else (
+        gv * ep.grad_factor(z_ref[0]).astype(gv.dtype))
+    gv = gm if ep is None or ep.scale is None else gm * ep.scale
     rhs_fg = dy_ref[0].reshape(oh * ow, co_t).astype(jnp.float32)
     ci_cols = slice(None) if n_ci == 1 else pl.ds(ci * ci_t, ci_t)
     co_cols = slice(None) if n_co == 1 else pl.ds(co * co_t, co_t)
+    if db_ref is not None:
+        # Bias gradient over the tconv's OUTPUT channels (Cin): sum of
+        # the masked (unscaled) cotangent, one contribution per
+        # (batch, cin-tile) at the first (cout, tap) step.
+        dbc = gm.astype(jnp.float32).sum(axis=(0, 1))       # (ci_t,)
+        take = []
+        if n_co > 1:
+            take.append(co == 0)
+        if n_t > 1:
+            take.append(pl.program_id(3) == 0)
+        if n_b == 1:
+            if take:
+                @pl.when(functools.reduce(jnp.logical_and, take))
+                def _db_set():
+                    db_ref[0, ci_cols] = dbc
+            else:
+                db_ref[0, ci_cols] = dbc
+        else:
+            @pl.when(functools.reduce(jnp.logical_and, take + [b == 0]))
+            def _db_init():
+                db_ref[0, ci_cols] = dbc
+
+            @pl.when(functools.reduce(jnp.logical_and, take + [b > 0]))
+            def _db_acc():
+                db_ref[0, ci_cols] += dbc
     acc_f = None
     for j in range(u):
         t = t0 + j
@@ -393,9 +514,10 @@ def _ct_bwd_kernel(g_ref, w_ref, dy_ref, ddy_ref, dw_ref, *, sh: int,
 @functools.partial(jax.jit, static_argnames=("stride", "padding",
                                              "dilation", "cin_tile",
                                              "cout_tile", "tap_unroll",
-                                             "interpret"))
+                                             "interpret", "epilogue"))
 def tconv_backward_pallas(g: jax.Array, dy: jax.Array, w: jax.Array, *,
                           stride, padding=(0, 0), dilation=(1, 1),
+                          z: jax.Array | None = None, epilogue=None,
                           cin_tile: int | None = None,
                           cout_tile: int | None = None,
                           tap_unroll: int | None = None,
@@ -409,6 +531,13 @@ def tconv_backward_pallas(g: jax.Array, dy: jax.Array, w: jax.Array, *,
     dy: (B, Oh, Ow, Cout) the transposed conv's own input (residual).
     w:  (Kh, Kw, Cin, Cout) forward-orientation filter.
     Returns (ddy (B, Oh, Ow, Cout), dW (Kh, Kw, Cin, Cout)).
+
+    With `epilogue` (static `Epilogue`) this is the VJP of the
+    epilogue-fused transposed conv: `z` is its forward output residual,
+    act'(z) masks the resident g block in-VMEM before the shared tap
+    gathers, and when the epilogue carries a bias its gradient (over the
+    tconv OUTPUT channels, Cin) is the launch's third output -- the
+    return becomes (ddy, dW, db|None).
     """
     sh, sw = _pair(stride)
     ph, pw_ = _pair(padding)
@@ -427,11 +556,18 @@ def tconv_backward_pallas(g: jax.Array, dy: jax.Array, w: jax.Array, *,
             f"{spec.out_size((Nh, Nw))}")
     T = Kh * Kw
 
+    if epilogue is not None and epilogue.is_identity:
+        epilogue = None
+    has_z = epilogue is not None and epilogue.needs_y
+    has_db = epilogue is not None and epilogue.bias
+    if has_z and z is None:
+        raise ValueError("epilogue has an activation but no forward "
+                         "output residual z was given")
     if None in (cin_tile, cout_tile, tap_unroll):
         plan = tiling.plan_tiles("ct_backward", spec, x_shape=g.shape,
                                  dy_shape=dy.shape,
                                  itemsize=g.dtype.itemsize,
-                                 interpret=interpret)
+                                 interpret=interpret, epilogue=epilogue)
         cin_tile = plan.cin_tile if cin_tile is None else cin_tile
         cout_tile = plan.cout_tile if cout_tile is None else cout_tile
         tap_unroll = plan.tap_unroll if tap_unroll is None else tap_unroll
@@ -459,55 +595,83 @@ def tconv_backward_pallas(g: jax.Array, dy: jax.Array, w: jax.Array, *,
     kern = functools.partial(_ct_bwd_kernel, sh=sh, sw=sw, dil_h=dil_h,
                              dil_w=dil_w, oh=Oh, ow=Ow, kwf=Kw, u=u,
                              n_t=n_t, n_b=B, n_ci=n_ci, n_co=n_co,
-                             ci_t=ci_t, co_t=co_t)
-    ddy, dw_flat = pl.pallas_call(
+                             ci_t=ci_t, co_t=co_t, ep=epilogue,
+                             has_z=has_z, has_db=has_db)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, ci_t),
+                     lambda b, ci, co, t: (b, 0, 0, ci)),
+        pl.BlockSpec((u, ci_t, co_t),
+                     lambda b, ci, co, t: (t, ci, co)),
+        pl.BlockSpec((1, Oh, Ow, co_t),
+                     lambda b, ci, co, t: (b, 0, 0, co)),
+    ]
+    ins = [gp, w_taps, dy_p]
+    if has_z:
+        # z rides next to g with the identical padding/blocking so the
+        # mask multiply is pure resident-block elementwise work.
+        zp = jnp.pad(z, ((0, 0), (ph, ph), (pw_, pw_), (0, 0)))
+        zp = pad_to_tap_windows(zp, stride=(sh, sw),
+                                dilation=(dil_h, dil_w), k=(Kh, Kw),
+                                out_size=(Oh, Ow))
+        if Cin % ci_t:
+            zp = jnp.pad(zp, ((0, 0),) * 3 + ((0, ci_pad - Cin),))
+        in_specs.append(pl.BlockSpec((1, hp, wp, ci_t),
+                                     lambda b, ci, co, t: (b, 0, 0, ci)))
+        ins.append(zp)
+    out_specs = [
+        pl.BlockSpec((1, Oh, Ow, co_pad),
+                     lambda b, ci, co, t: (b, 0, 0, 0)),
+        pl.BlockSpec((T, ci_pad, co_pad),
+                     lambda b, ci, co, t: (0, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Oh, Ow, co_pad), jnp.float32),
+        jax.ShapeDtypeStruct((T, ci_pad, co_pad), jnp.float32),
+    ]
+    if has_db:
+        out_specs.append(pl.BlockSpec((1, ci_pad),
+                                      lambda b, ci, co, t: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((1, ci_pad), jnp.float32))
+    outs = pl.pallas_call(
         kern,
         grid=(B, n_ci, n_co, n_t),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, ci_t),
-                         lambda b, ci, co, t: (b, 0, 0, ci)),
-            pl.BlockSpec((u, ci_t, co_t),
-                         lambda b, ci, co, t: (t, ci, co)),
-            pl.BlockSpec((1, Oh, Ow, co_t),
-                         lambda b, ci, co, t: (b, 0, 0, co)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, Oh, Ow, co_pad),
-                         lambda b, ci, co, t: (b, 0, 0, 0)),
-            pl.BlockSpec((T, ci_pad, co_pad),
-                         lambda b, ci, co, t: (0, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, Oh, Ow, co_pad), jnp.float32),
-            jax.ShapeDtypeStruct((T, ci_pad, co_pad), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(gp, w_taps, dy_p)
+    )(*ins)
+    ddy, dw_flat = outs[0], outs[1]
     if Cout % co_t:
         ddy = ddy[..., :Cout]
     if Cin % ci_t or Cout % co_t:
         dw_flat = dw_flat[:, :Cin, :Cout]
-    return (ddy.astype(dy.dtype),
-            dw_flat.reshape(Kh, Kw, Cin, Cout).astype(g.dtype))
+    dw = dw_flat.reshape(Kh, Kw, Cin, Cout).astype(g.dtype)
+    if epilogue is None:
+        return ddy.astype(dy.dtype), dw
+    db = outs[2][0, :Cin].astype(g.dtype) if has_db else None
+    return ddy.astype(dy.dtype), dw, db
 
 
 # ---------------------------------------------------------------------------
 # autotune runners
 # ---------------------------------------------------------------------------
 
-def _backward_runner(spec: ConvSpec, x_shape, dy_shape):
+def _backward_runner(spec: ConvSpec, x_shape, dy_shape, epilogue=None):
     """Autotune hook: execute the fused dual-gradient kernel at one
     candidate plan."""
     x = jnp.zeros(x_shape, jnp.float32)
     dy = jnp.zeros(dy_shape, jnp.float32)
     w = jnp.zeros(spec.filter_shape + (x_shape[-1], dy_shape[-1]),
                   jnp.float32)
+    y = (jnp.zeros(dy_shape, jnp.float32)
+         if epilogue is not None and epilogue.needs_y else None)
     interp = jax.default_backend() != "tpu"
 
     def run(plan: tiling.TilePlan):
         return jax.block_until_ready(conv_backward_pallas(
             x, dy, w, stride=spec.stride, padding=spec.padding,
             n_out=(x_shape[1], x_shape[2]), dilation=spec.dilation,
+            y=y, epilogue=epilogue,
             cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
             tap_unroll=plan.tap_unroll, phase_unroll=plan.phase_unroll,
             interpret=interp))
@@ -515,18 +679,21 @@ def _backward_runner(spec: ConvSpec, x_shape, dy_shape):
     return run
 
 
-def _ct_backward_runner(spec: ConvSpec, x_shape, dy_shape):
+def _ct_backward_runner(spec: ConvSpec, x_shape, dy_shape, epilogue=None):
     """Autotune hook for the transposed-conv fused backward."""
     g = jnp.zeros(x_shape, jnp.float32)
     dy = jnp.zeros(dy_shape, jnp.float32)
     w = jnp.zeros(spec.filter_shape + (x_shape[-1], dy_shape[-1]),
                   jnp.float32)
+    z = (jnp.zeros(x_shape, jnp.float32)
+         if epilogue is not None and epilogue.needs_y else None)
     interp = jax.default_backend() != "tpu"
 
     def run(plan: tiling.TilePlan):
         return jax.block_until_ready(tconv_backward_pallas(
             g, dy, w, stride=spec.stride, padding=spec.padding,
-            dilation=spec.dilation, cin_tile=plan.cin_tile,
+            dilation=spec.dilation, z=z, epilogue=epilogue,
+            cin_tile=plan.cin_tile,
             cout_tile=plan.cout_tile, tap_unroll=plan.tap_unroll,
             interpret=interp))
 

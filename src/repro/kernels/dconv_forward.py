@@ -43,8 +43,14 @@ from repro.kernels import tiling
 from repro.kernels.tap_gather import gather_tap, pad_to_tap_windows
 
 
-def _df_kernel(x_ref, w_ref, out_ref, *, sh: int, sw: int, dh: int, dw: int,
-               oh: int, ow: int, kw: int, u: int, n_t: int, seq1: bool):
+def _df_kernel(x_ref, w_ref, *refs, sh: int, sw: int, dh: int, dw: int,
+               oh: int, ow: int, kw: int, u: int, n_t: int, n_ci: int,
+               seq1: bool, ep=None):
+    # refs = ([bias_ref,] out_ref): the bias input exists only when the
+    # epilogue carries one, so the epilogue-free launch keeps the exact
+    # legacy in_specs (and jaxpr pins).
+    bias_ref = refs[0] if len(refs) == 2 else None
+    out_ref = refs[-1]
     ci = pl.program_id(2)
     # With a single tap step, t0 is a python int and every tap gather
     # below lowers to STATIC strided slices of the resident block.
@@ -62,8 +68,12 @@ def _df_kernel(x_ref, w_ref, out_ref, *, sh: int, sw: int, dh: int, dw: int,
         prod = jax.lax.dot(lhs, rhs, preferred_element_type=jnp.float32)
         acc = prod if acc is None else acc + prod
     acc = acc.reshape(oh, ow, out_ref.shape[-1])
+
+    def _tail(vals):  # epilogue on the VMEM-resident block, pre-store
+        return ep.apply(vals, None if bias_ref is None else bias_ref[0])
+
     if seq1:       # single sequential step: every visit initializes
-        out_ref[0] = acc
+        out_ref[0] = _tail(acc) if ep is not None else acc
         return
     first = (ci == 0) if n_t == 1 else ((ci == 0) & (pl.program_id(3) == 0))
 
@@ -75,12 +85,26 @@ def _df_kernel(x_ref, w_ref, out_ref, *, sh: int, sw: int, dh: int, dw: int,
     def _acc():
         out_ref[0] += acc
 
+    if ep is not None:
+        # Last sequential visit of this output tile: apply the epilogue
+        # to the finished accumulator before it leaves VMEM.
+        last = (ci == n_ci - 1)
+        if n_t > 1:
+            last &= pl.program_id(3) == n_t - 1
+
+        @pl.when(last)
+        def _epilogue():
+            out_ref[0] = _tail(out_ref[0])
+
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "dilation",
                                              "cin_tile", "cout_tile",
-                                             "tap_unroll", "interpret"))
+                                             "tap_unroll", "interpret",
+                                             "epilogue"))
 def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
                          padding=(0, 0), dilation=(2, 2),
+                         bias: jax.Array | None = None,
+                         epilogue=None,
                          cin_tile: int | None = None,
                          cout_tile: int | None = None,
                          tap_unroll: int | None = None,
@@ -92,6 +116,10 @@ def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
     Returns (B, Oh, Ow, Cout) with O = floor((N + 2P - K_eff)/S) + 1.
     Channel tiles default to the geometry-aware planner in
     `kernels/tiling.py`; pass them explicitly to pin a tiling.
+
+    `epilogue` (an `Epilogue`, static) fuses act(scale * conv + bias)
+    onto the resident output block before its HBM store; `bias` is the
+    (Cout,) vector when the epilogue carries one.
     """
     sh, sw = _pair(stride)
     ph, pw = _pair(padding)
@@ -105,11 +133,15 @@ def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
         raise ValueError(
             f"input {(Nh, Nw)} too small for effective filter "
             f"{spec.dilated_filter_shape} at padding {(ph, pw)}")
+    if epilogue is not None and epilogue.is_identity:
+        epilogue = None
+    if epilogue is not None and epilogue.bias and bias is None:
+        raise ValueError("epilogue.bias=True but no bias array was given")
     if None in (cin_tile, cout_tile, tap_unroll):
         plan = tiling.plan_tiles("forward", spec, x_shape=x.shape,
                                  dy_shape=(B, Oh, Ow, Cout),
                                  itemsize=x.dtype.itemsize,
-                                 interpret=interpret)
+                                 interpret=interpret, epilogue=epilogue)
         cin_tile = plan.cin_tile if cin_tile is None else cin_tile
         cout_tile = plan.cout_tile if cout_tile is None else cout_tile
         tap_unroll = plan.tap_unroll if tap_unroll is None else tap_unroll
@@ -133,38 +165,51 @@ def dconv_forward_pallas(x: jax.Array, w: jax.Array, *, stride=(1, 1),
     n_t = T // u
     kern = functools.partial(_df_kernel, sh=sh, sw=sw, dh=dh, dw=dw,
                              oh=Oh, ow=Ow, kw=Kw, u=u, n_t=n_t,
-                             seq1=(n_ci == 1 and n_t == 1))
+                             n_ci=n_ci, seq1=(n_ci == 1 and n_t == 1),
+                             ep=epilogue)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, ci_t),
+                     lambda b, co, ci, t: (b, 0, 0, ci)),
+        pl.BlockSpec((u, ci_t, co_t),
+                     lambda b, co, ci, t: (t, ci, co)),
+    ]
+    ins = [xp, w_taps]
+    if epilogue is not None and epilogue.bias:
+        bp = bias.astype(jnp.float32).reshape(1, Cout)
+        if Cout % co_t:
+            bp = jnp.pad(bp, ((0, 0), (0, n_co * co_t - Cout)))
+        in_specs.append(pl.BlockSpec((1, co_t),
+                                     lambda b, co, ci, t: (0, co)))
+        ins.append(bp)
     out = pl.pallas_call(
         kern,
         grid=(B, n_co, n_ci, n_t),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, ci_t),
-                         lambda b, co, ci, t: (b, 0, 0, ci)),
-            pl.BlockSpec((u, ci_t, co_t),
-                         lambda b, co, ci, t: (t, ci, co)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Oh, Ow, co_t),
                                lambda b, co, ci, t: (b, 0, 0, co)),
         out_shape=jax.ShapeDtypeStruct((B, Oh, Ow, n_co * co_t),
                                        jnp.float32),
         interpret=interpret,
-    )(xp, w_taps)
+    )(*ins)
     if Cout % co_t:   # slice only when channel padding occurred
         out = out[..., :Cout]
     return out.astype(x.dtype)
 
 
-def _autotune_runner(spec: ConvSpec, x_shape, dy_shape):
+def _autotune_runner(spec: ConvSpec, x_shape, dy_shape, epilogue=None):
     """Autotune hook: execute the real kernel at one candidate plan."""
     x = jnp.zeros(x_shape, jnp.float32)
     w = jnp.zeros(spec.filter_shape + (x_shape[-1], dy_shape[-1]),
                   jnp.float32)
+    bias = (jnp.zeros((dy_shape[-1],), jnp.float32)
+            if epilogue is not None and epilogue.bias else None)
     interp = jax.default_backend() != "tpu"
 
     def run(plan: tiling.TilePlan):
         return jax.block_until_ready(dconv_forward_pallas(
             x, w, stride=spec.stride, padding=spec.padding,
-            dilation=spec.dilation, cin_tile=plan.cin_tile,
+            dilation=spec.dilation, bias=bias, epilogue=epilogue,
+            cin_tile=plan.cin_tile,
             cout_tile=plan.cout_tile, tap_unroll=plan.tap_unroll,
             interpret=interp))
 

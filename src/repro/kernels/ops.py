@@ -62,11 +62,14 @@ def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128):
 
 
 def tconv_phase(dy: jax.Array, w: jax.Array, *, stride, padding,
-                n_out, dilation=(1, 1)) -> jax.Array:
+                n_out, dilation=(1, 1), bias=None,
+                epilogue=None) -> jax.Array:
     """Fused zero-free transposed conv: one Pallas launch for all
     (phase, tap) pairs of any (stride, dilation) geometry.
 
     dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout) -> dx (B,Nh,Nw,Cin).
+    `epilogue` / `bias` fuse act(scale * . + bias) onto each phase plane
+    in-kernel (bias over the OUTPUT channels Cin).
     """
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=(w.shape[0], w.shape[1]),
@@ -75,10 +78,11 @@ def tconv_phase(dy: jax.Array, w: jax.Array, *, stride, padding,
     plan = tiling.plan_tiles(
         "input_grad", spec, x_shape=(dy.shape[0], nh, nw, w.shape[2]),
         dy_shape=dy.shape, itemsize=dy.dtype.itemsize,
-        interpret=_interpret())
+        interpret=_interpret(), epilogue=epilogue)
     return tconv_fused_pallas(dy, w, stride=tuple(stride),
                               padding=tuple(padding), n_out=(nh, nw),
                               dilation=tuple(dilation),
+                              bias=bias, epilogue=epilogue,
                               cin_tile=plan.cin_tile,
                               cout_tile=plan.cout_tile,
                               tap_unroll=plan.tap_unroll,
@@ -105,12 +109,15 @@ def dconv_filter_grad(x: jax.Array, dy: jax.Array, *, stride, padding,
 
 
 def conv_backward(x: jax.Array, dy: jax.Array, w: jax.Array, *, stride,
-                  padding, n_out, dilation=(1, 1)):
+                  padding, n_out, dilation=(1, 1), y=None, epilogue=None):
     """Fused dual-gradient conv backward: (dx, dW) from ONE Pallas
     launch sharing a single dy fetch (kernels/dconv_backward.py).
 
     x (B,Nh,Nw,Cin), dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout)
     -> (dx (B,Nh,Nw,Cin), dW (Kh,Kw,Cin,Cout)).
+    With `epilogue` this is the VJP of the epilogue-fused forward (`y` is
+    its output residual): the act'(y) mask is applied in-VMEM and the
+    return gains the in-kernel bias gradient, (dx, dW, db|None).
     """
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=(w.shape[0], w.shape[1]),
@@ -119,10 +126,11 @@ def conv_backward(x: jax.Array, dy: jax.Array, w: jax.Array, *, stride,
     plan = tiling.plan_tiles("backward", spec, x_shape=x.shape,
                              dy_shape=dy.shape,
                              itemsize=dy.dtype.itemsize,
-                             interpret=_interpret())
+                             interpret=_interpret(), epilogue=epilogue)
     return conv_backward_pallas(x, dy, w, stride=spec.stride,
                                 padding=spec.padding, n_out=(nh, nw),
                                 dilation=spec.dilation,
+                                y=y, epilogue=epilogue,
                                 cin_tile=plan.cin_tile,
                                 cout_tile=plan.cout_tile,
                                 tap_unroll=plan.tap_unroll,
@@ -131,13 +139,15 @@ def conv_backward(x: jax.Array, dy: jax.Array, w: jax.Array, *, stride,
 
 
 def tconv_backward(g: jax.Array, dy: jax.Array, w: jax.Array, *, stride,
-                   padding, dilation=(1, 1)):
+                   padding, dilation=(1, 1), z=None, epilogue=None):
     """Fused transposed-conv backward: (ddy, dW) from ONE Pallas launch
     sharing a single cotangent fetch (every tap gather feeds both the
     conv matmul and the filter-grad matmul).
 
     g (B,Nh,Nw,Cin) cotangent, dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout)
     -> (ddy (B,Oh,Ow,Cout), dW (Kh,Kw,Cin,Cout)).
+    With `epilogue` this is the VJP of the epilogue-fused transposed conv
+    (`z` is its output residual) and returns (ddy, dW, db|None).
     """
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=(w.shape[0], w.shape[1]),
@@ -145,10 +155,11 @@ def tconv_backward(g: jax.Array, dy: jax.Array, w: jax.Array, *, stride,
     plan = tiling.plan_tiles("ct_backward", spec, x_shape=g.shape,
                              dy_shape=dy.shape,
                              itemsize=g.dtype.itemsize,
-                             interpret=_interpret())
+                             interpret=_interpret(), epilogue=epilogue)
     return tconv_backward_pallas(g, dy, w, stride=spec.stride,
                                  padding=spec.padding,
                                  dilation=spec.dilation,
+                                 z=z, epilogue=epilogue,
                                  cin_tile=plan.cin_tile,
                                  cout_tile=plan.cout_tile,
                                  tap_unroll=plan.tap_unroll,
@@ -156,11 +167,13 @@ def tconv_backward(g: jax.Array, dy: jax.Array, w: jax.Array, *, stride,
 
 
 def dconv_forward(x: jax.Array, w: jax.Array, *, stride, padding,
-                  dilation) -> jax.Array:
+                  dilation, bias=None, epilogue=None) -> jax.Array:
     """Fused zero-free dilated (atrous) forward conv: one Pallas launch
     with the dilation taps on the grid.
 
     x (B,Nh,Nw,Cin), w (Kh,Kw,Cin,Cout) -> y (B,Oh,Ow,Cout).
+    `epilogue` / `bias` fuse act(scale * conv + bias) onto the resident
+    output block before its HBM store.
     """
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=(w.shape[0], w.shape[1]),
@@ -176,10 +189,11 @@ def dconv_forward(x: jax.Array, w: jax.Array, *, stride, padding,
     plan = tiling.plan_tiles("forward", spec, x_shape=x.shape,
                              dy_shape=(x.shape[0], oh, ow, w.shape[3]),
                              itemsize=x.dtype.itemsize,
-                             interpret=_interpret())
+                             interpret=_interpret(), epilogue=epilogue)
     return dconv_forward_pallas(x, w, stride=tuple(stride),
                                 padding=tuple(padding),
                                 dilation=tuple(dilation),
+                                bias=bias, epilogue=epilogue,
                                 cin_tile=plan.cin_tile,
                                 cout_tile=plan.cout_tile,
                                 tap_unroll=plan.tap_unroll,

@@ -100,7 +100,8 @@ def pack_phase_filters(w: jax.Array, stride, dilation=(1, 1)) -> jax.Array:
 
 
 def assemble_phase_major(out: jax.Array, spec: ConvSpec, *, n_out,
-                         full_size) -> jax.Array:
+                         full_size, fill: jax.Array | None = None
+                         ) -> jax.Array:
     """Phase-major kernel output (B, T, ho, wo, Cin) -> dx (B, Nh, Nw,
     Cin): place each phase plane at its stride residue with a static
     gather (identity at D == 1 with S <= K; residues outside the image
@@ -109,7 +110,13 @@ def assemble_phase_major(out: jax.Array, spec: ConvSpec, *, n_out,
     of phase row m), then crop padding / zero-pad non-exact-fit tails.
     Shared by `tconv_fused_pallas` and the fused dual-gradient backward
     (kernels/dconv_backward.py) so the residue-interleave logic cannot
-    drift between them."""
+    drift between them.
+
+    `fill` ((Cin,) vector): value taken by positions NO tap reaches
+    (structural-zero residues, non-exact-fit tails).  With a fused
+    epilogue those positions are epilogue(0) = act(bias), not 0 -- the
+    kernel only ever sees real phase planes, so the assembly supplies it.
+    None keeps the plain zero-fill."""
     B, _, ho, wo, cin = out.shape
     sh, sw = spec.stride
     ph, pw = spec.padding
@@ -125,38 +132,81 @@ def assemble_phase_major(out: jax.Array, spec: ConvSpec, *, n_out,
         idx_w[spec.tap_phase_residue(b, 1)] = b
     if (tph, tpw) != (sh, sw) or idx_h != list(range(sh)) \
             or idx_w != list(range(sw)):
-        out = jnp.pad(out, ((0, 0), (0, 1), (0, 1)) + ((0, 0),) * 3)
+        if fill is None:
+            out = jnp.pad(out, ((0, 0), (0, 1), (0, 1)) + ((0, 0),) * 3)
+        else:
+            fv = fill.astype(out.dtype)
+            out = jnp.concatenate(
+                [out, jnp.broadcast_to(fv, (B, 1, tpw, ho, wo, cin))],
+                axis=1)
+            out = jnp.concatenate(
+                [out, jnp.broadcast_to(fv, (B, tph + 1, 1, ho, wo, cin))],
+                axis=2)
         out = jnp.take(out, jnp.asarray(idx_h), axis=1)
         out = jnp.take(out, jnp.asarray(idx_w), axis=2)
     dx_full = out.transpose(0, 3, 1, 4, 2, 5).reshape(
         B, ho * sh, wo * sw, cin)[:, :fh, :fw, :]
-    # Non-exact-fit inputs (forward ignored tail rows/cols): zero-pad tail.
+    # Non-exact-fit inputs (forward ignored tail rows/cols): pad tail with
+    # the fill value (zero on the plain path).
     eh, ew = max(0, ph + nh - fh), max(0, pw + nw - fw)
     if eh or ew:
-        dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
+        if fill is None:
+            dx_full = jnp.pad(dx_full, ((0, 0), (0, eh), (0, ew), (0, 0)))
+        else:
+            fv = fill.astype(dx_full.dtype)
+            h = dx_full.shape[1]
+            if eh:
+                dx_full = jnp.concatenate(
+                    [dx_full, jnp.broadcast_to(
+                        fv, (B, eh, dx_full.shape[2], cin))], axis=1)
+            if ew:
+                dx_full = jnp.concatenate(
+                    [dx_full, jnp.broadcast_to(
+                        fv, (B, h + eh, ew, cin))], axis=2)
     return dx_full[:, ph:ph + nh, pw:pw + nw, :]
 
 
-def _fused_tap_kernel(dy_ref, w_ref, out_ref, *, tpw: int, kp: int, kq: int,
+def _fused_tap_kernel(dy_ref, w_ref, *refs, tpw: int, kp: int, kq: int,
+                      kh: int, kwf: int, per_h: int, per_w: int,
                       sh: int, sw: int, dh: int, dw: int, step_h: int,
                       step_w: int, pad_h: int, pad_w: int, ho: int, wo: int,
-                      pu: int, n_t: int, u: int, n_k: int, seq1: bool):
+                      pu: int, n_t: int, u: int, n_k: int, seq1: bool,
+                      ep=None):
     """`pu` phases x `u` taps per sequential grid step: `dynamic_slice`
     each tap's window out of the VMEM-resident padded dy block, one MXU
     matmul per tap with its (Cout_t, Cin_t) weights, accumulate each
     phase's fp32 tile across the (Cout-tile, tap-step) axes.
-    Zero-padded taps of ragged phases multiply by zero -- the step body
-    is uniform across phases.  When a single (phase, tap) grid step
-    remains, every window offset is a python int and the gathers lower
-    to STATIC slices."""
+    When a single (phase, tap) grid step remains, every window offset is
+    a python int and the gathers lower to STATIC slices -- and the
+    zero-padded slots of ragged phases (slot tap index kx >= K) are
+    SKIPPED outright via the shared (phase, slot) -> filter-tap validity
+    test, the same static skip the fused backward kernel applies
+    (dconv_backward.py); on partially unrolled grids the slot index is
+    traced, so padded slots fall back to multiplying by zero and the step
+    body stays uniform across phases.
+
+    refs = ([bias_ref,] out_ref); `ep` fuses act(scale * . + bias) onto
+    each finished phase plane before its HBM store."""
+    bias_ref = refs[0] if len(refs) == 2 else None
+    out_ref = refs[-1]
     t0 = pl.program_id(1) * pu if n_t > 1 else 0
     co = pl.program_id(3)
     k0 = pl.program_id(4) * u if n_k > 1 else 0
     dyv = dy_ref[0]
+    traced = n_t > 1 or n_k > 1
     # seq1: single sequential (Cout-tile, tap) step -> every visit to an
     # out block is its first, the predication compiles away.
     first = None if seq1 else (
         (co == 0) if n_k == 1 else ((co == 0) & (pl.program_id(4) == 0)))
+    last = None
+    if ep is not None and not seq1:
+        last = (co == pl.num_programs(3) - 1)
+        if n_k > 1:
+            last &= pl.program_id(4) == n_k - 1
+
+    def _tail(vals):
+        return ep.apply(vals, None if bias_ref is None else bias_ref[0])
+
     for p in range(pu):
         t = t0 + p
         a, b = t // tpw, t % tpw
@@ -164,6 +214,14 @@ def _fused_tap_kernel(dy_ref, w_ref, out_ref, *, tpw: int, kp: int, kq: int,
         for j in range(u):
             k = k0 + j
             uf, vf = k // kq, k % kq
+            if not traced:
+                # Static slot: skip padding slots of ragged phases -- the
+                # slot's filter tap falls outside the K x K extent, its
+                # packed weights are structurally zero.
+                kx = a + (kp - 1 - uf) * per_h
+                ky = b + (kq - 1 - vf) * per_w
+                if kx >= kh or ky >= kwf:
+                    continue
             # Flipped-slot tap index u' = KP-1-uf (see
             # pack_phase_filters): window offset base(a) + u'*step,
             # shifted into the padded frame.
@@ -181,7 +239,7 @@ def _fused_tap_kernel(dy_ref, w_ref, out_ref, *, tpw: int, kp: int, kq: int,
             acc = prod if acc is None else acc + prod
         acc = acc.reshape(ho, wo, out_ref.shape[-1])
         if first is None:
-            out_ref[0, p] = acc
+            out_ref[0, p] = _tail(acc) if ep is not None else acc
         else:
             @pl.when(first)
             def _init(p=p, acc=acc):
@@ -191,13 +249,21 @@ def _fused_tap_kernel(dy_ref, w_ref, out_ref, *, tpw: int, kp: int, kq: int,
             def _acc(p=p, acc=acc):
                 out_ref[0, p] += acc
 
+            if ep is not None:
+                @pl.when(last)
+                def _epilogue(p=p):
+                    out_ref[0, p] = _tail(out_ref[0, p])
+
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "n_out",
                                              "dilation", "cin_tile",
                                              "cout_tile", "tap_unroll",
-                                             "phase_unroll", "interpret"))
+                                             "phase_unroll", "interpret",
+                                             "epilogue"))
 def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
                        n_out=None, dilation=(1, 1),
+                       bias: jax.Array | None = None,
+                       epilogue=None,
                        cin_tile: int | None = None,
                        cout_tile: int | None = None,
                        tap_unroll: int | None = None,
@@ -211,6 +277,11 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
     Returns (B, Nh, Nw, Cin) where (Nh, Nw) = n_out (default exact fit).
     Channel tiles default to the geometry-aware planner in
     `kernels/tiling.py`; pass them explicitly to pin a tiling.
+
+    `epilogue` (static `Epilogue`) fuses act(scale * . + bias) onto each
+    finished phase plane in VMEM; `bias` is the (Cin,) vector (the tconv
+    OUTPUT channels) when the epilogue carries one.  Positions no tap
+    reaches take the value epilogue(0) via the assembly fill.
     """
     sh, sw = _pair(stride)
     ph, pw = _pair(padding)
@@ -241,12 +312,16 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
                           (0, 0)))
     hp, wp = dy_pad.shape[1], dy_pad.shape[2]
 
+    if epilogue is not None and epilogue.is_identity:
+        epilogue = None
+    if epilogue is not None and epilogue.bias and bias is None:
+        raise ValueError("epilogue.bias=True but no bias array was given")
     if None in (cin_tile, cout_tile, tap_unroll, phase_unroll):
         plan = tiling.plan_tiles("input_grad", spec,
                                  x_shape=(B, Nh, Nw, Cin),
                                  dy_shape=dy.shape,
                                  itemsize=dy.dtype.itemsize,
-                                 interpret=interpret)
+                                 interpret=interpret, epilogue=epilogue)
         cin_tile = plan.cin_tile if cin_tile is None else cin_tile
         cout_tile = plan.cout_tile if cout_tile is None else cout_tile
         tap_unroll = plan.tap_unroll if tap_unroll is None else tap_unroll
@@ -265,45 +340,66 @@ def tconv_fused_pallas(dy: jax.Array, w: jax.Array, *, stride, padding=(0, 0),
     u = tiling.largest_divisor_leq(TK, tap_unroll)
     pu = tiling.largest_divisor_leq(T, phase_unroll)
     n_k, n_t = TK // u, T // pu
+    per_h, per_w = spec.tap_phase_period
     kern = functools.partial(_fused_tap_kernel, tpw=TPw, kp=KP, kq=KQ,
+                             kh=Kh, kwf=Kw, per_h=per_h, per_w=per_w,
                              sh=sh, sw=sw, dh=dh, dw=dw, step_h=step_h,
                              step_w=step_w, pad_h=pad_h, pad_w=pad_w,
                              ho=ho, wo=wo, pu=pu, n_t=n_t, u=u, n_k=n_k,
-                             seq1=(n_co == 1 and n_k == 1))
+                             seq1=(n_co == 1 and n_k == 1), ep=epilogue)
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, co_t),
+                     lambda b, t, ci, co, k: (b, 0, 0, co)),
+        pl.BlockSpec((pu, u, co_t, ci_t),
+                     lambda b, t, ci, co, k: (t, k, co, ci)),
+    ]
+    ins = [dy_pad, w_flat]
+    if epilogue is not None and epilogue.bias:
+        bp = bias.astype(jnp.float32).reshape(1, Cin)
+        if Cin % ci_t:
+            bp = jnp.pad(bp, ((0, 0), (0, n_ci * ci_t - Cin)))
+        in_specs.append(pl.BlockSpec((1, ci_t),
+                                     lambda b, t, ci, co, k: (0, ci)))
+        ins.append(bp)
     out = pl.pallas_call(
         kern,
         grid=(B, n_t, n_ci, n_co, n_k),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, co_t),
-                         lambda b, t, ci, co, k: (b, 0, 0, co)),
-            pl.BlockSpec((pu, u, co_t, ci_t),
-                         lambda b, t, ci, co, k: (t, k, co, ci)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, pu, ho, wo, ci_t),
                                lambda b, t, ci, co, k: (b, t, 0, 0, ci)),
         out_shape=jax.ShapeDtypeStruct((B, T, ho, wo, n_ci * ci_t),
                                        jnp.float32),
         interpret=interpret,
-    )(dy_pad, w_flat)
+    )(*ins)
 
     if Cin % ci_t:   # slice only when channel padding occurred
         out = out[..., :Cin]
+    # Structural-zero residues / tail positions never reach the kernel:
+    # under an epilogue their value is epilogue(0) = act(bias), nonzero
+    # only when a bias rides along (every supported activation fixes 0).
+    fill = None
+    if epilogue is not None and epilogue.bias:
+        fill = epilogue.apply(jnp.zeros((Cin,), jnp.float32), bias)
     return assemble_phase_major(out, spec, n_out=(Nh, Nw),
-                                full_size=(Fh, Fw)).astype(dy.dtype)
+                                full_size=(Fh, Fw),
+                                fill=fill).astype(dy.dtype)
 
 
-def _autotune_runner(spec: ConvSpec, x_shape, dy_shape):
+def _autotune_runner(spec: ConvSpec, x_shape, dy_shape, epilogue=None):
     """Autotune hook: execute the real kernel at one candidate plan."""
     dy = jnp.zeros(dy_shape, jnp.float32)
     w = jnp.zeros(spec.filter_shape + (x_shape[-1], dy_shape[-1]),
                   jnp.float32)
+    bias = (jnp.zeros((x_shape[-1],), jnp.float32)
+            if epilogue is not None and epilogue.bias else None)
     n_out = (x_shape[1], x_shape[2])
     interp = jax.default_backend() != "tpu"
 
     def run(plan: tiling.TilePlan):
         return jax.block_until_ready(tconv_fused_pallas(
             dy, w, stride=spec.stride, padding=spec.padding, n_out=n_out,
-            dilation=spec.dilation, cin_tile=plan.cin_tile,
+            dilation=spec.dilation, bias=bias, epilogue=epilogue,
+            cin_tile=plan.cin_tile,
             cout_tile=plan.cout_tile, tap_unroll=plan.tap_unroll,
             phase_unroll=plan.phase_unroll, interpret=interp))
 

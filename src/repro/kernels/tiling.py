@@ -50,13 +50,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 import json
 import math
 import os
 import pathlib
 from typing import Callable, Dict, Optional
 
-from repro.core.spec import ConvSpec
+from repro.core.spec import ConvSpec, Epilogue
 
 # Fraction of a TPU core's ~16 MiB VMEM the planner budgets for one
 # kernel's resident blocks (the rest covers double-buffering slack,
@@ -191,7 +192,7 @@ def _padded_input_extent(g: _Geom) -> tuple[int, int]:
             (g.ow - 1) * sw + dw * (kw - 1) + 1)
 
 
-def _filter_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+def _filter_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1, ep=None):
     """(ws, traffic, steps, step_blk) for the rebuilt filter-grad kernel:
     grid (Cin_t, Cout_t, B, spatial, tap_steps), out block
     (T, ci_t, co_t) stationary across the sequential (B, spatial, tap)
@@ -225,10 +226,12 @@ def _filter_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
     return ws, traffic, steps, x_blk + dy_blk
 
 
-def _forward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+def _forward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1, ep=None):
     """dconv_forward: grid (B, Cout_t, Cin_t, T/u); x block holds the
     full padded frame at a Cin tile, the w block `u` taps' weights, out
-    accumulates over the sequential (Cin_t, tap-step) axes."""
+    accumulates over the sequential (Cin_t, tap-step) axes.  An epilogue
+    with a bias adds the (1, co_t) bias block to the resident set (the
+    activation itself touches only the already-resident out block)."""
     kh, kw = g.spec.filter_shape
     t = kh * kw
     hp, wp = _padded_input_extent(g)
@@ -240,6 +243,9 @@ def _forward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
     traffic = (n_co * (g.b * n_ci * x_blk)
                + g.b * t * n_ci * n_co * ci_t * co_t * g.itemsize
                + g.b * g.oh * g.ow * n_co * co_t * 4)
+    if ep is not None and ep.bias:
+        ws += 2 * co_t * 4
+        traffic += n_co * co_t * 4
     steps = g.b * n_co * n_ci * _cdiv(t, u)
     return ws, traffic, steps, x_blk + w_blk
 
@@ -262,11 +268,13 @@ def _phase_frame(spec: ConvSpec, oh: int, ow: int):
     return t, tk, ho, wo, pad_h + ho, pad_w + wo
 
 
-def _input_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+def _input_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1, ep=None):
     """tconv_phase: grid (B, T/pu, Cin_t, Cout_t, TK/u); dy block holds
     the full padded frame at a Cout tile, the w block `pu * u` packed
     (phase, tap)s, the out block `pu` phase planes; out accumulates over
-    the sequential (Cout_t, tap-step) axes."""
+    the sequential (Cout_t, tap-step) axes.  An epilogue with a bias adds
+    the (1, ci_t) bias-over-Cin block (the transposed conv's output
+    channels are the forward input channels)."""
     t, tk, ho, wo, hp, wp = _phase_frame(g.spec, g.oh, g.ow)
     n_ci, n_co = _cdiv(g.cin, ci_t), _cdiv(g.cout, co_t)
     dy_blk = hp * wp * co_t * g.itemsize
@@ -276,18 +284,24 @@ def _input_grad_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
     traffic = (g.b * _cdiv(t, pu) * n_ci * n_co * dy_blk
                + g.b * t * tk * n_ci * n_co * co_t * ci_t * g.itemsize
                + g.b * t * ho * wo * n_ci * ci_t * 4)
+    if ep is not None and ep.bias:
+        ws += 2 * ci_t * 4
+        traffic += n_ci * ci_t * 4
     steps = g.b * _cdiv(t, pu) * n_ci * n_co * _cdiv(tk, u)
     return ws, traffic, steps, dy_blk + w_blk
 
 
-def _backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+def _backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1, ep=None):
     """Fused dual-gradient backward (kernels/dconv_backward.py): grid
     (Cin_t, B, T/pu, Cout_t, TK/u); the dy block holds the full padded
     frame at a Cout tile (the SHARED fetch), the x block the full padded
     input at a Cin tile, and the working set carries BOTH accumulators:
     `pu` phase planes of dx plus the stationary (T_w, ci_t, Cout_pad)
     dW block (full padded Cout width, so the co axis never interrupts
-    its visit streak)."""
+    its visit streak).  An activation epilogue doubles the dy-frame
+    residency (the saved output y streams in the SAME padded block shape
+    to mask the cotangent in VMEM); a bias epilogue adds the stationary
+    (1, Cout_pad) db accumulator as a third output."""
     kh, kw = g.spec.filter_shape
     t, tk, ho, wo, hp, wp = _phase_frame(g.spec, g.oh, g.ow)
     xh, xw = _padded_input_extent(g)
@@ -307,17 +321,27 @@ def _backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
                + t * tk * n_ci * n_co * co_t * ci_t * g.itemsize
                + g.b * t * ho * wo * n_ci * ci_t * 4
                + n_ci * kh * kw * ci_t * n_co * co_t * 4)
+    if ep is not None:
+        if ep.needs_y:                 # y block mirrors the dy block
+            ws += 2 * dy_blk
+            traffic += dy_streams * dy_blk
+        if ep.bias:                    # db third output, constant map
+            ws += n_co * co_t * 4
+            traffic += n_co * co_t * 4
     steps = n_ci * g.b * _cdiv(t, pu) * n_co * _cdiv(tk, u)
     return ws, traffic, steps, dy_blk + x_blk + w_blk
 
 
-def _ct_backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
+def _ct_backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1, ep=None):
     """Fused transposed-conv backward: grid (B, Cin_t, Cout_t, T/u); the
     g block holds the full padded frame at a Cin tile (the SHARED
     fetch), ddy spans full padded Cout per batch row and dW spans full
     padded channels (constant index map -- one streak over the whole
     grid), so both accumulators are part of every candidate's resident
-    working set."""
+    working set.  An activation epilogue doubles the g-frame residency
+    (the saved transposed-conv output z streams in the same padded block
+    shape to mask the cotangent in VMEM); a bias epilogue adds the
+    stationary (1, Cin_pad) db accumulator as a third output."""
     kh, kw = g.spec.filter_shape
     t = kh * kw
     hp, wp = _padded_input_extent(g)
@@ -334,6 +358,13 @@ def _ct_backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1):
                + g.b * t * n_ci * n_co * ci_t * co_t * g.itemsize
                + g.b * g.oh * g.ow * n_co * co_t * 4
                + t * n_ci * ci_t * n_co * co_t * 4)
+    if ep is not None:
+        if ep.needs_y:                 # z block mirrors the g block
+            ws += 2 * g_blk
+            traffic += g.b * n_ci * g_blk
+        if ep.bias:                    # db third output over Cin
+            ws += n_ci * ci_t * 4
+            traffic += n_ci * ci_t * 4
     steps = g.b * n_ci * n_co * _cdiv(t, u)
     return ws, traffic, steps, g_blk + w_blk + dy_blk
 
@@ -384,9 +415,11 @@ def _candidates(op: str, g: _Geom):
                         yield ci_t, co_t, sp_t, u, pu
 
 
-def _score(op: str, g: _Geom, ci_t, co_t, sp_t, u, pu, budget, interpret):
+def _score(op: str, g: _Geom, ci_t, co_t, sp_t, u, pu, budget, interpret,
+           ep=None):
     """Modeled cost of one candidate, or None if it violates a constraint."""
-    ws, traffic, steps, step_blk = _MODELS[op](g, ci_t, co_t, sp_t, u, pu)
+    ws, traffic, steps, step_blk = _MODELS[op](g, ci_t, co_t, sp_t, u, pu,
+                                               ep=ep)
     if ws > budget:
         return None
     if not interpret and pu * u > MAX_TAP_UNROLL_COMPILED:
@@ -400,12 +433,13 @@ def _score(op: str, g: _Geom, ci_t, co_t, sp_t, u, pu, budget, interpret):
 
 
 def _analytical_plan(op: str, spec: ConvSpec, x_shape, dy_shape,
-                     itemsize: int, budget: int,
-                     interpret: bool) -> TilePlan:
+                     itemsize: int, budget: int, interpret: bool,
+                     ep: Optional[Epilogue] = None) -> TilePlan:
     g = _geom(op, spec, x_shape, dy_shape, itemsize)
     best, best_cost = None, None
     for ci_t, co_t, sp_t, u, pu in _candidates(op, g):
-        cost = _score(op, g, ci_t, co_t, sp_t, u, pu, budget, interpret)
+        cost = _score(op, g, ci_t, co_t, sp_t, u, pu, budget, interpret,
+                      ep=ep)
         if cost is None:
             continue
         # Deterministic tie-break: prefer larger tiles, then larger unroll
@@ -465,11 +499,19 @@ def cache_path() -> pathlib.Path:
 
 
 def _cache_key(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
-               budget, interpret) -> str:
+               budget, interpret, ep: Optional[Epilogue] = None) -> str:
     """Execution mode and budget are part of the key: an interpret-tuned
     winner (which may unroll far past MAX_TAP_UNROLL_COMPILED) must never
     be served to a compiled TPU run, and a tightened VMEM budget must
-    re-tune rather than replay a plan scored against the old budget."""
+    re-tune rather than replay a plan scored against the old budget.
+
+    The epilogue descriptor is part of the key too (`|ep:<tag>`): an
+    epilogue changes the kernel's block set (bias/y/z inputs, the db
+    output) and hence which candidates fit and win, so an epilogue-free
+    winner must never be replayed for an epilogue-bearing launch.  Rows
+    written before the epilogue slot existed carry no suffix; the disk
+    lookup falls back to those legacy keys only for the `ep:none` case,
+    whose candidate set they were actually swept against."""
     sh, sw = spec.stride
     ph, pw = spec.padding
     kh, kw = spec.filter_shape
@@ -477,9 +519,17 @@ def _cache_key(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
     b, nh, nw, cin = x_shape
     _, oh, ow, cout = dy_shape
     mode = "interp" if interpret else "compiled"
+    tag = "none" if ep is None else ep.tag
     return (f"{op}|b{b}|n{nh}x{nw}|o{oh}x{ow}|k{kh}x{kw}|s{sh}x{sw}"
             f"|p{ph}x{pw}|d{dh}x{dw}|ci{cin}|co{cout}|w{itemsize}"
-            f"|vm{budget}|{mode}")
+            f"|vm{budget}|{mode}|ep:{tag}")
+
+
+def _legacy_cache_key(key: str) -> Optional[str]:
+    """The pre-epilogue form of `key` (no `|ep:` suffix), or None when the
+    epilogue is non-trivial and legacy rows must not be consulted."""
+    base, _, tag = key.rpartition("|ep:")
+    return base if tag == "none" else None
 
 
 _MEM_CACHE: Dict[str, TilePlan] = {}
@@ -500,23 +550,54 @@ def _store_disk_cache(path: pathlib.Path, doc: dict) -> None:
         pass   # cache is an optimization; never fail the conv over it
 
 
+def _plan_from_cache_rec(op: str, rec: dict) -> TilePlan:
+    return TilePlan(cin_tile=rec["cin_tile"], cout_tile=rec["cout_tile"],
+                    spatial_tile=rec["spatial_tile"],
+                    tap_unroll=rec.get("tap_unroll", 1),
+                    phase_unroll=rec.get("phase_unroll", 1),
+                    grid_order=tuple(rec.get("grid_order",
+                                             _GRID_ORDERS[op])),
+                    source="cache")
+
+
+def _call_runner_factory(factory: Callable, spec: ConvSpec, x_shape,
+                         dy_shape, ep: Optional[Epilogue]):
+    """Invoke a runner factory, passing the epilogue only when the factory
+    accepts it -- pre-epilogue factories (3-positional signature, still
+    used by tests and external registrations) keep working, and an
+    epilogue-bearing sweep through such a factory would time the wrong
+    kernel, so it is rejected instead of silently mistimed."""
+    try:
+        accepts_ep = "epilogue" in inspect.signature(factory).parameters
+    except (TypeError, ValueError):
+        accepts_ep = False
+    if accepts_ep:
+        return factory(spec, x_shape, dy_shape, epilogue=ep)
+    if ep is not None:
+        raise TypeError(
+            f"autotune runner factory {factory!r} does not accept an "
+            f"'epilogue' kwarg but the launch carries epilogue {ep.tag!r}")
+    return factory(spec, x_shape, dy_shape)
+
+
 def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
                    budget, interpret, path: pathlib.Path,
-                   runner_factory: Optional[Callable]) -> TilePlan:
+                   runner_factory: Optional[Callable],
+                   ep: Optional[Epilogue] = None) -> TilePlan:
     key = _cache_key(op, spec, x_shape, dy_shape, itemsize, budget,
-                     interpret)
+                     interpret, ep)
     if key in _MEM_CACHE:
         return _MEM_CACHE[key]
     disk = _load_disk_cache(path)
     if key in disk:
-        rec = disk[key]
-        plan = TilePlan(cin_tile=rec["cin_tile"], cout_tile=rec["cout_tile"],
-                        spatial_tile=rec["spatial_tile"],
-                        tap_unroll=rec.get("tap_unroll", 1),
-                        phase_unroll=rec.get("phase_unroll", 1),
-                        grid_order=tuple(rec.get("grid_order",
-                                                 _GRID_ORDERS[op])),
-                        source="cache")
+        plan = _plan_from_cache_rec(op, disk[key])
+        _MEM_CACHE[key] = plan
+        return plan
+    legacy = _legacy_cache_key(key)
+    if legacy is not None and legacy in disk:
+        # Row written before the epilogue slot existed; valid only for
+        # the epilogue-free candidate set (`_legacy_cache_key` gates).
+        plan = _plan_from_cache_rec(op, disk[legacy])
         _MEM_CACHE[key] = plan
         return plan
     factory = runner_factory or _RUNNERS.get(op)
@@ -525,13 +606,13 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
         # (a distinct mode string so a later call with the runner's
         # module imported still sweeps instead of replaying this plan).
         return _planned(op, spec, x_shape, dy_shape, itemsize, budget,
-                        "autotune:analytical-fallback", interpret)
+                        "autotune:analytical-fallback", interpret, ep)
     g = _geom(op, spec, x_shape, dy_shape, itemsize)
-    run = factory(spec, x_shape, dy_shape)
+    run = _call_runner_factory(factory, spec, x_shape, dy_shape, ep)
     best_plan, best_us = None, math.inf
     for ci_t, co_t, sp_t, u, pu in _candidates(op, g):
         if _score(op, g, ci_t, co_t, sp_t, u, pu, budget,
-                  interpret) is None:
+                  interpret, ep=ep) is None:
             continue
         plan = TilePlan(cin_tile=ci_t, cout_tile=co_t, spatial_tile=sp_t,
                         tap_unroll=u, phase_unroll=pu,
@@ -544,7 +625,7 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
             best_plan, best_us = plan, us
     if best_plan is None:   # every candidate failed to lower/run
         return _planned(op, spec, x_shape, dy_shape, itemsize, budget,
-                        "autotune:analytical-fallback", interpret)
+                        "autotune:analytical-fallback", interpret, ep)
     disk[key] = dict(best_plan.as_dict(), us=round(best_us, 1))
     _store_disk_cache(path, disk)
     _MEM_CACHE[key] = best_plan
@@ -557,7 +638,8 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
 
 @functools.lru_cache(maxsize=4096)
 def _planned(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize: int,
-             budget: int, mode: str, interpret: bool) -> TilePlan:
+             budget: int, mode: str, interpret: bool,
+             ep: Optional[Epilogue] = None) -> TilePlan:
     """Memoized analytical resolution.  `kernels/ops.py` re-resolves the
     plan on EVERY conv call (so env flips take effect on the next call,
     not the first trace), which previously re-ran the Python planner each
@@ -565,9 +647,10 @@ def _planned(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize: int,
     env-derived `budget` and `mode` are part of the key -- resolved by
     `plan_tiles` BEFORE the lookup -- so flipping `ECOFLOW_VMEM_BUDGET`
     or `ECOFLOW_TILING` still re-plans instead of replaying a winner
-    scored against stale constraints."""
+    scored against stale constraints.  `ep` (a frozen `Epilogue`, or
+    None) keys too: the epilogue's extra blocks shift the working set."""
     return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
-                            budget, interpret)
+                            budget, interpret, ep)
 
 
 def plan_cache_info():
@@ -580,7 +663,8 @@ def plan_tiles(op: str, spec: ConvSpec, *, x_shape, dy_shape,
                itemsize: int = 4, vmem_budget: Optional[int] = None,
                interpret: bool = False, mode: Optional[str] = None,
                runner_factory: Optional[Callable] = None,
-               tile_cache_path=None) -> TilePlan:
+               tile_cache_path=None,
+               epilogue: Optional[Epilogue] = None) -> TilePlan:
     """Select (cin_tile, cout_tile, spatial_tile, tap_unroll, grid order)
     for one kernel launch.
 
@@ -594,10 +678,16 @@ def plan_tiles(op: str, spec: ConvSpec, *, x_shape, dy_shape,
                  the per-grid-step cost accordingly.
     mode      -- "analytical" (default) | "autotune"; defaults to the
                  ECOFLOW_TILING env var.
+    epilogue  -- the launch's fused `Epilogue` (or None): its bias/y/z
+                 blocks and db output enter the working-set model, and
+                 its tag enters the autotune cache key (DESIGN.md
+                 Sec. 2.8).
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
     x_shape, dy_shape = tuple(map(int, x_shape)), tuple(map(int, dy_shape))
+    if epilogue is not None and epilogue.is_identity:
+        epilogue = None
     if vmem_budget is None:
         vmem_budget = int(os.environ.get("ECOFLOW_VMEM_BUDGET",
                                          DEFAULT_VMEM_BUDGET))
@@ -607,6 +697,7 @@ def plan_tiles(op: str, spec: ConvSpec, *, x_shape, dy_shape,
         path = pathlib.Path(tile_cache_path) if tile_cache_path \
             else cache_path()
         return _autotune_plan(op, spec, x_shape, dy_shape, itemsize,
-                              vmem_budget, interpret, path, runner_factory)
+                              vmem_budget, interpret, path, runner_factory,
+                              epilogue)
     return _planned(op, spec, x_shape, dy_shape, itemsize, vmem_budget,
-                    mode, interpret)
+                    mode, interpret, epilogue)

@@ -14,6 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv import ecoflow_conv
+from repro.core.spec import Epilogue
+
+_RELU = Epilogue(activation="relu")
 
 
 def _conv_init(rng, k, cin, cout):
@@ -36,21 +39,30 @@ def simple_cnn_init(rng, *, in_ch=3, widths=(32, 64, 128), n_classes=10,
     return params
 
 
-def simple_cnn_apply(params, x, *, stride=2, backend=None):
+def simple_cnn_apply(params, x, *, stride=2, backend=None,
+                     fuse_epilogue=True):
     """x (B,H,W,Cin) -> logits (B,n_classes).
 
     `backend` selects the conv dispatch backend
-    (reference | xla_zero_free | pallas, see repro.core.spec)."""
+    (reference | xla_zero_free | pallas, see repro.core.spec).
+    `fuse_epilogue` requests each layer's relu declaratively through the
+    conv's epilogue slot (one fused launch per layer, forward AND
+    backward -- DESIGN.md Sec. 2.8); False keeps the separate
+    `jax.nn.relu` tail for A/B comparison."""
     for w in params["convs"]:
-        x = ecoflow_conv(x, w, stride, 1, backend)
-        x = jax.nn.relu(x)
+        if fuse_epilogue:
+            x = ecoflow_conv(x, w, stride, 1, backend, epilogue=_RELU)
+        else:
+            x = jax.nn.relu(ecoflow_conv(x, w, stride, 1, backend))
     x = x.mean(axis=(1, 2))
     return x @ params["head"]
 
 
-def cnn_loss(params, x, labels, *, stride=2, backend=None):
+def cnn_loss(params, x, labels, *, stride=2, backend=None,
+             fuse_epilogue=True):
     logits = simple_cnn_apply(params, x, stride=stride,
-                              backend=backend)
+                              backend=backend,
+                              fuse_epilogue=fuse_epilogue)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return (logz - gold).mean()

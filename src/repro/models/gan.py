@@ -13,6 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv import ecoflow_conv, ecoflow_conv_transpose
+from repro.core.spec import Epilogue
+
+_RELU = Epilogue(activation="relu")
+_TANH = Epilogue(activation="tanh")
+_LEAKY = Epilogue(activation="leaky_relu", slope=0.2)
 
 
 def _w(rng, k, cin, cout):
@@ -34,12 +39,23 @@ def generator_init(rng, *, z_dim=64, base=64, out_ch=3):
     }
 
 
-def generator_apply(params, z, *, backend=None):
+def generator_apply(params, z, *, backend=None, fuse_epilogue=True):
     """`backend` selects the conv dispatch backend (see repro.core.spec);
-    the zero-free transposed conv is the generator's *forward* pass."""
+    the zero-free transposed conv is the generator's *forward* pass.
+    `fuse_epilogue` requests each layer's relu/tanh tail through the
+    transposed conv's epilogue slot (DESIGN.md Sec. 2.8); False keeps
+    the separate activation ops for A/B comparison."""
     B = z.shape[0]
     x = (z @ params["proj"]).reshape(B, 4, 4, -1)
     x = jax.nn.relu(x)
+    if fuse_epilogue:
+        x = ecoflow_conv_transpose(x, params["t1"], 2, 1, n_out=(8, 8),
+                                   backend=backend, epilogue=_RELU)
+        x = ecoflow_conv_transpose(x, params["t2"], 2, 1, n_out=(16, 16),
+                                   backend=backend, epilogue=_RELU)
+        x = ecoflow_conv_transpose(x, params["t3"], 2, 1, n_out=(32, 32),
+                                   backend=backend, epilogue=_TANH)
+        return x
     x = jax.nn.relu(ecoflow_conv_transpose(x, params["t1"], 2, 1,
                                            n_out=(8, 8), backend=backend))
     x = jax.nn.relu(ecoflow_conv_transpose(x, params["t2"], 2, 1,
@@ -61,7 +77,15 @@ def discriminator_init(rng, *, in_ch=3, base=64):
     }
 
 
-def discriminator_apply(params, x, *, backend=None):
+def discriminator_apply(params, x, *, backend=None, fuse_epilogue=True):
+    if fuse_epilogue:   # leaky_relu(0.2) fused into each conv launch
+        x = ecoflow_conv(x, params["c1"], 2, 1, backend,
+                         epilogue=_LEAKY)                 # 32 -> 16
+        x = ecoflow_conv(x, params["c2"], 2, 1, backend,
+                         epilogue=_LEAKY)                 # 16 -> 8
+        x = ecoflow_conv(x, params["c3"], 2, 1, backend,
+                         epilogue=_LEAKY)                 # 8 -> 4
+        return x.reshape(x.shape[0], -1) @ params["head"]
     a = lambda t: jax.nn.leaky_relu(t, 0.2)
     x = a(ecoflow_conv(x, params["c1"], 2, 1, backend))   # 32 -> 16
     x = a(ecoflow_conv(x, params["c2"], 2, 1, backend))   # 16 -> 8
@@ -69,11 +93,15 @@ def discriminator_apply(params, x, *, backend=None):
     return x.reshape(x.shape[0], -1) @ params["head"]
 
 
-def gan_losses(g_params, d_params, z, real, *, backend=None):
+def gan_losses(g_params, d_params, z, real, *, backend=None,
+               fuse_epilogue=True):
     """Non-saturating GAN losses (g_loss, d_loss)."""
-    fake = generator_apply(g_params, z, backend=backend)
-    d_fake = discriminator_apply(d_params, fake, backend=backend)
-    d_real = discriminator_apply(d_params, real, backend=backend)
+    fake = generator_apply(g_params, z, backend=backend,
+                           fuse_epilogue=fuse_epilogue)
+    d_fake = discriminator_apply(d_params, fake, backend=backend,
+                                 fuse_epilogue=fuse_epilogue)
+    d_real = discriminator_apply(d_params, real, backend=backend,
+                                 fuse_epilogue=fuse_epilogue)
     sp = jax.nn.softplus
     d_loss = sp(-d_real).mean() + sp(d_fake).mean()
     g_loss = sp(-d_fake).mean()

@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv import ecoflow_conv, ecoflow_dilated_conv
+from repro.core.spec import Epilogue
+
+_RELU = Epilogue(activation="relu")
 
 
 def patchify_init(rng, *, patch=14, in_ch=3, d_model=1024):
@@ -63,23 +66,32 @@ def atrous_head_init(rng, *, in_ch=3, width=16, n_classes=4,
     return params
 
 
-def atrous_head_apply(params, images, *, rates=(1, 2, 4), backend=None):
+def atrous_head_apply(params, images, *, rates=(1, 2, 4), backend=None,
+                      fuse_epilogue=True):
     """images (B,H,W,C) -> per-pixel class logits (B,H,W,n_classes).
 
     Each 3x3 branch runs at stride 1 with padding == rate (same-padding
     for the D*(K-1)+1 = 2r+1 effective receptive field), so all branches
     stay at full resolution and concatenate channel-wise before the 1x1
-    fuse.  `backend` selects the conv dispatch backend."""
-    feats = [jax.nn.relu(ecoflow_dilated_conv(
-        images, params[f"rate{r}"], 1, r, r, backend)) for r in rates]
+    fuse.  `backend` selects the conv dispatch backend; `fuse_epilogue`
+    requests each branch's relu through the dilated conv's epilogue slot
+    (DESIGN.md Sec. 2.8)."""
+    if fuse_epilogue:
+        feats = [ecoflow_dilated_conv(images, params[f"rate{r}"], 1, r, r,
+                                      backend, epilogue=_RELU)
+                 for r in rates]
+    else:
+        feats = [jax.nn.relu(ecoflow_dilated_conv(
+            images, params[f"rate{r}"], 1, r, r, backend)) for r in rates]
     h = jnp.concatenate(feats, axis=-1)
     return ecoflow_conv(h, params["fuse"], 1, 0, backend)
 
 
 def atrous_seg_loss(params, images, labels, *, rates=(1, 2, 4),
-                    backend=None):
+                    backend=None, fuse_epilogue=True):
     """Mean per-pixel cross entropy of the atrous head."""
-    logits = atrous_head_apply(params, images, rates=rates, backend=backend)
+    logits = atrous_head_apply(params, images, rates=rates, backend=backend,
+                               fuse_epilogue=fuse_epilogue)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     return (logz - gold).mean()

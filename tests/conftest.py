@@ -46,6 +46,23 @@ def walk_eqns(jaxpr):
                 yield from walk_eqns(v)
 
 
+def walk_eqns_outside_pallas(jaxpr):
+    """Like `walk_eqns`, but does NOT descend into pallas_call kernel
+    bodies: the epilogue-fusion pins assert that bias/activation/mask
+    eqns exist ONLY inside the kernels, so the in-kernel eqns must not
+    leak into the 'outside' traversal."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", None)
+            if sub is not None:
+                yield from walk_eqns_outside_pallas(sub)
+            elif hasattr(v, "eqns"):
+                yield from walk_eqns_outside_pallas(v)
+
+
 def count_pallas_calls(fn, *args) -> int:
     import jax
     jaxpr = jax.make_jaxpr(fn)(*args)

@@ -301,12 +301,20 @@ def test_ct_backward_single_launch_both_outputs(rng):
 def test_grad_through_models_single_backward_launch(rng):
     """End to end through jax.grad of a two-conv model on the pallas
     backend: one fused backward launch PER LAYER (plus the dilation-1
-    forward convs, which are XLA) -- zero call-site changes."""
+    forward convs, which are XLA on the unfused path) -- zero call-site
+    changes.  With the declarative relu epilogue (the model default) the
+    forward also becomes one fused pallas launch per layer, so the whole
+    train step is exactly two launches per layer."""
     from repro.models import cnn
     params = cnn.simple_cnn_init(jax.random.PRNGKey(0), in_ch=3,
                                  widths=(4, 6), n_classes=4)
     x = jnp.asarray(rng.normal(size=(2, 8, 8, 3)), jnp.float32)
     y = jnp.asarray([0, 1])
-    loss = lambda p: cnn.cnn_loss(p, x, y, stride=2, backend="pallas")
+    loss = lambda p: cnn.cnn_loss(p, x, y, stride=2, backend="pallas",
+                                  fuse_epilogue=False)
     g = lambda p: jax.grad(loss)(p)
     assert count_pallas_calls(g, params) == 2      # one per conv layer
+    loss_ep = lambda p: cnn.cnn_loss(p, x, y, stride=2, backend="pallas")
+    g_ep = lambda p: jax.grad(loss_ep)(p)
+    # fwd + bwd fused launches per layer, relu tails in-kernel.
+    assert count_pallas_calls(g_ep, params) == 4

@@ -1,0 +1,311 @@
+"""Epilogue fusion: bias/activation tails folded into the fused conv
+launches, forward and backward (DESIGN.md Sec. 2.8).
+
+Two layers of guarantees:
+
+  * **Parity**: for every epilogue kind (bias-only, relu, leaky_relu with
+    a non-default slope, tanh, and a scaled variant), every backend
+    (reference | xla_zero_free | pallas) computes the identical forward
+    value AND identical (dx, dw, db) under `jax.grad` -- the fused
+    in-kernel epilogue is numerically the same function as the separate
+    bias-add / activation / mask / reduce composition it replaces.
+
+  * **Structure**: on the pallas backend the tail is *gone* from the
+    jaxpr -- each conv forward is ONE pallas_call with no trailing
+    bias/activation eqn, each conv backward is ONE pallas_call with no
+    activation-gradient mask eqn (the mask is applied to the VMEM-resident
+    cotangent block inside the kernel), and the bias gradient is a THIRD
+    output of the same launch, not a separate reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.conv import (ecoflow_conv, ecoflow_conv_transpose,
+                             ecoflow_dilated_conv)
+from repro.core.spec import Epilogue
+from repro.kernels import ops
+
+from conftest import (assert_allclose, count_pallas_calls, walk_eqns,
+                      walk_eqns_outside_pallas)
+
+BACKENDS = ["reference", "xla_zero_free", "pallas"]
+
+# Every epilogue kind the slot supports, including a non-default
+# leaky_relu slope and a scale rider.
+EPILOGUES = [
+    ("bias", Epilogue(bias=True)),
+    ("relu", Epilogue(activation="relu")),
+    ("bias_relu", Epilogue(activation="relu", bias=True)),
+    ("bias_leaky02", Epilogue(activation="leaky_relu", slope=0.2,
+                              bias=True)),
+    ("tanh", Epilogue(activation="tanh")),
+    ("scaled_bias_relu", Epilogue(activation="relu", bias=True,
+                                  scale=0.5)),
+]
+
+# Primitives an unfused tail would leave in the jaxpr: the activations
+# themselves (max / tanh) and their backward masks (select_n / gt).
+_TAIL_PRIMS = {"max", "tanh", "select_n", "gt", "lt"}
+
+
+def _manual_tail(raw, b, ep):
+    """The separate-ops composition the epilogue slot replaces."""
+    v = raw if ep.scale is None else raw * ep.scale
+    if ep.bias:
+        v = v + b
+    if ep.activation == "relu":
+        v = jnp.maximum(v, 0)
+    elif ep.activation == "leaky_relu":
+        v = jnp.where(v > 0, v, ep.slope * v)
+    elif ep.activation == "tanh":
+        v = jnp.tanh(v)
+    return v
+
+
+def _grad_args(ep):
+    return (0, 1, 2) if ep.bias else (0, 1)
+
+
+@pytest.mark.parametrize("kind,ep", EPILOGUES, ids=[k for k, _ in EPILOGUES])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conv_epilogue_parity(rng, backend, kind, ep):
+    """Direct conv (stride 2, pad 1): fused epilogue == reference conv
+    followed by the manual tail, for the value and all of (dx, dw, db)."""
+    x = jnp.asarray(rng.normal(size=(2, 9, 9, 5)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 5, 7)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(7,)), jnp.float32) if ep.bias else None
+
+    got = ecoflow_conv(x, w, 2, 1, backend, bias=b, epilogue=ep)
+    want = _manual_tail(ecoflow_conv(x, w, 2, 1, "reference"), b, ep)
+    assert_allclose(got, want)
+
+    f = lambda x_, w_, b_: jnp.sum(jnp.sin(
+        ecoflow_conv(x_, w_, 2, 1, backend, bias=b_, epilogue=ep)))
+    g = lambda x_, w_, b_: jnp.sum(jnp.sin(_manual_tail(
+        ecoflow_conv(x_, w_, 2, 1, "reference"), b_, ep)))
+    got_g = jax.grad(f, _grad_args(ep))(x, w, b)
+    want_g = jax.grad(g, _grad_args(ep))(x, w, b)
+    for name, a_, b_ in zip(("dx", "dw", "db"), got_g, want_g):
+        assert_allclose(a_, b_, err_msg=f"{name} {backend} {kind}")
+
+
+@pytest.mark.parametrize("kind,ep", EPILOGUES, ids=[k for k, _ in EPILOGUES])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tconv_epilogue_parity(rng, backend, kind, ep):
+    """Transposed conv (DCGAN layer shape, stride 2 K4): fused epilogue
+    parity for the value and (ddy, dw, db); the bias rides over the tconv
+    OUTPUT channels (the forward conv's input side)."""
+    dy = jnp.asarray(rng.normal(size=(2, 5, 5, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 4, 6, 8)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(6,)), jnp.float32) if ep.bias else None
+
+    got = ecoflow_conv_transpose(dy, w, 2, 1, (10, 10), backend,
+                                 bias=b, epilogue=ep)
+    want = _manual_tail(
+        ecoflow_conv_transpose(dy, w, 2, 1, (10, 10), "reference"), b, ep)
+    assert_allclose(got, want)
+
+    f = lambda dy_, w_, b_: jnp.sum(jnp.sin(ecoflow_conv_transpose(
+        dy_, w_, 2, 1, (10, 10), backend, bias=b_, epilogue=ep)))
+    g = lambda dy_, w_, b_: jnp.sum(jnp.sin(_manual_tail(
+        ecoflow_conv_transpose(dy_, w_, 2, 1, (10, 10), "reference"),
+        b_, ep)))
+    got_g = jax.grad(f, _grad_args(ep))(dy, w, b)
+    want_g = jax.grad(g, _grad_args(ep))(dy, w, b)
+    for name, a_, b_ in zip(("ddy", "dw", "db"), got_g, want_g):
+        assert_allclose(a_, b_, err_msg=f"{name} {backend} {kind}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dilated_conv_epilogue_parity(rng, backend):
+    """Atrous branch (D=2, same-padding) with a relu+bias epilogue."""
+    ep = Epilogue(activation="relu", bias=True)
+    x = jnp.asarray(rng.normal(size=(2, 12, 12, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 6)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(6,)), jnp.float32)
+    got = ecoflow_dilated_conv(x, w, 1, 2, 2, backend, bias=b, epilogue=ep)
+    want = _manual_tail(
+        ecoflow_dilated_conv(x, w, 1, 2, 2, "reference"), b, ep)
+    assert_allclose(got, want)
+    f = lambda x_, w_, b_: jnp.sum(jnp.cos(ecoflow_dilated_conv(
+        x_, w_, 1, 2, 2, backend, bias=b_, epilogue=ep)))
+    g = lambda x_, w_, b_: jnp.sum(jnp.cos(_manual_tail(
+        ecoflow_dilated_conv(x_, w_, 1, 2, 2, "reference"), b_, ep)))
+    got_g = jax.grad(f, (0, 1, 2))(x, w, b)
+    want_g = jax.grad(g, (0, 1, 2))(x, w, b)
+    for name, a_, b_ in zip(("dx", "dw", "db"), got_g, want_g):
+        assert_allclose(a_, b_, err_msg=f"{name} {backend}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tconv_epilogue_structural_fill(rng, backend):
+    """K < S leaves whole stride phases with no tap (structural zeros of
+    the upsampling), and non-exact fits leave tail rows no tap reaches:
+    under a bias epilogue those positions must take act(0 + bias), not 0.
+    S=4, K=2 exercises the sentinel-plane fill; the geometry's tail the
+    pad fill."""
+    ep = Epilogue(activation="relu", bias=True)
+    dy = jnp.asarray(rng.normal(size=(1, 3, 3, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2, 2, 3, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(3,)), jnp.float32)
+    got = ecoflow_conv_transpose(dy, w, 4, 0, None, backend,
+                                 bias=b, epilogue=ep)
+    want = _manual_tail(
+        ecoflow_conv_transpose(dy, w, 4, 0, None, "reference"), b, ep)
+    assert_allclose(got, want)
+    # The structural-zero positions really did take the fill value.
+    assert np.asarray(jnp.abs(want) > 0).any()
+
+
+def _tail_eqns_outside_pallas(fn, *args, ndim=4, min_spatial=1):
+    """Activation/mask eqns with conv-output-rank results OUTSIDE the
+    pallas kernel bodies -- the tail ops an unfused graph would carry.
+    `min_spatial` scopes the pin to conv outputs when the model also
+    applies a legitimate non-conv activation (e.g. the GAN generator's
+    dense-projection relu at 4x4)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    hits = []
+    for e in walk_eqns_outside_pallas(jaxpr.jaxpr):
+        if e.primitive.name not in _TAIL_PRIMS:
+            continue
+        for v in e.outvars:
+            shape = tuple(getattr(v.aval, "shape", ()))
+            if len(shape) == ndim and shape[1] >= min_spatial:
+                hits.append((e.primitive.name, shape))
+    return hits
+
+
+def test_structural_cnn_forward_fused(rng):
+    """CNN forward on pallas with declarative epilogues: one pallas_call
+    per conv layer, and NO relu eqn on any conv-shaped tensor outside
+    the kernels."""
+    from repro.models import cnn
+    params = cnn.simple_cnn_init(jax.random.PRNGKey(0), in_ch=3,
+                                 widths=(4, 6), n_classes=4)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 3)), jnp.float32)
+    fwd = lambda p: cnn.simple_cnn_apply(p, x, stride=2, backend="pallas")
+    assert count_pallas_calls(fwd, params) == 2    # exactly one per layer
+    assert _tail_eqns_outside_pallas(fwd, params) == []
+
+
+def test_structural_gan_generator_step_fused(rng):
+    """GAN generator gradient step on pallas: each tconv layer is one
+    forward launch + one fused backward launch, with the relu/tanh tails
+    and their backward masks entirely in-kernel (no 4-D activation or
+    select eqn outside the kernels)."""
+    from repro.models import gan
+    gp = gan.generator_init(jax.random.PRNGKey(0), z_dim=8, base=8)
+    dp = gan.discriminator_init(jax.random.PRNGKey(1), base=8)
+    z = jnp.asarray(rng.normal(size=(2, 8)), jnp.float32)
+    real = jnp.asarray(rng.normal(size=(2, 32, 32, 3)), jnp.float32)
+    step = lambda gp_: jax.grad(
+        lambda p: gan.gan_losses(p, dp, z, real, backend="pallas")[0])(gp_)
+    # min_spatial=8: the 4x4 dense-projection relu is not a conv tail.
+    assert _tail_eqns_outside_pallas(step, gp, min_spatial=8) == []
+
+
+def test_structural_atrous_head_fused(rng):
+    """ASPP-lite forward on pallas: one pallas launch per atrous branch
+    (the 1x1 fuse conv stays on the XLA fast path at dilation 1 with no
+    epilogue), relu tails in-kernel."""
+    from repro.models import vision
+    params = vision.atrous_head_init(jax.random.PRNGKey(0), width=8)
+    im = jnp.asarray(rng.normal(size=(1, 12, 12, 3)), jnp.float32)
+    fwd = lambda p: vision.atrous_head_apply(p, im, backend="pallas")
+    assert count_pallas_calls(fwd, params) == 3    # one per rate branch
+    assert _tail_eqns_outside_pallas(fwd, params) == []
+
+
+def test_structural_backward_three_outputs(rng):
+    """jax.grad of a pallas conv with a bias epilogue traces exactly TWO
+    pallas_calls (fused forward, fused backward); the backward launch
+    emits THREE outputs -- dx, dW, and the in-kernel-accumulated db --
+    and no mask/reduce tail follows it."""
+    ep = Epilogue(activation="relu", bias=True)
+    x = jnp.asarray(rng.normal(size=(2, 9, 9, 3)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 5)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(5,)), jnp.float32)
+    f = lambda x_, w_, b_: jnp.sum(
+        ecoflow_conv(x_, w_, 2, 1, "pallas", bias=b_, epilogue=ep))
+    g = lambda x_, w_, b_: jax.grad(f, (0, 1, 2))(x_, w_, b_)
+    assert count_pallas_calls(g, x, w, b) == 2
+    jaxpr = jax.make_jaxpr(g)(x, w, b)
+    pallas_eqns = [e for e in walk_eqns(jaxpr.jaxpr)
+                   if e.primitive.name == "pallas_call"]
+    n_outs = sorted(len(e.outvars) for e in pallas_eqns)
+    assert n_outs == [1, 3], n_outs     # fwd: y; bwd: (dx, dW, db)
+    assert _tail_eqns_outside_pallas(g, x, w, b) == []
+
+
+def test_structural_ct_backward_three_outputs(rng):
+    """Same pin for the transposed conv: the generator layer's entire
+    backward (ddy, dW, db) is one launch."""
+    ep = Epilogue(activation="tanh", bias=True)
+    dy = jnp.asarray(rng.normal(size=(2, 5, 5, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 4, 6, 8)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(6,)), jnp.float32)
+    f = lambda dy_, w_, b_: jnp.sum(ecoflow_conv_transpose(
+        dy_, w_, 2, 1, (10, 10), "pallas", bias=b_, epilogue=ep))
+    g = lambda dy_, w_, b_: jax.grad(f, (0, 1, 2))(dy_, w_, b_)
+    assert count_pallas_calls(g, dy, w, b) == 2
+    jaxpr = jax.make_jaxpr(g)(dy, w, b)
+    pallas_eqns = [e for e in walk_eqns(jaxpr.jaxpr)
+                   if e.primitive.name == "pallas_call"]
+    n_outs = sorted(len(e.outvars) for e in pallas_eqns)
+    assert n_outs == [1, 3], n_outs
+    assert _tail_eqns_outside_pallas(g, dy, w, b) == []
+
+
+def test_identity_epilogue_keeps_legacy_jaxpr(rng):
+    """An identity Epilogue (or none at all) routes through the plain
+    custom_vjp: same eqn count, same launch count -- the epilogue slot
+    costs nothing when unused."""
+    x = jnp.asarray(rng.normal(size=(2, 9, 9, 3)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 5)), jnp.float32)
+    plain = jax.make_jaxpr(
+        lambda x_, w_: ecoflow_conv(x_, w_, 2, 1, "pallas"))(x, w)
+    ident = jax.make_jaxpr(
+        lambda x_, w_: ecoflow_conv(x_, w_, 2, 1, "pallas",
+                                    epilogue=Epilogue()))(x, w)
+    names = lambda j: [e.primitive.name for e in walk_eqns(j.jaxpr)]
+    assert names(plain) == names(ident)
+
+
+def test_epilogue_bias_requires_array():
+    x = jnp.zeros((1, 8, 8, 3))
+    w = jnp.zeros((3, 3, 3, 4))
+    with pytest.raises(ValueError, match="bias"):
+        ecoflow_conv(x, w, 2, 1, "pallas",
+                     epilogue=Epilogue(activation="relu", bias=True))
+
+
+def test_epilogue_validation():
+    with pytest.raises(ValueError):
+        Epilogue(activation="gelu")
+    with pytest.raises(ValueError):
+        # slope <= 0 would make the output-side mask ambiguous at y < 0
+        Epilogue(activation="leaky_relu", slope=0.0)
+    assert Epilogue().is_identity
+    assert Epilogue(activation="relu").tag == "relu"
+    assert Epilogue(bias=True).tag == "b"
+    assert Epilogue(activation="leaky_relu", slope=0.2,
+                    bias=True).tag == "b+leaky_relu0.2"
+    assert Epilogue(activation="relu", bias=True,
+                    scale=0.5).tag == "b+relu+s0.5"
+
+
+def test_kernel_wrappers_accept_epilogue(rng):
+    """The kernel-level wrappers (ops.py) take bias/epilogue directly --
+    the declarative path the benchmarks drive."""
+    ep = Epilogue(activation="relu", bias=True)
+    x = jnp.asarray(rng.normal(size=(1, 9, 9, 3)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+    y = ops.dconv_forward(x, w, stride=(2, 2), padding=(1, 1),
+                          dilation=(1, 1), bias=b, epilogue=ep)
+    want = _manual_tail(ecoflow_conv(x, w, 2, 1, "reference"), b, ep)
+    assert_allclose(y, want)

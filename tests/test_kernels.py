@@ -451,3 +451,31 @@ def test_flash_attention_property(sq, extra, hk, g, causal):
                                  blk_k=16, interpret=True)
     want = ref.flash_attention_ref(q, k, v, causal=causal)
     assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_tconv_fully_unrolled_skips_padding_slots(rng):
+    """Backported static padding-slot skip (the fused backward kernel's
+    shared (phase, slot) -> filter-tap validity test): at full
+    (phase, tap) unroll every slot index is a python int, so slots whose
+    flipped tap kx = a + (KP-1-u)*period falls outside the KxK filter
+    are skipped outright -- the kernel body carries exactly Kh*Kw
+    matmuls, not T*TK (the zero-padded slots of ragged phases never
+    become MACs).  S=2, K=3: 4 phases x 4 packed slots = 16 slots but
+    only 9 real taps."""
+    from conftest import walk_eqns
+    B, O, K, S, Ci, Co = 1, 4, 3, 2, 4, 4
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    N = S * (O - 1) + K
+    fn = lambda dy_, w_: tconv_fused_pallas(
+        dy_, w_, stride=(S, S), padding=(0, 0), n_out=(N, N),
+        tap_unroll=4, phase_unroll=4, cin_tile=Ci, cout_tile=Co)
+    jaxpr = jax.make_jaxpr(fn)(dy, w)
+    dots = [e for e in walk_eqns(jaxpr.jaxpr)
+            if e.primitive.name == "dot_general"]
+    assert len(dots) == K * K, len(dots)         # 9, not 16
+    # ... and the skip changes nothing numerically.
+    assert_allclose(fn(dy, w),
+                    ref.tconv_phase_ref(dy, w, stride=(S, S),
+                                        padding=(0, 0), n_out=(N, N)),
+                    rtol=1e-4, atol=1e-4)

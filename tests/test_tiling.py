@@ -227,3 +227,129 @@ def test_autotune_through_real_kernel(tmp_path):
                                      padding=(0, 0), k=(K, K))
     np.testing.assert_allclose(np.asarray(dw), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Epilogue-aware planning + cache keys (DESIGN.md Sec. 2.8)
+# ---------------------------------------------------------------------------
+
+def test_cache_key_includes_epilogue():
+    """The autotune cache key carries the epilogue tag: an epilogue
+    changes the kernel's block set, so an epilogue-free winner must never
+    be replayed for an epilogue-bearing launch (and vice versa)."""
+    from repro.core.spec import Epilogue
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 9, 5, 4, 8)
+    base = tiling._cache_key("backward", spec, x_shape, dy_shape, 4,
+                             1 << 23, True, None)
+    relu = tiling._cache_key("backward", spec, x_shape, dy_shape, 4,
+                             1 << 23, True, Epilogue(activation="relu"))
+    brelu = tiling._cache_key("backward", spec, x_shape, dy_shape, 4,
+                              1 << 23, True,
+                              Epilogue(activation="relu", bias=True))
+    assert base.endswith("|ep:none")
+    assert relu.endswith("|ep:relu")
+    assert brelu.endswith("|ep:b+relu")
+    assert len({base, relu, brelu}) == 3
+
+
+def test_autotune_reads_legacy_keyless_rows(tmp_path):
+    """Rows written before the epilogue slot existed (no `|ep:` suffix)
+    are still served -- but ONLY for epilogue-free lookups, whose
+    candidate set they were actually swept against.  An epilogue-bearing
+    lookup must NOT match a legacy row."""
+    from repro.core.spec import Epilogue
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=2)
+    x_shape, dy_shape = _shapes(1, 8, 4, 4, 4)
+    cache = tmp_path / "tile_cache.json"
+    key = tiling._cache_key("filter_grad", spec, x_shape, dy_shape, 4,
+                            tiling.DEFAULT_VMEM_BUDGET, True, None)
+    legacy_key, _, tag = key.rpartition("|ep:")
+    assert tag == "none"
+    legacy_rec = {"cin_tile": 4, "cout_tile": 4, "spatial_tile": 2,
+                  "tap_unroll": 1, "phase_unroll": 1,
+                  "grid_order": ["cin", "cout", "batch", "spatial", "tap"],
+                  "source": "autotune", "us": 1.0}
+    cache.write_text(json.dumps({legacy_key: legacy_rec}))
+
+    calls = []
+
+    def factory(spec_, x_s, dy_s, epilogue=None):
+        def run(plan):
+            calls.append(plan)
+            return None
+        return run
+
+    kw = dict(x_shape=x_shape, dy_shape=dy_shape, mode="autotune",
+              interpret=True, runner_factory=factory,
+              tile_cache_path=cache)
+    tiling._MEM_CACHE.clear()
+    plan = tiling.plan_tiles("filter_grad", spec, **kw)
+    assert not calls, "legacy keyless row should have been served"
+    assert plan.source == "cache" and plan.spatial_tile == 2
+
+    # An epilogue-bearing lookup misses the legacy row and re-sweeps.
+    tiling._MEM_CACHE.clear()
+    plan_ep = tiling.plan_tiles("filter_grad", spec,
+                                epilogue=Epilogue(activation="relu"), **kw)
+    assert calls, "epilogue lookup must not be served a legacy row"
+    assert plan_ep.source == "autotune"
+    doc = json.loads(cache.read_text())
+    assert legacy_key in doc                      # legacy row untouched
+    assert any(k.endswith("|ep:relu") for k in doc)
+
+
+def test_autotune_passes_epilogue_to_runner_factory(tmp_path):
+    """Epilogue-aware runner factories receive the descriptor; legacy
+    3-arg factories still work for epilogue-free sweeps but are rejected
+    (not silently mistimed) when the launch carries an epilogue."""
+    from repro.core.spec import Epilogue
+    ep = Epilogue(activation="relu", bias=True)
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=2)
+    x_shape, dy_shape = _shapes(1, 8, 4, 4, 4)
+    seen = []
+
+    def factory(spec_, x_s, dy_s, epilogue=None):
+        seen.append(epilogue)
+
+        def run(plan):
+            return None
+        return run
+
+    kw = dict(x_shape=x_shape, dy_shape=dy_shape, mode="autotune",
+              tile_cache_path=tmp_path / "c.json")
+    tiling._MEM_CACHE.clear()
+    tiling.plan_tiles("filter_grad", spec, epilogue=ep,
+                      runner_factory=factory, **kw)
+    assert seen == [ep]
+
+    def legacy_factory(spec_, x_s, dy_s):
+        def run(plan):
+            return None
+        return run
+
+    tiling._MEM_CACHE.clear()
+    with pytest.raises(TypeError, match="epilogue"):
+        tiling.plan_tiles("forward", spec, epilogue=ep,
+                          runner_factory=legacy_factory, **kw)
+
+
+def test_epilogue_shifts_working_set_model():
+    """The backward model charges the epilogue's extra blocks: the
+    y-mask stream doubles the dy-frame residency and the db output adds
+    its accumulator, so a tight budget can force a smaller tile than the
+    epilogue-free plan chooses."""
+    from repro.core.spec import Epilogue
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 65, 33, 64, 64)
+    g = tiling._geom("backward", spec, x_shape, dy_shape, 4)
+    ep = Epilogue(activation="relu", bias=True)
+    ws0, _, _, _ = tiling._MODELS["backward"](g, 64, 64, 33, 1, 1)
+    ws1, _, _, _ = tiling._MODELS["backward"](g, 64, 64, 33, 1, 1, ep=ep)
+    assert ws1 > ws0
+    # ct_backward: z block mirrors the g block.
+    g2 = tiling._geom("ct_backward", spec, x_shape, dy_shape, 4)
+    ws0, _, _, _ = tiling._MODELS["ct_backward"](g2, 64, 64, 33, 1, 1)
+    ws1, _, _, _ = tiling._MODELS["ct_backward"](g2, 64, 64, 33, 1, 1,
+                                                 ep=ep)
+    assert ws1 > ws0
