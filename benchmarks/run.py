@@ -5,14 +5,16 @@ the wall-clock microbenchmarks and the (arch x shape) roofline table.
   PYTHONPATH=src python -m benchmarks.run --fast     # skip wallclock
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI: one tiny
         # geometry per op family (incl. the fused dual-gradient
-        # backward, the epilogue-fused direct/transposed families, and
-        # the CNN/GAN train-step rows with epilogue fusion on and off)
+        # backward, the epilogue-fused direct/transposed families, the
+        # CNN/GAN train-step rows with epilogue fusion on and off, and
+        # one 2-forced-device shard_map train-step row in a subprocess)
         # + BENCH_conv.json schema-drift guard
   PYTHONPATH=src python -m benchmarks.run --delta-gate   # CI: re-time
         # the committed geometries, fail if a pallas/baseline ratio
         # regressed > 1.5x vs the corresponding BENCH_conv.json row
         # (incl. fused-backward/two-launch, epilogue-fused/unfused,
-        # and train-step ratios)
+        # train-step, and the per-device-count mdev-* train-step
+        # ratios, each re-timed in its own forced-device subprocess)
   PYTHONPATH=src python -m benchmarks.run --filter shufflenet
         # single-row rerun (substring match; never rewrites the JSON)
 
@@ -36,15 +38,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: one tiny geometry per conv op family "
                          "(incl. fused backward, epilogue-fused "
-                         "direct/transposed families, and train-step "
-                         "rows with epilogue fusion on/off) through the "
-                         "real backend entry points, failing on "
+                         "direct/transposed families, train-step rows "
+                         "with epilogue fusion on/off, and a 2-device "
+                         "shard_map train-step row) through the real "
+                         "backend entry points, failing on "
                          "BENCH_conv.json schema drift")
     ap.add_argument("--delta-gate", action="store_true",
                     help="CI perf gate: re-time the committed "
                          "BENCH_conv.json geometries and fail if any "
                          "pallas/baseline ratio (incl. fused-backward/"
-                         "two-launch, epilogue fused/unfused, and "
+                         "two-launch, epilogue fused/unfused, "
+                         "train-step, and per-device-count mdev-* "
                          "train-step) regressed > 1.5x")
     ap.add_argument("--filter", metavar="SUBSTR", default=None,
                     help="run only conv-backend rows whose case name "

@@ -22,7 +22,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -208,18 +211,93 @@ TRAIN_STEP_CASES = [
      {"base": 8, "z_dim": 16, "batch": 2}, True),
 ]
 
+# Multi-device training-step rows: the SAME interleaved-median train-step
+# methodology executed on a ("data", "model") mesh of 1/2/4/8 forced
+# host-platform devices.  Each device count runs in a SUBPROCESS (the XLA
+# host device count is fixed when the backend initializes, so the parent
+# cannot re-configure it per row); inside, `_train_step_fns(mesh=...)`
+# shards params via the structural conv-filter rule and the batch via
+# `batch_pspec`, and every conv launches through the shard_map dispatch
+# layer (DESIGN.md Sec. 2.9).  Trailing list = device counts; batch 8 so
+# the largest mesh still divides.  (name, kind, config, fuse, devices).
+MULTIDEV_MESHES = {1: (1, 1), 2: (2, 1), 4: (2, 2), 8: (4, 2)}
+MULTIDEV_TRAIN_CASES = [
+    ("mdev-train-cnn-ep", "cnn",
+     {"widths": [8, 16], "batch": 8, "image": 12, "n_classes": 10}, True,
+     [1, 2, 4, 8]),
+    ("mdev-train-gan-gen-ep", "gan_gen",
+     {"base": 8, "z_dim": 16, "batch": 8}, True, [1, 8]),
+]
 
-def _train_step_fns(kind, cfg, backends, rng, fuse_epilogue=False):
+# On interpret-mode hosts each fake device re-interprets its kernels, so
+# the multidev rows cap their sweep count: the per-row median stabilizes
+# well below this and the delta gate still compares like against like
+# (the committed rows ran under the same cap).
+_MULTIDEV_MAX_ITERS = 7
+
+
+def _multidev_measure(payload: dict) -> dict:
+    """Subprocess body for one (case, device-count) multidev row: build
+    the mesh from the forced host devices and time the interleaved
+    backends.  Runs in a child with XLA_FLAGS set before jax init."""
+    shape = tuple(payload["mesh_shape"])
+    devs = np.asarray(jax.devices()[:shape[0] * shape[1]]).reshape(shape)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    fns = _train_step_fns(payload["kind"], payload["config"],
+                          tuple(payload["backends"]),
+                          np.random.default_rng(0),
+                          fuse_epilogue=payload["fuse"], mesh=mesh)
+    return _time_interleaved(fns, iters=payload["iters"],
+                             warmup=payload["warmup"])
+
+
+def _multidev_time(kind, cfg, fuse, n_devices, iters, warmup,
+                   backends=("xla_zero_free", "pallas")) -> dict:
+    """Run `_multidev_measure` in a subprocess with the host device count
+    forced to `n_devices`; returns {backend: us}."""
+    payload = json.dumps({
+        "kind": kind, "config": cfg, "fuse": fuse,
+        "mesh_shape": list(MULTIDEV_MESHES[n_devices]),
+        "backends": list(backends),
+        "iters": min(iters, _MULTIDEV_MAX_ITERS), "warmup": warmup})
+    root = BENCH_JSON.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count"
+                          f"={n_devices}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [str(root / "src"), str(root),
+                    env.get("PYTHONPATH", "")] if p)
+    code = ("import sys, json\n"
+            "from benchmarks.wallclock import _multidev_measure\n"
+            "print(json.dumps(_multidev_measure("
+            "json.loads(sys.stdin.read()))))\n")
+    proc = subprocess.run([sys.executable, "-c", code], input=payload,
+                          capture_output=True, text=True, cwd=str(root),
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"multidev bench child (devices={n_devices}, kind={kind}) "
+            f"failed:\n{proc.stdout}\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _train_step_fns(kind, cfg, backends, rng, fuse_epilogue=False,
+                    mesh=None):
     """Zero-arg jit'd SGD-step callables per backend for one train-step
-    case: forward + `jax.grad` (which dispatches the FUSED backward on
-    the pallas backend) + parameter update, on shared params/data so the
-    interleaved timing compares backends on identical work."""
+    case: forward + backward (the FUSED dual-gradient launch on the
+    pallas backend) + parameter update through the models' own step
+    helpers (`cnn.sgd_step` / `gan.gen_sgd_step`), on shared params/data
+    so the interleaved timing compares backends on identical work.
+
+    `mesh` (a jax Mesh) runs the step multi-device: params are
+    device_put against `sharding.tree_shardings` (conv filters carry the
+    structural 4-D (.., Cin@fsdp, Cout@tp) rule), the batch against
+    `sharding.batch_pspec`, and both tracing and execution happen under
+    `sharding.use_mesh` so every conv dispatches to a shard_map'd launch
+    (DESIGN.md Sec. 2.9)."""
     lr = 0.05
-
-    def _sgd(params, grads):
-        return jax.tree_util.tree_map(lambda p, g: p - lr * g, params,
-                                      grads)
-
     if kind == "cnn":
         from repro.models import cnn
         params = cnn.simple_cnn_init(jax.random.PRNGKey(0), in_ch=3,
@@ -229,38 +307,53 @@ def _train_step_fns(kind, cfg, backends, rng, fuse_epilogue=False):
                                          cfg["image"], 3)), jnp.float32)
         labels = jnp.asarray(rng.integers(0, cfg["n_classes"],
                                           size=cfg["batch"]))
-        fns = {}
-        for bname in backends:
-            f = jax.jit(lambda p, be=bname: _sgd(p, jax.grad(
-                lambda q: cnn.cnn_loss(q, x, labels, stride=2,
-                                       backend=be,
-                                       fuse_epilogue=fuse_epilogue))(p)))
-            fns[bname] = lambda f=f: f(params)
-        return fns
-    if kind == "gan_gen":
+        data = (x, labels)
+
+        def step_of(be):
+            def step(p, d):
+                return cnn.sgd_step(p, d[0], d[1], lr=lr, stride=2,
+                                    backend=be,
+                                    fuse_epilogue=fuse_epilogue)[0]
+            return step
+    elif kind == "gan_gen":
         from repro.models import gan
         k1, k2 = jax.random.split(jax.random.PRNGKey(0))
-        gp = gan.generator_init(k1, z_dim=cfg["z_dim"], base=cfg["base"],
-                                out_ch=3)
-        dp = gan.discriminator_init(k2, in_ch=3, base=cfg["base"])
+        params = gan.generator_init(k1, z_dim=cfg["z_dim"],
+                                    base=cfg["base"], out_ch=3)
+        d_params = gan.discriminator_init(k2, in_ch=3, base=cfg["base"])
         z = jnp.asarray(rng.normal(size=(cfg["batch"], cfg["z_dim"])),
                         jnp.float32)
+        data = (z,)
 
-        def gen_loss(gp_, be):
-            fake = gan.generator_apply(gp_, z, backend=be,
-                                       fuse_epilogue=fuse_epilogue)
-            return jax.nn.softplus(
-                -gan.discriminator_apply(
-                    dp, fake, backend=be,
-                    fuse_epilogue=fuse_epilogue)).mean()
+        def step_of(be):
+            def step(p, d):
+                return gan.gen_sgd_step(p, d_params, d[0], lr=lr,
+                                        backend=be,
+                                        fuse_epilogue=fuse_epilogue)[0]
+            return step
+    else:
+        raise ValueError(f"unknown train-step kind {kind!r}")
 
-        fns = {}
-        for bname in backends:
-            f = jax.jit(lambda p, be=bname: _sgd(p, jax.grad(
-                lambda q: gen_loss(q, be))(p)))
-            fns[bname] = lambda f=f: f(gp)
-        return fns
-    raise ValueError(f"unknown train-step kind {kind!r}")
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        from repro.parallel import sharding as sh
+        with mesh, sh.use_mesh(mesh):
+            params = jax.device_put(params, sh.tree_shardings(params, mesh))
+            data = tuple(jax.device_put(d, NamedSharding(
+                mesh, sh.batch_pspec(mesh, d.ndim, 0, d.shape[0])))
+                for d in data)
+    fns = {}
+    for bname in backends:
+        f = jax.jit(step_of(bname))
+        if mesh is None:
+            fns[bname] = lambda f=f, p=params, d=data: f(p, d)
+        else:
+            def call(f=f, p=params, d=data, m=mesh):
+                from repro.parallel import sharding as sh
+                with m, sh.use_mesh(m):
+                    return f(p, d)
+            fns[bname] = call
+    return fns
 
 
 def _plan_dict(op, spec, x_shape, dy_shape, epilogue=None):
@@ -280,8 +373,9 @@ def _plan_dict(op, spec, x_shape, dy_shape, epilogue=None):
 def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                        dilated_cases=None, strided_dilated_cases=None,
                        train_cases=None, epilogue_cases=None,
-                       tconv_epilogue_cases=None, json_path=None,
-                       name_filter=None, records_out=None):
+                       tconv_epilogue_cases=None, multidev_cases=None,
+                       json_path=None, name_filter=None,
+                       records_out=None):
     """Time tconv + filter-grad + the FUSED dual-gradient backward
     through the xla_zero_free and pallas backends for each geometry --
     plus the dilated-forward conv (d in {2, 4}), the general
@@ -296,8 +390,12 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
     / activation / cotangent mask / db reduce) fused into the launches,
     against a `pallas_unfused` arm that runs the identical pallas
     kernels with the tail as separate XLA ops -- isolating the fusion
-    itself.  `cases`/`dilated_cases`/`strided_dilated_cases`/
-    `train_cases`/`epilogue_cases`/`tconv_epilogue_cases`/`json_path`
+    itself.  The MULTIDEV family re-times the train-step rows on meshes
+    of 1/2/4/8 forced host-platform devices through the shard_map conv
+    dispatch layer (DESIGN.md Sec. 2.9), one subprocess per device count
+    (`_multidev_time`).  `cases`/`dilated_cases`/
+    `strided_dilated_cases`/`train_cases`/`epilogue_cases`/
+    `tconv_epilogue_cases`/`multidev_cases`/`json_path`
     exist for the CI smoke run (one tiny geometry per family).  `name_filter` (case-name substring) reruns single rows
     cheaply during autotuning -- a filtered run never writes
     BENCH_conv.json (it would drop the unselected rows).  `records_out`,
@@ -575,6 +673,31 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
             rows.append((f"wallclock.train_step.{bname}.{name}",
                          round(t_s[bname], 1), derived))
         records.append(rec)
+    # Multi-device train-step rows: one subprocess per (case, device
+    # count) so each row gets its own forced host device count; the
+    # `train_step_us` field name is shared with the single-device rows,
+    # so the delta gate's pallas/xla_zero_free ratio check applies to
+    # every device count automatically.
+    for name, kind, cfg, fuse, dev_counts in flt(MULTIDEV_TRAIN_CASES
+                                                 if multidev_cases is None
+                                                 else multidev_cases):
+        for n_dev in dev_counts:
+            rec = {"layer": f"{name}-d{n_dev}", "kind": kind,
+                   "config": cfg, "n_devices": n_dev,
+                   "mesh": list(MULTIDEV_MESHES[n_dev]),
+                   "interpret_mode": jax.default_backend() != "tpu",
+                   "epilogue": "fused" if fuse else "none",
+                   "train_step_us": {}}
+            t_s = _multidev_time(kind, cfg, fuse, n_dev, iters, warmup,
+                                 backends=backends)
+            for bname in backends:
+                rec["train_step_us"][bname] = round(t_s[bname], 1)
+                derived = "" if bname == "xla_zero_free" else (
+                    f"vs_xla={t_s['xla_zero_free'] / t_s[bname]:.2f}x")
+                rows.append(
+                    (f"wallclock.train_step_mdev.{bname}.{name}-d{n_dev}",
+                     round(t_s[bname], 1), derived))
+            records.append(rec)
     if records_out is not None:
         records_out.extend(records)
     if write_json:
@@ -593,7 +716,11 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                      "`epilogue` tags each row's fused tail ('none' for "
                      "the plain families), and the *_ep_us families "
                      "carry a `pallas_unfused` arm -- the same pallas "
-                     "kernels with the tail/mask/db as separate XLA ops",
+                     "kernels with the tail/mask/db as separate XLA ops; "
+                     "`mdev-*` rows re-time the train step on a forced "
+                     "host-platform device mesh (`n_devices`/`mesh`) "
+                     "through the shard_map conv dispatch layer, one "
+                     "subprocess per device count",
              "cases": records}, indent=2) + "\n")
         rows.append(("wallclock.conv_backend.json", str(path), ""))
     return rows
@@ -723,6 +850,12 @@ SMOKE_TRAIN_CASES = [
     ("smoke-train-gan-gen-ep", "gan_gen",
      {"base": 4, "z_dim": 8, "batch": 1}, True),
 ]
+# One 2-device row: exercises the subprocess launcher, the shard_map
+# dispatch layer, and the sharded param/batch placement end to end.
+SMOKE_MULTIDEV_CASES = [
+    ("smoke-mdev-train-cnn-ep", "cnn",
+     {"widths": [4], "batch": 4, "image": 8, "n_classes": 4}, True, [2]),
+]
 SMOKE_EPILOGUE_CASES = [
     ("smoke-ep-brelu", 4, 3, 2, 4, 4,
      Epilogue(activation="relu", bias=True)),
@@ -760,6 +893,7 @@ def smoke():
             train_cases=SMOKE_TRAIN_CASES,
             epilogue_cases=SMOKE_EPILOGUE_CASES,
             tconv_epilogue_cases=SMOKE_TCONV_EPILOGUE_CASES,
+            multidev_cases=SMOKE_MULTIDEV_CASES,
             json_path=smoke_json)
         got = _record_schema(json.loads(smoke_json.read_text()))
         committed_doc = json.loads(BENCH_JSON.read_text())
@@ -778,7 +912,7 @@ def smoke():
     finally:
         smoke_json.unlink(missing_ok=True)
     rows.append(("wallclock.smoke.schema", "ok",
-                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES + SMOKE_EPILOGUE_CASES + SMOKE_TCONV_EPILOGUE_CASES)}"
+                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES + SMOKE_MULTIDEV_CASES + SMOKE_EPILOGUE_CASES + SMOKE_TCONV_EPILOGUE_CASES)}"
                  " families"))
     return rows
 

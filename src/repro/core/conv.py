@@ -28,7 +28,7 @@ import functools
 
 import jax
 
-from repro.core.spec import ConvSpec, Epilogue, resolve_backend
+from repro.core.spec import ConvSpec, Epilogue, dispatch_backend
 
 
 def _normalize_epilogue(epilogue, bias):
@@ -51,7 +51,7 @@ def _conv_plain(x: jax.Array, w: jax.Array, stride=1, padding=0,
                 backend=None, dilation=1) -> jax.Array:
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
-    return resolve_backend(backend).forward(x, w, spec)
+    return dispatch_backend(backend).forward(x, w, spec)
 
 
 def ecoflow_conv(x: jax.Array, w: jax.Array, stride=1, padding=0,
@@ -89,7 +89,7 @@ def _bwd(stride, padding, backend, dilation, res, g):
     x, w = res
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
-    be = resolve_backend(backend)
+    be = dispatch_backend(backend)
     dx, dw = be.backward(x, g, w, spec, (x.shape[1], x.shape[2]))
     return dx.astype(x.dtype), dw.astype(w.dtype)
 
@@ -102,7 +102,7 @@ def _conv_ep(x, w, b, stride, padding, backend, dilation,
              epilogue: Epilogue):
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
-    return resolve_backend(backend).forward_ep(x, w, b, spec, epilogue)
+    return dispatch_backend(backend).forward_ep(x, w, b, spec, epilogue)
 
 
 def _ep_fwd(x, w, b, stride, padding, backend, dilation, epilogue):
@@ -117,7 +117,7 @@ def _ep_bwd(stride, padding, backend, dilation, epilogue, res, g):
     x, w, y = res
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
-    be = resolve_backend(backend)
+    be = dispatch_backend(backend)
     dx, dw, db = be.backward_ep(x, y, g, w, spec,
                                 (x.shape[1], x.shape[2]), epilogue)
     db = None if db is None else db.astype(g.dtype)
@@ -150,7 +150,7 @@ def _conv_transpose(dy, w, stride, padding, n_out, backend, dilation):
     # inside the backend (`stride[i]` on an int).
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
-    return resolve_backend(backend).input_grad(dy, w, spec, n_out)
+    return dispatch_backend(backend).input_grad(dy, w, spec, n_out)
 
 
 def _ct_fwd(dy, w, stride, padding, n_out, backend, dilation):
@@ -173,7 +173,7 @@ def _ct_bwd(stride, padding, n_out, backend, dilation, res, g):
     dy, w = res
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
-    be = resolve_backend(backend)
+    be = dispatch_backend(backend)
     ddy, dw = be.ct_backward(g, dy, w, spec)
     return ddy.astype(dy.dtype), dw.astype(w.dtype)
 
@@ -186,7 +186,7 @@ def _conv_transpose_ep(dy, w, b, stride, padding, n_out, backend, dilation,
                        epilogue: Epilogue):
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
-    return resolve_backend(backend).input_grad_ep(dy, w, b, spec, n_out,
+    return dispatch_backend(backend).input_grad_ep(dy, w, b, spec, n_out,
                                                   epilogue)
 
 
@@ -201,7 +201,7 @@ def _ct_ep_bwd(stride, padding, n_out, backend, dilation, epilogue, res, g):
     dy, w, z = res
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=w.shape[:2], dilation=dilation)
-    be = resolve_backend(backend)
+    be = dispatch_backend(backend)
     ddy, dw, db = be.ct_backward_ep(g, z, dy, w, spec, epilogue)
     db = None if db is None else db.astype(g.dtype)
     return ddy.astype(dy.dtype), dw.astype(w.dtype), db

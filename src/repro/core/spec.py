@@ -599,3 +599,249 @@ def _ensure_default_backends() -> None:
     # Only mark done once every default registered -- a failure above
     # surfaces on the next call instead of poisoning the registry.
     _DEFAULTS_REGISTERED = True
+
+
+# ---------------------------------------------------------------------------
+# Sharding-aware dispatch: shard_map'd launches on a multi-device mesh
+# (DESIGN.md Sec. 2.9).
+# ---------------------------------------------------------------------------
+
+def dispatch_backend(backend: BackendLike) -> ConvBackend:
+    """Mesh-aware `resolve_backend`.
+
+    Outside a `repro.parallel.sharding.use_mesh` context (or on a 1-chip
+    mesh) this IS `resolve_backend` -- the single-device jaxpr is
+    byte-identical to before.  Under an active multi-device mesh it wraps
+    the resolved backend so every conv op launches through `shard_map`
+    with locally-shaped blocks: batch sharded over the logical "dp" axes,
+    channels over "tp", explicit psums for the reduced gradients.  The
+    mesh is read at TRACE time, so jitted steps must trace under
+    `use_mesh` (the model step helpers do)."""
+    be = resolve_backend(backend)
+    try:
+        from repro.parallel import sharding as _sh
+    except Exception:  # pragma: no cover - parallel pkg always present
+        return be
+    mesh = _sh.current_mesh()
+    if mesh is None or mesh.size <= 1:
+        return be
+    return sharded_backend(be, mesh)
+
+
+_SHARDED_CACHE: Dict[tuple, ConvBackend] = {}
+
+
+def sharded_backend(base: ConvBackend, mesh) -> ConvBackend:
+    """shard_map wrapper around `base` for `mesh` (memoized per pair).
+
+    Per-op sharding scheme -- chosen so NO forward-path psum is ever
+    needed, which keeps nonlinear epilogues correct (they must see exact
+    sums, so only NON-contracted dims may shard):
+
+      forward / forward_ep       x:(B@dp,..)  w:(..,Cin,Cout@tp) -> y@(dp,tp)
+      input_grad / _ep (tconv)   dy:(B@dp,..) w:(..,Cin@tp,Cout) -> dx@(dp,tp)
+      backward / backward_ep     per-shard fused launch, then
+                                 psum(dx, tp) + psum(dW/db, dp)
+      ct_backward / _ep          per-shard fused launch, then
+                                 psum(ddy, tp) + psum(dW/db, dp)
+      filter_grad                psum(dW, dp)
+
+    Each axis is applied only when it divides the corresponding global
+    dim (same guard policy as `parallel.sharding._guard`); when neither
+    axis applies the base backend runs replicated with no shard_map.
+    `check_rep=False` because pallas_call has no replication rule.  The
+    base backend's methods run INSIDE the shard_map body, so its
+    fused-vs-two-launch fallback and `tiling.plan_tiles` both see LOCAL
+    shapes -- one forward and one backward pallas_call per shard."""
+    key = (id(base), mesh)
+    hit = _SHARDED_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import sharding as _sh
+
+    la = _sh.logical_axes(mesh)
+    dp_axes, tp_axes = la["dp"], la["tp"]
+
+    def _ax(axes, dim):
+        """`axes` if it is real (>1 devices) and divides `dim`."""
+        if axes is None:
+            return None
+        n = _sh._axis_size(mesh, axes)
+        return axes if n > 1 and dim % n == 0 else None
+
+    def _launch(body, in_specs, out_specs, *args):
+        return shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)(*args)
+
+    def _psum(v, axes):
+        return jax.lax.psum(v, axes) if axes is not None else v
+
+    # -- forward family: shard the produced dims, contract full ones ------
+
+    def forward(x, w, spec):
+        bd, cd = _ax(dp_axes, x.shape[0]), _ax(tp_axes, w.shape[3])
+        if bd is None and cd is None:
+            return base.forward(x, w, spec)
+        return _launch(lambda x_, w_: base.forward(x_, w_, spec),
+                       (P(bd, None, None, None), P(None, None, None, cd)),
+                       P(bd, None, None, cd), x, w)
+
+    def forward_ep(x, w, bias, spec, ep):
+        bd, cd = _ax(dp_axes, x.shape[0]), _ax(tp_axes, w.shape[3])
+        if bd is None and cd is None:
+            return base.forward_ep(x, w, bias, spec, ep)
+        if bias is None:
+            return _launch(
+                lambda x_, w_: base.forward_ep(x_, w_, None, spec, ep),
+                (P(bd, None, None, None), P(None, None, None, cd)),
+                P(bd, None, None, cd), x, w)
+        return _launch(
+            lambda x_, w_, b_: base.forward_ep(x_, w_, b_, spec, ep),
+            (P(bd, None, None, None), P(None, None, None, cd), P(cd)),
+            P(bd, None, None, cd), x, w, bias)
+
+    # tconv-as-a-layer: the produced channel dim is Cin (w.shape[2]); the
+    # contracted Cout stays full per shard, so the epilogue bias (a
+    # per-Cin vector here) applies to exact sums.
+
+    def input_grad(dy, w, spec, n_out):
+        bd, cd = _ax(dp_axes, dy.shape[0]), _ax(tp_axes, w.shape[2])
+        if bd is None and cd is None:
+            return base.input_grad(dy, w, spec, n_out)
+        return _launch(
+            lambda dy_, w_: base.input_grad(dy_, w_, spec, n_out),
+            (P(bd, None, None, None), P(None, None, cd, None)),
+            P(bd, None, None, cd), dy, w)
+
+    def input_grad_ep(dy, w, bias, spec, n_out, ep):
+        bd, cd = _ax(dp_axes, dy.shape[0]), _ax(tp_axes, w.shape[2])
+        if bd is None and cd is None:
+            return base.input_grad_ep(dy, w, bias, spec, n_out, ep)
+        if bias is None:
+            return _launch(
+                lambda dy_, w_: base.input_grad_ep(dy_, w_, None, spec,
+                                                   n_out, ep),
+                (P(bd, None, None, None), P(None, None, cd, None)),
+                P(bd, None, None, cd), dy, w)
+        return _launch(
+            lambda dy_, w_, b_: base.input_grad_ep(dy_, w_, b_, spec,
+                                                   n_out, ep),
+            (P(bd, None, None, None), P(None, None, cd, None), P(cd)),
+            P(bd, None, None, cd), dy, w, bias)
+
+    # -- backward family: per-shard fused launch + explicit psums ---------
+    # dx/ddy are partial over the sharded channel dim (tp); dW/db are
+    # partial over the batch shards (dp).  The psums sit OUTSIDE the
+    # pallas_call but inside the shard_map body, so each conv layer still
+    # lowers to exactly one backward launch per shard.
+
+    def filter_grad(x, dy, spec):
+        bd, cd = _ax(dp_axes, x.shape[0]), _ax(tp_axes, dy.shape[3])
+        if bd is None and cd is None:
+            return base.filter_grad(x, dy, spec)
+        return _launch(
+            lambda x_, dy_: _psum(base.filter_grad(x_, dy_, spec), bd),
+            (P(bd, None, None, None), P(bd, None, None, cd)),
+            P(None, None, None, cd), x, dy)
+
+    def backward(x, dy, w, spec, n_out):
+        bd, cd = _ax(dp_axes, x.shape[0]), _ax(tp_axes, w.shape[3])
+        if bd is None and cd is None:
+            return base.backward(x, dy, w, spec, n_out)
+
+        def body(x_, dy_, w_):
+            dx, dw = base.backward(x_, dy_, w_, spec, n_out)
+            return _psum(dx, cd), _psum(dw, bd)
+
+        return _launch(body,
+                       (P(bd, None, None, None), P(bd, None, None, cd),
+                        P(None, None, None, cd)),
+                       (P(bd, None, None, None), P(None, None, None, cd)),
+                       x, dy, w)
+
+    def backward_ep(x, y, dy, w, spec, n_out, ep):
+        bd, cd = _ax(dp_axes, x.shape[0]), _ax(tp_axes, w.shape[3])
+        if bd is None and cd is None:
+            return base.backward_ep(x, y, dy, w, spec, n_out, ep)
+
+        def body(x_, dy_, w_, *rest):
+            y_ = rest[0] if ep.needs_y else None
+            dx, dw, db = base.backward_ep(x_, y_, dy_, w_, spec, n_out, ep)
+            dx, dw = _psum(dx, cd), _psum(dw, bd)
+            if db is None:
+                return dx, dw
+            return dx, dw, _psum(db, bd)
+
+        in_specs = [P(bd, None, None, None), P(bd, None, None, cd),
+                    P(None, None, None, cd)]
+        args = [x, dy, w]
+        if ep.needs_y:
+            in_specs.append(P(bd, None, None, cd))
+            args.append(y)
+        out_specs = (P(bd, None, None, None), P(None, None, None, cd))
+        if ep.bias:
+            out_specs = out_specs + (P(cd),)
+        out = _launch(body, tuple(in_specs), out_specs, *args)
+        return out if ep.bias else (out[0], out[1], None)
+
+    def ct_backward(g, dy, w, spec):
+        bd, cd = _ax(dp_axes, g.shape[0]), _ax(tp_axes, w.shape[2])
+        if bd is None and cd is None:
+            return base.ct_backward(g, dy, w, spec)
+
+        def body(g_, dy_, w_):
+            ddy, dw = base.ct_backward(g_, dy_, w_, spec)
+            return _psum(ddy, cd), _psum(dw, bd)
+
+        return _launch(body,
+                       (P(bd, None, None, cd), P(bd, None, None, None),
+                        P(None, None, cd, None)),
+                       (P(bd, None, None, None), P(None, None, cd, None)),
+                       g, dy, w)
+
+    def ct_backward_ep(g, z, dy, w, spec, ep):
+        bd, cd = _ax(dp_axes, g.shape[0]), _ax(tp_axes, w.shape[2])
+        if bd is None and cd is None:
+            return base.ct_backward_ep(g, z, dy, w, spec, ep)
+
+        def body(g_, dy_, w_, *rest):
+            z_ = rest[0] if ep.needs_y else None
+            ddy, dw, db = base.ct_backward_ep(g_, z_, dy_, w_, spec, ep)
+            ddy, dw = _psum(ddy, cd), _psum(dw, bd)
+            if db is None:
+                return ddy, dw
+            return ddy, dw, _psum(db, bd)
+
+        in_specs = [P(bd, None, None, cd), P(bd, None, None, None),
+                    P(None, None, cd, None)]
+        args = [g, dy, w]
+        if ep.needs_y:
+            in_specs.append(P(bd, None, None, cd))
+            args.append(z)
+        out_specs = (P(bd, None, None, None), P(None, None, cd, None))
+        if ep.bias:
+            out_specs = out_specs + (P(cd),)
+        out = _launch(body, tuple(in_specs), out_specs, *args)
+        return out if ep.bias else (out[0], out[1], None)
+
+    wrapped = ConvBackend(
+        name=f"{base.name}@shard",
+        forward=forward,
+        input_grad=input_grad,
+        filter_grad=filter_grad,
+        # All fused slots filled so the ConvBackend methods always route
+        # to the shard_map wrappers; the base backend's own
+        # fused-vs-two-launch choice happens inside the body.
+        fused_backward=backward,
+        fused_ct_backward=ct_backward,
+        fused_forward_ep=forward_ep,
+        fused_input_grad_ep=input_grad_ep,
+        fused_backward_ep=backward_ep,
+        fused_ct_backward_ep=ct_backward_ep)
+    _SHARDED_CACHE[key] = wrapped
+    return wrapped

@@ -55,6 +55,7 @@ import json
 import math
 import os
 import pathlib
+import warnings
 from typing import Callable, Dict, Optional
 
 from repro.core.spec import ConvSpec, Epilogue
@@ -536,28 +537,62 @@ _MEM_CACHE: Dict[str, TilePlan] = {}
 
 
 def _load_disk_cache(path: pathlib.Path) -> dict:
+    """Read the on-disk autotune cache; {} when absent.
+
+    A file that exists but does not parse as a JSON object (truncated by
+    a pre-atomic-write crash, torn by a non-atomic copy, hand-edited) is
+    WARNED about and treated as empty -- the sweep re-tunes and the next
+    `_store_disk_cache` replaces the file wholesale -- instead of
+    crashing the conv that triggered the lookup."""
     try:
-        return json.loads(path.read_text())
-    except (OSError, ValueError):
+        text = path.read_text()
+    except OSError:
         return {}
+    try:
+        doc = json.loads(text)
+    except ValueError:
+        doc = None
+    if not isinstance(doc, dict):
+        warnings.warn(
+            f"corrupt autotune tile cache at {path} (not a JSON object); "
+            f"ignoring it and re-tuning -- the next sweep rewrites it",
+            RuntimeWarning, stacklevel=2)
+        return {}
+    return doc
 
 
 def _store_disk_cache(path: pathlib.Path, doc: dict) -> None:
+    """Atomic publish: write a temp file in the same directory, then
+    `os.replace` it over the cache path.  Concurrent autotuning processes
+    (multi-device launchers spawn one per host) each publish a COMPLETE
+    document -- a racing reader never sees a torn/truncated file, and the
+    last writer wins instead of interleaving partial writes."""
     try:
         path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        tmp = path.with_name(f".{path.name}.{os.getpid()}.tmp")
+        tmp.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        os.replace(tmp, path)
     except OSError:
         pass   # cache is an optimization; never fail the conv over it
 
 
-def _plan_from_cache_rec(op: str, rec: dict) -> TilePlan:
-    return TilePlan(cin_tile=rec["cin_tile"], cout_tile=rec["cout_tile"],
-                    spatial_tile=rec["spatial_tile"],
-                    tap_unroll=rec.get("tap_unroll", 1),
-                    phase_unroll=rec.get("phase_unroll", 1),
-                    grid_order=tuple(rec.get("grid_order",
-                                             _GRID_ORDERS[op])),
-                    source="cache")
+def _plan_from_cache_rec(op: str, rec: dict) -> Optional[TilePlan]:
+    """TilePlan from one cache row, or None (with a warning) when the row
+    is malformed -- same warn-and-re-tune policy as a corrupt file."""
+    try:
+        return TilePlan(cin_tile=rec["cin_tile"],
+                        cout_tile=rec["cout_tile"],
+                        spatial_tile=rec["spatial_tile"],
+                        tap_unroll=rec.get("tap_unroll", 1),
+                        phase_unroll=rec.get("phase_unroll", 1),
+                        grid_order=tuple(rec.get("grid_order",
+                                                 _GRID_ORDERS[op])),
+                        source="cache")
+    except (KeyError, TypeError, AttributeError):
+        warnings.warn(
+            f"malformed autotune tile cache record for op {op!r}; "
+            f"ignoring it and re-tuning", RuntimeWarning, stacklevel=2)
+        return None
 
 
 def _call_runner_factory(factory: Callable, spec: ConvSpec, x_shape,
@@ -591,15 +626,17 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
     disk = _load_disk_cache(path)
     if key in disk:
         plan = _plan_from_cache_rec(op, disk[key])
-        _MEM_CACHE[key] = plan
-        return plan
+        if plan is not None:
+            _MEM_CACHE[key] = plan
+            return plan
     legacy = _legacy_cache_key(key)
     if legacy is not None and legacy in disk:
         # Row written before the epilogue slot existed; valid only for
         # the epilogue-free candidate set (`_legacy_cache_key` gates).
         plan = _plan_from_cache_rec(op, disk[legacy])
-        _MEM_CACHE[key] = plan
-        return plan
+        if plan is not None:
+            _MEM_CACHE[key] = plan
+            return plan
     factory = runner_factory or _RUNNERS.get(op)
     if factory is None:
         # No runner registered: analytical fallback, through the memo

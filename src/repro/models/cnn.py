@@ -66,3 +66,22 @@ def cnn_loss(params, x, labels, *, stride=2, backend=None,
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return (logz - gold).mean()
+
+
+def sgd_step(params, x, labels, *, lr=0.05, stride=2, backend=None,
+             fuse_epilogue=True):
+    """One SGD step: (new_params, loss).
+
+    Mesh-aware: traced under a `repro.parallel.sharding.use_mesh` context
+    the convs dispatch to shard_map'd launches (batch on "dp", channels
+    on "tp" -- DESIGN.md Sec. 2.9) and the constraint below keeps the
+    batch dim of the input sharded; outside a mesh both are no-ops and
+    the step is the plain single-device jaxpr."""
+    from repro.parallel import sharding
+
+    x = sharding.shard(x, "dp", None, None, None)
+    loss, grads = jax.value_and_grad(cnn_loss)(
+        params, x, labels, stride=stride, backend=backend,
+        fuse_epilogue=fuse_epilogue)
+    new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new, loss

@@ -106,3 +106,28 @@ def gan_losses(g_params, d_params, z, real, *, backend=None,
     d_loss = sp(-d_real).mean() + sp(d_fake).mean()
     g_loss = sp(-d_fake).mean()
     return g_loss, d_loss
+
+
+def gen_sgd_step(g_params, d_params, z, *, lr=0.05, backend=None,
+                 fuse_epilogue=True):
+    """One generator SGD step against a frozen discriminator:
+    (new_g_params, g_loss) for the non-saturating loss.
+
+    Mesh-aware like `cnn.sgd_step`: under `sharding.use_mesh` the
+    transposed convs (generator forward) and direct convs (discriminator)
+    dispatch to shard_map'd launches and the latent batch stays sharded
+    on "dp"; outside a mesh this is the plain single-device step."""
+    from repro.parallel import sharding
+
+    z = sharding.shard(z, "dp", None)
+
+    def g_loss(gp):
+        fake = generator_apply(gp, z, backend=backend,
+                               fuse_epilogue=fuse_epilogue)
+        d_fake = discriminator_apply(d_params, fake, backend=backend,
+                                     fuse_epilogue=fuse_epilogue)
+        return jax.nn.softplus(-d_fake).mean()
+
+    loss, grads = jax.value_and_grad(g_loss)(g_params)
+    new = jax.tree_util.tree_map(lambda p, g: p - lr * g, g_params, grads)
+    return new, loss

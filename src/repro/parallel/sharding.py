@@ -51,6 +51,16 @@ def use_mesh(mesh: Optional[Mesh]):
         st.mesh = prev
 
 
+def current_mesh() -> Optional[Mesh]:
+    """Mesh activated by the innermost `use_mesh` context (None outside).
+
+    Read at trace time by the conv dispatch layer
+    (`repro.core.spec.dispatch_backend`) to choose between replicated and
+    shard_map'd launches, so callers that jit under a mesh must also
+    trace under `use_mesh` (the model step helpers do this)."""
+    return _state().mesh
+
+
 def logical_axes(mesh: Mesh, *, serve: bool = False) -> dict:
     """Logical -> mesh axis mapping.
 
@@ -128,6 +138,20 @@ _NAME_RULES = [
     (r".*",              (None,)),                  # norms, biases, scalars
 ]
 
+# 4-D conv filters (KH, KW, Cin, Cout) cannot be claimed by name rules:
+# CNN conv stacks live in python lists, so the leaf name is a bare list
+# index ("convs/1" -> "1"), and the GAN layers use per-layer names ("t2",
+# "c3").  Every one of them used to fall through to the replicate-
+# everything catch-all and was silently fully replicated under FSDP.  The
+# structural rank-4 rule below (applied in `leaf_pspec` when no name rule
+# claims the leaf) shards Cout over "tp" -- the non-contracted output dim
+# each shard_map'd forward launch produces locally -- and Cin over "fsdp"
+# for ZeRO-3 storage (the dispatch layer's shard_map in_specs re-gather
+# it per use), with the usual divisibility guard (e.g. the Cin=3 stem
+# stays unsharded).
+_CONV_FILTER_SPEC = (None, None, "fsdp", "tp")
+_SERVE_CONV_FILTER_SPEC = (None, None, None, "tp")  # serve: stay resident
+
 # Serve-time layout (Sec. Perf "serve-tp resharding"): weights fully
 # sharded over ALL chips ("tp" = model + data axes; experts keep E over
 # model ("ep") and shard the ffn dim over the data axes ("dax")) so they
@@ -169,6 +193,10 @@ def leaf_pspec(path: str, shape, mesh: Mesh, *, serve: bool = False,
     name = path.split("/")[-1]
     for pat, spec in rules:
         if re.match(pat, name):
+            if pat == r".*" and len(shape) == 4:
+                # structural conv-filter rule -- see _CONV_FILTER_SPEC
+                spec = (_SERVE_CONV_FILTER_SPEC if serve
+                        else _CONV_FILTER_SPEC)
             entries = [la.get(s) if isinstance(s, str) else s for s in spec]
             if len(entries) < len(shape):   # leading scan/stack dims
                 entries = [None] * (len(shape) - len(entries)) + entries
@@ -209,11 +237,16 @@ def tree_shardings(tree, mesh: Mesh, *, serve: bool = False,
 
 def batch_pspec(mesh: Mesh, rank: int, batch_dim: int = 0,
                 batch_size: Optional[int] = None) -> P:
-    """Shard the batch dim over ("pod","data"), guarded by divisibility."""
+    """Shard the batch dim over ("pod","data"), guarded by divisibility.
+
+    The guard needs the concrete size: with ``batch_size=None`` the batch
+    dim is left UNSHARDED rather than (as before) sharded unconditionally
+    -- an unguarded spec applied to a ragged last batch
+    (B % |dp| != 0) fails to lower.  Pass the batch size to opt in."""
     la = logical_axes(mesh)
     dp = la["dp"]
     entries = [None] * rank
-    if dp is not None and (batch_size is None or
-                           batch_size % _axis_size(mesh, dp) == 0):
+    if (dp is not None and batch_size is not None
+            and batch_size % _axis_size(mesh, dp) == 0):
         entries[batch_dim] = dp
     return P(*entries)

@@ -4,8 +4,12 @@ the main test process keeps the default single CPU device (the dry-run's
 
 Covers: sharding-rule inference on a real mesh, sharded train step
 numerics vs single-device, the GPipe ppermute pipeline, elastic-mesh
-resharding restore, and a miniature dry-run (lower+compile with
-in/out shardings).
+resharding restore, a miniature dry-run (lower+compile with in/out
+shardings), and the conv stack (DESIGN.md Sec. 2.9): the structural
+4-D conv-filter rule on real CNN/GAN trees, the batch_pspec size guard,
+CNN/GAN train-step parity through the shard_map conv dispatch layer,
+the plan-tiles-sees-local-shapes contract, and the
+one-pallas_call-per-shard structural pin.
 """
 from __future__ import annotations
 
@@ -281,5 +285,236 @@ def test_compressed_allreduce_across_pods():
                                rtol=0.15, atol=0.05)
     np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out[1]),
                                rtol=1e-6, atol=1e-6)
+    print("ok")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# Conv stack: shard_map dispatch layer + conv-filter sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_conv_filter_sharding_rules():
+    """The structural rank-4 rule: real CNN/GAN param trees get
+    non-trivial conv-filter PartitionSpecs (the old behavior -- list
+    indices / GAN layer names falling to the replicate-all catch-all --
+    would leave every one of them P())."""
+    _run("""
+    import jax, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.models import cnn, gan
+    from repro.parallel import sharding as sh
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    params = cnn.simple_cnn_init(jax.random.PRNGKey(0), in_ch=3,
+                                 widths=(32, 64, 128), n_classes=10)
+    specs = sh.tree_pspecs(params, mesh)
+    # Cin=3 stem: fsdp(4) does not divide 3 -> Cin stays unsharded, but
+    # Cout=32 shards over tp
+    assert specs["convs"][0] == P(None, None, None, "model"), specs
+    # interior filters: full (.., Cin@fsdp, Cout@tp)
+    assert specs["convs"][1] == P(None, None, "data", "model"), specs
+    assert specs["convs"][2] == P(None, None, "data", "model"), specs
+    # the 2-D head still follows its name rule, not the conv rule
+    assert specs["head"] == P("data", "model"), specs
+
+    g = gan.generator_init(jax.random.PRNGKey(1), z_dim=64, base=64)
+    d = gan.discriminator_init(jax.random.PRNGKey(2), in_ch=3, base=64)
+    gs, ds = sh.tree_pspecs(g, mesh), sh.tree_pspecs(d, mesh)
+    assert gs["t1"] == P(None, None, "data", "model"), gs
+    assert gs["t2"] == P(None, None, "data", "model"), gs
+    # t3 has Cin=3 (the RGB output side of the tconv): guard drops fsdp
+    assert gs["t3"] == P(None, None, None, "model"), gs
+    assert ds["c2"] == P(None, None, "data", "model"), ds
+    # serve layout: conv filters fully sharded over model+data on Cout
+    gss = sh.tree_pspecs(g, mesh, serve=True)
+    assert gss["t1"] == P(None, None, None, ("model", "data")), gss
+    # the depthwise (K, C) name rule is untouched by the structural rule
+    spec = sh.leaf_pspec("blocks/conv_w", (4, 64), mesh)
+    assert spec == P(None, "model"), spec
+    print("ok")
+    """)
+
+
+def test_batch_pspec_requires_size():
+    """batch_pspec only shards when the batch size is known AND divides
+    the dp axes -- an unknown (None) or ragged size stays unsharded."""
+    _run("""
+    import jax, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.parallel import sharding as sh
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    # divisible batch: sharded over the data axes
+    assert sh.batch_pspec(mesh, 4, 0, 8) == P("data", None, None, None)
+    # unknown size: UNSHARDED (the old code sharded unconditionally and
+    # a ragged last batch then failed to lower)
+    assert sh.batch_pspec(mesh, 4, 0, None) == P(None, None, None, None)
+    # ragged size: guard drops the axis
+    assert sh.batch_pspec(mesh, 2, 0, 6) == P(None, None)
+    print("ok")
+    """)
+
+
+def test_sharded_cnn_sgd_step_matches_single_device():
+    """Tentpole numerics: the CNN SGD step on the pallas backend, 8 fake
+    devices FSDP+TP vs single device, same seed -> same params."""
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding
+    from repro.models import cnn
+    from repro.parallel import sharding as sh
+
+    params = cnn.simple_cnn_init(jax.random.PRNGKey(0), in_ch=3,
+                                 widths=(8, 16), n_classes=10)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 12, 12, 3)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 10, size=8))
+    step = lambda p, x_: cnn.sgd_step(p, x_, labels, lr=0.05, stride=2,
+                                      backend="pallas", fuse_epilogue=True)
+    p_ref, loss_ref = jax.jit(step)(params, x)
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    with mesh, sh.use_mesh(mesh):
+        psh = sh.tree_shardings(params, mesh)
+        p_s = jax.device_put(params, psh)
+        x_s = jax.device_put(x, NamedSharding(
+            mesh, sh.batch_pspec(mesh, 4, 0, 8)))
+        p_out, loss = jax.jit(step)(p_s, x_s)
+    assert abs(float(loss) - float(loss_ref)) < 1e-5, (loss, loss_ref)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+    print("ok")
+    """)
+
+
+def test_sharded_gan_gen_step_matches_single_device():
+    """Tentpole numerics for the GAN side: generator SGD step (zero-free
+    tconv forward + fused ct-backward) under the 8-device mesh."""
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding
+    from repro.models import gan
+    from repro.parallel import sharding as sh
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    gp = gan.generator_init(k1, z_dim=16, base=8, out_ch=3)
+    dp = gan.discriminator_init(k2, in_ch=3, base=8)
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    step = lambda g, z_: gan.gen_sgd_step(g, dp, z_, lr=0.05,
+                                          backend="pallas",
+                                          fuse_epilogue=True)
+    g_ref, loss_ref = jax.jit(step)(gp, z)
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    with mesh, sh.use_mesh(mesh):
+        g_s = jax.device_put(gp, sh.tree_shardings(gp, mesh))
+        z_s = jax.device_put(z, NamedSharding(
+            mesh, sh.batch_pspec(mesh, 2, 0, 8)))
+        g_out, loss = jax.jit(step)(g_s, z_s)
+    assert abs(float(loss) - float(loss_ref)) < 1e-5, (loss, loss_ref)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+    print("ok")
+    """)
+
+
+def test_plan_tiles_under_shard_map_sees_local_shapes():
+    """The local-shapes contract (DESIGN.md Sec. 2.9): inside the
+    shard_map body the kernels resolve `tiling.plan_tiles` from traced
+    LOCAL block shapes -- batch/dp and channel/tp already divided out --
+    so the planner's Cin/Cout tiles are the per-shard geometry."""
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.conv import ecoflow_conv
+    from repro.core.spec import Epilogue
+    from repro.kernels import tiling
+    from repro.parallel import sharding as sh
+
+    seen = []
+    orig = tiling.plan_tiles
+    def spy(op, spec, **kw):
+        seen.append((op, tuple(kw["x_shape"]), tuple(kw["dy_shape"])))
+        return orig(op, spec, **kw)
+    tiling.plan_tiles = spy
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    B, N, Ci, Co = 8, 10, 4, 8
+    x = jnp.asarray(rng.normal(size=(B, N, N, Ci)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, Ci, Co)), jnp.float32)
+    ep = Epilogue(activation="relu")
+
+    def loss(x_, w_):
+        return ecoflow_conv(x_, w_, 2, 1, "pallas", epilogue=ep).sum()
+
+    with mesh, sh.use_mesh(mesh):
+        jax.grad(loss, argnums=(0, 1))(x, w)
+
+    assert seen, "plan_tiles was never consulted"
+    for op, xs, dys in seen:
+        # batch divided by |dp|=4, Cout by |tp|=2; Ci=4 is the full Cin
+        # (contracted dim -- never sharded on the forward path)
+        assert xs[0] == B // 4, (op, xs)
+        assert xs[3] == Ci, (op, xs)
+        assert dys[0] == B // 4, (op, dys)
+        assert dys[3] == Co // 2, (op, dys)
+    print("ok", sorted({op for op, _, _ in seen}))
+    """)
+
+
+def test_conv_layer_single_launch_per_shard():
+    """Structural pin: under the mesh one conv layer's forward+backward
+    jaxpr contains exactly TWO pallas_calls (one fused forward launch,
+    one fused dual-gradient backward launch), each inside a shard_map
+    body, with the explicit dx/dW/db psums alongside -- and none outside
+    any shard_map."""
+    _run("""
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.conv import ecoflow_conv
+    from repro.core.spec import Epilogue
+    from repro.parallel import sharding as sh
+
+    def subjaxprs(eqn):
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                yield v.jaxpr
+            elif hasattr(v, "eqns"):
+                yield v
+
+    def walk(jaxpr, skip_shard_map=False):
+        for e in jaxpr.eqns:
+            yield e
+            if skip_shard_map and e.primitive.name == "shard_map":
+                continue
+            for sub in subjaxprs(e):
+                yield from walk(sub, skip_shard_map)
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 10, 10, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    ep = Epilogue(activation="relu", bias=True)
+
+    def loss(x_, w_, b_):
+        return ecoflow_conv(x_, w_, 2, 1, "pallas", bias=b_,
+                            epilogue=ep).sum()
+
+    with mesh, sh.use_mesh(mesh):
+        jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(x, w, b)
+
+    names = [e.primitive.name for e in walk(jaxpr.jaxpr)]
+    assert names.count("pallas_call") == 2, names
+    assert names.count("shard_map") == 2, names
+    assert names.count("psum") >= 3, names   # dx@tp, dW@dp, db@dp
+    outside = [e.primitive.name
+               for e in walk(jaxpr.jaxpr, skip_shard_map=True)]
+    assert outside.count("pallas_call") == 0, outside
     print("ok")
     """)

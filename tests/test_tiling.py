@@ -353,3 +353,74 @@ def test_epilogue_shifts_working_set_model():
     ws1, _, _, _ = tiling._MODELS["ct_backward"](g2, 64, 64, 33, 1, 1,
                                                  ep=ep)
     assert ws1 > ws0
+
+
+def test_cache_store_is_atomic_and_leaves_no_temp(tmp_path):
+    """The cache publish goes through a same-directory temp file +
+    os.replace: after a store the path holds complete, parseable JSON
+    and no temp litter remains (the atomic-rename contract concurrent
+    autotuners rely on)."""
+    cache = tmp_path / "tile_cache.json"
+    tiling._store_disk_cache(cache, {"k": {"cin_tile": 4}})
+    assert json.loads(cache.read_text()) == {"k": {"cin_tile": 4}}
+    assert [p.name for p in tmp_path.iterdir()] == ["tile_cache.json"]
+    # overwrite replaces wholesale, again atomically
+    tiling._store_disk_cache(cache, {"k2": {"cout_tile": 8}})
+    assert json.loads(cache.read_text()) == {"k2": {"cout_tile": 8}}
+    assert [p.name for p in tmp_path.iterdir()] == ["tile_cache.json"]
+
+
+def test_corrupt_cache_file_warns_and_retunes(tmp_path):
+    """A truncated/corrupt cache file (pre-atomic-write crash, torn
+    copy) must warn and re-tune -- not crash the conv that looked it up
+    -- and the re-tuned winner must rewrite the file as valid JSON."""
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=2)
+    x_shape, dy_shape = _shapes(1, 8, 4, 4, 4)
+    cache = tmp_path / "tile_cache.json"
+    cache.write_text('{"filter_grad|truncated-mid-wri')   # torn write
+    calls = []
+
+    def factory(spec_, x_s, dy_s):
+        def run(plan):
+            calls.append(plan)
+            return None
+        return run
+
+    kw = dict(x_shape=x_shape, dy_shape=dy_shape, mode="autotune",
+              runner_factory=factory, tile_cache_path=cache)
+    tiling._MEM_CACHE.clear()
+    with pytest.warns(RuntimeWarning, match="corrupt autotune tile cache"):
+        plan = tiling.plan_tiles("filter_grad", spec, **kw)
+    assert calls, "corrupt cache should trigger a fresh sweep"
+    assert plan.source == "autotune"
+    doc = json.loads(cache.read_text())   # file rewritten, valid again
+    assert any(k.startswith("filter_grad|") for k in doc)
+
+
+def test_malformed_cache_record_warns_and_retunes(tmp_path):
+    """A parseable file whose matching ROW is missing required fields is
+    equally tolerated: warn, ignore the row, sweep, rewrite."""
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=2)
+    x_shape, dy_shape = _shapes(1, 8, 4, 4, 4)
+    cache = tmp_path / "tile_cache.json"
+    calls = []
+
+    def factory(spec_, x_s, dy_s):
+        def run(plan):
+            calls.append(plan)
+            return None
+        return run
+
+    kw = dict(x_shape=x_shape, dy_shape=dy_shape, mode="autotune",
+              runner_factory=factory, tile_cache_path=cache)
+    tiling._MEM_CACHE.clear()
+    good = tiling.plan_tiles("filter_grad", spec, **kw)
+    (key, rec), = json.loads(cache.read_text()).items()
+    cache.write_text(json.dumps({key: {"us": 1.0}}))   # fields gone
+    tiling._MEM_CACHE.clear()
+    n = len(calls)
+    with pytest.warns(RuntimeWarning, match="malformed autotune tile"):
+        plan = tiling.plan_tiles("filter_grad", spec, **kw)
+    assert len(calls) > n, "malformed row should re-sweep"
+    assert plan.source == "autotune"
+    assert plan.cin_tile == good.cin_tile
