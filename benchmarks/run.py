@@ -17,6 +17,10 @@ the wall-clock microbenchmarks and the (arch x shape) roofline table.
         # ratios, each re-timed in its own forced-device subprocess)
   PYTHONPATH=src python -m benchmarks.run --filter shufflenet
         # single-row rerun (substring match; never rewrites the JSON)
+  PYTHONPATH=src python -m benchmarks.run --filter strategy=implicit_gemm
+        # same, with every pallas launch PINNED to one kernel strategy
+        # (phase | implicit_gemm | auto) via ECOFLOW_STRATEGY; combine
+        # with a name substring as strategy=NAME,SUBSTR
 
 Output format: ``name,value,derived`` CSV rows (derived carries the
 paper's reference number so the reproduction delta is visible).
@@ -53,7 +57,11 @@ def main() -> None:
     ap.add_argument("--filter", metavar="SUBSTR", default=None,
                     help="run only conv-backend rows whose case name "
                          "contains SUBSTR (cheap single-row rerun during "
-                         "autotuning; never rewrites BENCH_conv.json)")
+                         "autotuning; never rewrites BENCH_conv.json). "
+                         "A `strategy=NAME` selector (optionally "
+                         "`strategy=NAME,SUBSTR`) pins every pallas "
+                         "launch to one kernel strategy -- phase | "
+                         "implicit_gemm | auto -- for the rerun")
     args = ap.parse_args()
 
     if args.smoke or args.delta_gate:
@@ -69,10 +77,24 @@ def main() -> None:
         return
 
     if args.filter is not None:
+        name_filter = args.filter
+        if name_filter.startswith("strategy="):
+            # Pin the kernel strategy BEFORE importing wallclock (which
+            # imports the backends): the env is read per plan_strategy
+            # call, but setting it first keeps even import-time planning
+            # consistent.  "strategy=NAME,SUBSTR" also name-filters.
+            import os
+            sel, _, rest = name_filter[len("strategy="):].partition(",")
+            valid = ("phase", "implicit_gemm", "auto")
+            if sel not in valid:
+                raise SystemExit(
+                    f"--filter strategy={sel!r}: expected one of {valid}")
+            os.environ["ECOFLOW_STRATEGY"] = sel
+            name_filter = rest            # "" matches every row
         from benchmarks import wallclock
         print(f"# === wall-clock: conv backends (filter={args.filter!r}; "
               "JSON not rewritten) ===")
-        _emit(wallclock.conv_backend_bench(name_filter=args.filter))
+        _emit(wallclock.conv_backend_bench(name_filter=name_filter))
         return
 
     from benchmarks import paper_tables as pt

@@ -21,6 +21,7 @@ the useful-MAC fraction from the analytical model for cross-checking.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import pathlib
@@ -359,15 +360,40 @@ def _train_step_fns(kind, cfg, backends, rng, fuse_epilogue=False,
 def _plan_dict(op, spec, x_shape, dy_shape, epilogue=None):
     """The planner's decision for one (op, geometry) -- recorded per
     BENCH_conv.json row so the perf trajectory is attributable to the
-    tiling that produced it."""
+    tiling AND the kernel strategy that produced it (`strategy` is the
+    `plan_strategy` pick; "phase" for every op implicit-GEMM does not
+    cover)."""
     from repro.kernels import tiling
-    plan = tiling.plan_tiles(op, spec, x_shape=x_shape, dy_shape=dy_shape,
-                             interpret=jax.default_backend() != "tpu",
-                             epilogue=epilogue)
+    strategy, plan = tiling.plan_strategy(
+        op, spec, x_shape=x_shape, dy_shape=dy_shape,
+        interpret=jax.default_backend() != "tpu", epilogue=epilogue)
     return {"cin_tile": plan.cin_tile, "cout_tile": plan.cout_tile,
             "spatial_tile": plan.spatial_tile,
             "tap_unroll": plan.tap_unroll,
-            "phase_unroll": plan.phase_unroll, "source": plan.source}
+            "phase_unroll": plan.phase_unroll, "source": plan.source,
+            "strategy": strategy}
+
+
+def _race_input_grad(dy, w, spec, n_out, bias=None, epilogue=None,
+                     iters=5, warmup=1):
+    """Time the input gradient under BOTH forced kernel strategies
+    (interleaved, same methodology as the backend arms) and name the
+    measured winner -- the per-geometry ground truth the planner's
+    `strategy` pick is judged against in BENCH_conv.json."""
+    from repro.kernels import ops as kops
+    fns = {}
+    for strategy in ("phase", "implicit_gemm"):
+        f = jax.jit(functools.partial(
+            kops.tconv_phase, stride=spec.stride, padding=spec.padding,
+            n_out=n_out, dilation=spec.dilation, epilogue=epilogue,
+            strategy=strategy))
+        if bias is None:
+            fns[strategy] = lambda f=f: f(dy, w)
+        else:
+            fns[strategy] = lambda f=f: f(dy, w, bias=bias)
+    t = _time_interleaved(fns, iters=iters, warmup=warmup)
+    return ({k: round(v, 1) for k, v in t.items()},
+            min(t, key=t.get))
 
 
 def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
@@ -430,6 +456,15 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                    "backward": _plan_dict("backward", spec,
                                           x.shape, dy.shape)},
                "tconv_us": {}, "filter_grad_us": {}, "backward_us": {}}
+        # The planner's strategy pick for this geometry's input gradient,
+        # plus the measured per-strategy race it is judged against.
+        rec["strategy"] = rec["tiling"]["input_grad"]["strategy"]
+        race_us, rec["winner"] = _race_input_grad(
+            dy, w, spec, (N, N), iters=iters, warmup=warmup)
+        for strategy, us in race_us.items():
+            rec["tconv_us"][f"pallas_{strategy}"] = us
+            rows.append((f"wallclock.tconv.pallas_{strategy}.{name}",
+                         us, f"winner={rec['winner']}"))
         fns_t, fns_g, fns_b = {}, {}, {}
         for bname in backends:
             be = resolve_backend(bname)
@@ -486,6 +521,7 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                    "forward": _plan_dict("forward", spec, x.shape,
                                          (B, Oh, Ow, Co))},
                "dilated_forward_us": {}}
+        rec["strategy"] = rec["tiling"]["forward"]["strategy"]
         f_nai = jax.jit(lambda x_, w_: naive.dilated_forward_naive(
             x_, w_, stride=S, padding=P, dilation=D))
         fns_d = {"naive_materialized": lambda: f_nai(x, w)}
@@ -525,6 +561,13 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                        "input_grad", spec,
                        (B, n_out[0], n_out[1], Ci), dy.shape)},
                "input_grad_us": {}}
+        rec["strategy"] = rec["tiling"]["input_grad"]["strategy"]
+        race_us, rec["winner"] = _race_input_grad(
+            dy, w, spec, n_out, iters=iters, warmup=warmup)
+        for strategy, us in race_us.items():
+            rec["input_grad_us"][f"pallas_{strategy}"] = us
+            rows.append((f"wallclock.input_grad.pallas_{strategy}.{name}",
+                         us, f"winner={rec['winner']}"))
         outs, fns_i = {}, {}
         for bname in backends:
             be = resolve_backend(bname)
@@ -561,6 +604,8 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                    "backward": _plan_dict("backward", spec, x.shape,
                                           dy.shape, epilogue=ep)},
                "forward_ep_us": {}, "backward_ep_us": {}}
+        # Fused dual-gradient backward: phase-decomposed by design.
+        rec["strategy"] = rec["tiling"]["backward"]["strategy"]
         fns_f, fns_b, ys = {}, {}, {}
         for bname in backends:
             be = resolve_backend(bname)
@@ -621,6 +666,14 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                    "ct_backward": _plan_dict("ct_backward", spec, g_shape,
                                              dy.shape, epilogue=ep)},
                "tconv_ep_us": {}, "ct_backward_ep_us": {}}
+        rec["strategy"] = rec["tiling"]["input_grad"]["strategy"]
+        race_us, rec["winner"] = _race_input_grad(
+            dy, w, spec, n_out, bias=b, epilogue=ep,
+            iters=iters, warmup=warmup)
+        for strategy, us in race_us.items():
+            rec["tconv_ep_us"][f"pallas_{strategy}"] = us
+            rows.append((f"wallclock.tconv_ep.pallas_{strategy}.{name}",
+                         us, f"winner={rec['winner']}"))
         fns_t, fns_c, zs = {}, {}, {}
         for bname in backends:
             be = resolve_backend(bname)
@@ -662,6 +715,8 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
         rec = {"layer": name, "kind": kind, "config": cfg,
                "interpret_mode": jax.default_backend() != "tpu",
                "epilogue": "fused" if fuse else "none",
+               # per-layer geometries resolve through the planner's race
+               "strategy": "auto",
                "train_step_us": {}}
         fns_s = _train_step_fns(kind, cfg, backends, rng,
                                 fuse_epilogue=fuse)
@@ -687,6 +742,7 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                    "mesh": list(MULTIDEV_MESHES[n_dev]),
                    "interpret_mode": jax.default_backend() != "tpu",
                    "epilogue": "fused" if fuse else "none",
+                   "strategy": "auto",
                    "train_step_us": {}}
             t_s = _multidev_time(kind, cfg, fuse, n_dev, iters, warmup,
                                  backends=backends)
@@ -720,7 +776,12 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                      "`mdev-*` rows re-time the train step on a forced "
                      "host-platform device mesh (`n_devices`/`mesh`) "
                      "through the shard_map conv dispatch layer, one "
-                     "subprocess per device count",
+                     "subprocess per device count; `strategy` is the "
+                     "strategy planner's per-geometry pick (phase vs "
+                     "predicated implicit-GEMM; 'auto' on train rows "
+                     "where it resolves per layer) and `winner` the "
+                     "measured head-to-head of the two forced-strategy "
+                     "pallas_* arms on the input-grad families",
              "cases": records}, indent=2) + "\n")
         rows.append(("wallclock.conv_backend.json", str(path), ""))
     return rows
@@ -781,7 +842,11 @@ def delta_gate(threshold=1.5, iters=21, warmup=2):
     rows = conv_backend_bench(iters=iters, warmup=warmup,
                               write_json=False, records_out=records)
     failures, compared, skipped = [], 0, 0
-    timing_keys = set(_GATE_FIELDS) | {"tiling", "interpret_mode"}
+    # `strategy` (planner pick) and `winner` (measured race) are
+    # host/timing-dependent, not geometry -- like `tiling`, they must
+    # not trip the drift check when a model retune flips them.
+    timing_keys = set(_GATE_FIELDS) | {"tiling", "interpret_mode",
+                                       "strategy", "winner"}
     for rec in records:
         base = committed.get(rec["layer"])
         if base is None or base.get("interpret_mode") != \

@@ -118,6 +118,22 @@ def zero_mac_fraction(layer: ConvLayer, op: Op) -> float:
     return 1.0 - useful_macs(layer, op) / tot
 
 
+def predicated_lane_fraction(layer: ConvLayer) -> float:
+    """Masked-lane fraction of the implicit-GEMM input-gradient lowering
+    of this layer -- the flat `(B*Fh*Fw) x (K^2*M)` GEMM with an in-bound
+    predicate per lane (kernels/implicit_gemm.py).  Delegates to the same
+    `ecoflow.predicated_mac_fraction` closed form the strategy planner's
+    waste term uses (`kernels/tiling.py`), so the simulator's lane
+    accounting and the planner's race cannot drift apart.  Zero at
+    stride 1 / dilation 1, where the GEMM degenerates to the dense
+    correlation and every lane is useful."""
+    from repro.core.spec import ConvSpec
+    spec = ConvSpec.make(stride=layer.stride, padding=layer.padding,
+                         filter_shape=layer.k, dilation=layer.dilation)
+    return ecoflow.predicated_mac_fraction(
+        spec, (layer.n_out, layer.n_out))
+
+
 # --------------------------------------------------------------------------
 # Cycle model
 # --------------------------------------------------------------------------

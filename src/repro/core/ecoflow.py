@@ -355,3 +355,29 @@ def dconv_zero_mac_fraction(n: int, stride: int) -> float:
     used as the filter)."""
     dil = stride * (n - 1) + 1
     return 1.0 - (n * n) / (dil * dil)
+
+
+def predicated_mac_fraction(spec, out_size) -> float:
+    """Masked-lane fraction of the implicit-GEMM input-gradient lowering.
+
+    The implicit-GEMM strategy computes the input gradient as ONE flat
+    GEMM over all Fh x Fw output sites (the pre-padding-slice transposed
+    extent `spec.full_size`), with an in-bound predicate per (site, tap)
+    lane: tap (kx, ky) contributes to site (r, s) iff r - kx*Dh is a
+    non-negative multiple of Sh below Oh*Sh (and likewise for columns).
+    For EVERY tap exactly Oh sites per row axis satisfy the predicate
+    (r = kx*Dh + i*Sh, i < Oh, and the largest such r is
+    (Kh-1)*Dh + (Oh-1)*Sh = Fh - 1 -- always in range), so the masked
+    fraction is tap-independent and exact, not an average:
+
+        1 - (Oh * Ow) / (Fh * Fw)
+
+    This is the strategy planner's predicated-lane waste term
+    (`kernels/tiling.py`) and the per-layer lane-occupancy figure the
+    dataflow simulator reports (`dataflow_sim.predicated_lane_fraction`),
+    mirroring `tconv_zero_mac_fraction` for the materialized-zero path.
+    Zero at S == D == 1 (the GEMM degenerates to the dense correlation).
+    """
+    oh, ow = out_size
+    fh, fw = spec.full_size((oh, ow))
+    return 1.0 - (oh * ow) / (fh * fw)

@@ -20,7 +20,10 @@ under a name:
                           the baseline the benchmarks compare against.
   * ``pallas``         -- the fused single-launch Pallas TPU kernels
                           (`kernels/tconv_phase.py`,
-                          `kernels/dconv_filtergrad.py`); interpret mode
+                          `kernels/dconv_filtergrad.py`, and the
+                          predicated `kernels/implicit_gemm.py` the
+                          strategy planner races against the phase
+                          decomposition per geometry); interpret mode
                           off-TPU.  Tile extents are NOT pinned here:
                           every kernel resolves its tiling per geometry
                           through `kernels/tiling.py` (the old
@@ -525,10 +528,14 @@ def _ensure_default_backends() -> None:
                                   dilation=spec.dilation)
 
     def _pl_input_grad(dy, w, spec: ConvSpec, n_out):
-        # The unified (phase, tap) kernel handles ANY (stride, dilation)
-        # pair in one launch -- the stride-1 self-adjoint rotation special
-        # case and the strided+dilated XLA scatter fallback of earlier
-        # revisions both collapsed into it (see DESIGN.md Sec. 2.5).
+        # ONE launch for ANY (stride, dilation) pair, through the
+        # per-geometry STRATEGY planner: `tiling.plan_strategy` races the
+        # unified (phase, tap) decomposition against the predicated
+        # implicit-GEMM kernel and the wrapper launches the winner --
+        # both single-launch, so the jaxpr pins hold either way (see
+        # DESIGN.md Sec. 2.5 / 2.10).  Ops implicit-GEMM does not cover
+        # (forward, filter grad, the fused dual-gradient backwards below)
+        # fall back to phase decomposition inside the planner.
         from repro.kernels import ops as kops
         return kops.tconv_phase(dy, w, stride=spec.stride,
                                 padding=spec.padding, n_out=_pair(n_out),

@@ -46,6 +46,7 @@ from repro.kernels.dconv_backward import (conv_backward_pallas,
                                           tconv_backward_pallas)
 from repro.kernels.dconv_filtergrad import dconv_filter_grad_pallas
 from repro.kernels.dconv_forward import dconv_forward_pallas
+from repro.kernels.implicit_gemm import tconv_implicit_gemm_pallas
 from repro.kernels.tconv_phase import tconv_fused_pallas
 
 
@@ -63,22 +64,36 @@ def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128):
 
 def tconv_phase(dy: jax.Array, w: jax.Array, *, stride, padding,
                 n_out, dilation=(1, 1), bias=None,
-                epilogue=None) -> jax.Array:
-    """Fused zero-free transposed conv: one Pallas launch for all
-    (phase, tap) pairs of any (stride, dilation) geometry.
+                epilogue=None, strategy=None) -> jax.Array:
+    """Fused zero-free transposed conv / input gradient: ONE Pallas
+    launch for any (stride, dilation) geometry, through the strategy
+    planner -- `tiling.plan_strategy` races the phase decomposition
+    against the predicated implicit-GEMM kernel per geometry and this
+    wrapper launches whichever family the plan names (both preserve the
+    one-launch invariant and the epilogue contract).
 
     dy (B,Oh,Ow,Cout), w (Kh,Kw,Cin,Cout) -> dx (B,Nh,Nw,Cin).
-    `epilogue` / `bias` fuse act(scale * . + bias) onto each phase plane
+    `epilogue` / `bias` fuse act(scale * . + bias) onto the output
     in-kernel (bias over the OUTPUT channels Cin).
+    `strategy` pins "phase" | "implicit_gemm" | "auto" for this call
+    (None reads ECOFLOW_STRATEGY; benchmarks use the pin to time one
+    strategy without env juggling).
     """
     spec = ConvSpec.make(stride=stride, padding=padding,
                          filter_shape=(w.shape[0], w.shape[1]),
                          dilation=dilation)
     nh, nw = _pair(n_out)
-    plan = tiling.plan_tiles(
+    strategy, plan = tiling.plan_strategy(
         "input_grad", spec, x_shape=(dy.shape[0], nh, nw, w.shape[2]),
         dy_shape=dy.shape, itemsize=dy.dtype.itemsize,
-        interpret=_interpret(), epilogue=epilogue)
+        interpret=_interpret(), epilogue=epilogue, strategy=strategy)
+    if strategy == "implicit_gemm":
+        return tconv_implicit_gemm_pallas(
+            dy, w, stride=tuple(stride), padding=tuple(padding),
+            n_out=(nh, nw), dilation=tuple(dilation),
+            bias=bias, epilogue=epilogue,
+            cin_tile=plan.cin_tile, cout_tile=plan.cout_tile,
+            tap_unroll=plan.tap_unroll, interpret=_interpret())
     return tconv_fused_pallas(dy, w, stride=tuple(stride),
                               padding=tuple(padding), n_out=(nh, nw),
                               dilation=tuple(dilation),

@@ -28,6 +28,19 @@ Two modes:
     (`ECOFLOW_TILE_CACHE`, default ~/.cache/ecoflow/tile_cache.json) so a
     sweep is paid once per geometry per host.
 
+Beyond tiles, the planner picks the *strategy*: `plan_strategy` races the
+phase decomposition against the predicated implicit-GEMM formulation
+(kernels/implicit_gemm.py) per geometry and returns `(strategy,
+TilePlan)`.  The analytical race extends the tile score with a
+predicated-lane waste term -- the masked-MAC fraction of the flat GEMM,
+exact from the `ConvSpec` geometry via `ecoflow.predicated_mac_fraction`
+-- against the phase path's scheduled-tap count and host-side assembly
+traffic; autotune mode sweeps BOTH strategies' candidate sets through
+their registered runners.  `ECOFLOW_STRATEGY=phase|implicit_gemm|auto`
+forces or frees the choice per process (auto is the default), and the
+strategy is part of every cache key (memoized and on-disk), so a flip
+re-plans instead of serving a stale winner.  See DESIGN.md Sec. 2.10.
+
 The model's constraints encode the kernels' invariants rather than
 guessing at them:
 
@@ -58,6 +71,7 @@ import pathlib
 import warnings
 from typing import Callable, Dict, Optional
 
+from repro.core import ecoflow
 from repro.core.spec import ConvSpec, Epilogue
 
 # Fraction of a TPU core's ~16 MiB VMEM the planner budgets for one
@@ -80,6 +94,28 @@ STEP_COST_COMPILED = 1 << 12
 MAX_TAP_UNROLL_COMPILED = 16
 
 OPS = ("filter_grad", "forward", "input_grad", "backward", "ct_backward")
+
+# Kernel strategies the planner races per geometry.  "phase" is the
+# EcoFlow phase decomposition (every op family has a phase kernel);
+# "implicit_gemm" is the predicated flat-GEMM formulation
+# (kernels/implicit_gemm.py), currently implemented for the standalone
+# input gradient only -- the fused dual-gradient backward stays
+# phase-decomposed, and `plan_strategy` falls back per op.
+STRATEGIES = ("phase", "implicit_gemm")
+
+# Strategy-race weights, in traffic-equivalent bytes.  MAC_COST prices
+# one scheduled MXU MAC slot -- predicated (masked) implicit-GEMM lanes
+# and the phase path's ragged-slot padding both pay it.  Compiled MACs
+# flow through the 128x128 systolic array (cheap per slot but real:
+# high-waste geometries like AlexNet S=4 must lose the race); interpret
+# MACs run on the host BLAS behind a per-step dispatch that dominates,
+# so the slot price is lower.  ASSEMBLY_PASSES charges the phase path's
+# host-side residue interleave: the phase-major output tensor is
+# rematerialized ~3x by the pad/take/transpose/reshape chain
+# (assemble_phase_major) -- traffic the implicit-GEMM path never spends.
+MAC_COST_COMPILED = 1 / 32
+MAC_COST_INTERPRET = 1 / 64
+ASSEMBLY_PASSES = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -370,12 +406,44 @@ def _ct_backward_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1, ep=None):
     return ws, traffic, steps, g_blk + w_blk + dy_blk
 
 
+def _implicit_gemm_model(g: _Geom, ci_t, co_t, sp_t, u, pu=1, ep=None):
+    """kernels/implicit_gemm.py: grid (B, Cin_t, Cout_t, T/u); the dy
+    block is the UNPADDED (Oh, Ow, Co_t) error tile (resident across the
+    tap axis), the w block `u` flat taps' weights, the out block the full
+    (Fh, Fw, Ci_t) pre-slice extent accumulated over the sequential
+    (Cout_t, tap) axes.  The working set additionally carries the
+    in-VMEM zero-interleaved upsampled frame (extent Fh + Dh*(Kh-1) per
+    axis) and the per-tap fp32 window product -- the predicated lanes
+    live in VMEM, never in HBM traffic."""
+    kh, kw = g.spec.filter_shape
+    dh, dw = g.spec.dilation
+    t = kh * kw
+    fh, fw = g.spec.full_size((g.oh, g.ow))
+    uh, uw = fh + dh * (kh - 1), fw + dw * (kw - 1)
+    n_ci, n_co = _cdiv(g.cin, ci_t), _cdiv(g.cout, co_t)
+    dy_blk = g.oh * g.ow * co_t * g.itemsize
+    w_blk = u * co_t * ci_t * g.itemsize
+    out_blk = fh * fw * ci_t * 4
+    ws = 2 * (dy_blk + w_blk) + out_blk \
+        + uh * uw * co_t * g.itemsize + fh * fw * co_t * 4 \
+        + fh * fw * ci_t * 4
+    traffic = (g.b * n_ci * n_co * dy_blk
+               + g.b * t * n_ci * n_co * co_t * ci_t * g.itemsize
+               + g.b * fh * fw * n_ci * ci_t * 4)
+    if ep is not None and ep.bias:
+        ws += 2 * ci_t * 4
+        traffic += n_ci * ci_t * 4
+    steps = g.b * n_ci * n_co * _cdiv(t, u)
+    return ws, traffic, steps, dy_blk + w_blk
+
+
 _MODELS: Dict[str, Callable] = {
     "filter_grad": _filter_grad_model,
     "forward": _forward_model,
     "input_grad": _input_grad_model,
     "backward": _backward_model,
     "ct_backward": _ct_backward_model,
+    "input_grad:implicit_gemm": _implicit_gemm_model,
 }
 
 _GRID_ORDERS = {
@@ -384,14 +452,33 @@ _GRID_ORDERS = {
     "input_grad": ("batch", "phase", "cin", "cout", "tap"),
     "backward": ("cin", "batch", "phase", "cout", "tap"),
     "ct_backward": ("batch", "cin", "cout", "tap"),
+    "input_grad:implicit_gemm": ("batch", "cin", "cout", "tap"),
 }
 
 
-def _candidates(op: str, g: _Geom):
-    """The candidate (ci_t, co_t, sp_t, u, pu) lattice for one op
-    family.  `u` ranges over divisors of the op's tap-axis extent:
-    Kh*Kw for the tap-on-grid kernels, KP*KQ packed taps per phase for
-    the unified input gradient -- whose phase axis additionally unrolls
+def _model_key(op: str, strategy: str = "phase") -> str:
+    """`_MODELS` / `_GRID_ORDERS` key for an (op, strategy) pair.  Phase
+    keys are the bare op names (every pre-strategy call site and test
+    keeps working); non-phase strategies suffix the op."""
+    return op if strategy == "phase" else f"{op}:{strategy}"
+
+
+def strategy_supported(op: str, strategy: str) -> bool:
+    """Whether `strategy` has a kernel family for `op`.  Phase covers
+    every op; implicit-GEMM currently covers the standalone input
+    gradient only (the fused dual-gradient backward stays
+    phase-decomposed), so `plan_strategy` falls back per op."""
+    if strategy == "phase":
+        return True
+    return _model_key(op, strategy) in _MODELS
+
+
+def _candidates(op: str, g: _Geom, strategy: str = "phase"):
+    """The candidate (ci_t, co_t, sp_t, u, pu) lattice for one
+    (op, strategy) family.  `u` ranges over divisors of the family's
+    tap-axis extent: Kh*Kw for the tap-on-grid kernels (including the
+    implicit-GEMM flat-tap grid), KP*KQ packed taps per phase for the
+    unified phase input gradient -- whose phase axis additionally unrolls
     by `pu` (a divisor of the non-empty phase count).  Only the
     filter-grad grid spatially tiles."""
     kh, kw = g.spec.filter_shape
@@ -400,7 +487,7 @@ def _candidates(op: str, g: _Geom):
     co_cands = _channel_candidates(g.cout)
     sp_cands = _spatial_candidates(g.oh) if op == "filter_grad" \
         else (g.oh,)
-    if op in ("input_grad", "backward"):
+    if op in ("input_grad", "backward") and strategy == "phase":
         kp, kq = g.spec.taps_per_phase
         tph, tpw = g.spec.n_tap_phases
         u_cands = _divisors(kp * kq)
@@ -417,10 +504,10 @@ def _candidates(op: str, g: _Geom):
 
 
 def _score(op: str, g: _Geom, ci_t, co_t, sp_t, u, pu, budget, interpret,
-           ep=None):
+           ep=None, strategy: str = "phase"):
     """Modeled cost of one candidate, or None if it violates a constraint."""
-    ws, traffic, steps, step_blk = _MODELS[op](g, ci_t, co_t, sp_t, u, pu,
-                                               ep=ep)
+    ws, traffic, steps, step_blk = _MODELS[_model_key(op, strategy)](
+        g, ci_t, co_t, sp_t, u, pu, ep=ep)
     if ws > budget:
         return None
     if not interpret and pu * u > MAX_TAP_UNROLL_COMPILED:
@@ -433,14 +520,18 @@ def _score(op: str, g: _Geom, ci_t, co_t, sp_t, u, pu, budget, interpret,
     return traffic + steps * STEP_COST_COMPILED
 
 
-def _analytical_plan(op: str, spec: ConvSpec, x_shape, dy_shape,
+def _analytical_best(op: str, spec: ConvSpec, x_shape, dy_shape,
                      itemsize: int, budget: int, interpret: bool,
-                     ep: Optional[Epilogue] = None) -> TilePlan:
+                     ep: Optional[Epilogue] = None,
+                     strategy: str = "phase"):
+    """Best candidate for one (op, strategy): (TilePlan, tile cost), with
+    cost None when nothing fit and the minimum-footprint fallback was
+    taken (the strategy race treats that as a loss)."""
     g = _geom(op, spec, x_shape, dy_shape, itemsize)
     best, best_cost = None, None
-    for ci_t, co_t, sp_t, u, pu in _candidates(op, g):
+    for ci_t, co_t, sp_t, u, pu in _candidates(op, g, strategy):
         cost = _score(op, g, ci_t, co_t, sp_t, u, pu, budget, interpret,
-                      ep=ep)
+                      ep=ep, strategy=strategy)
         if cost is None:
             continue
         # Deterministic tie-break: prefer larger tiles, then larger unroll
@@ -451,9 +542,66 @@ def _analytical_plan(op: str, spec: ConvSpec, x_shape, dy_shape,
     if best is None:   # nothing fits: fall back to the smallest candidate
         best = (min(8, g.cin), min(8, g.cout), 1, 1, 1)
     ci_t, co_t, sp_t, u, pu = best
-    return TilePlan(cin_tile=ci_t, cout_tile=co_t, spatial_tile=sp_t,
+    plan = TilePlan(cin_tile=ci_t, cout_tile=co_t, spatial_tile=sp_t,
                     tap_unroll=u, phase_unroll=pu,
-                    grid_order=_GRID_ORDERS[op], source="analytical")
+                    grid_order=_GRID_ORDERS[_model_key(op, strategy)],
+                    source="analytical")
+    return plan, (None if best_cost is None else best_cost[0])
+
+
+def _analytical_plan(op: str, spec: ConvSpec, x_shape, dy_shape,
+                     itemsize: int, budget: int, interpret: bool,
+                     ep: Optional[Epilogue] = None,
+                     strategy: str = "phase") -> TilePlan:
+    plan, _ = _analytical_best(op, spec, x_shape, dy_shape, itemsize,
+                               budget, interpret, ep, strategy)
+    return plan
+
+
+def _strategy_race(op: str, spec: ConvSpec, x_shape, dy_shape,
+                   itemsize: int, budget: int, interpret: bool,
+                   ep: Optional[Epilogue] = None) -> str:
+    """Analytical strategy decision for one geometry: each strategy's
+    best tile cost plus what the tile score cannot see --
+
+      * implicit-GEMM pays its predicated lanes: the useful MAC count
+        inflated by `1 / (1 - predicated_mac_fraction)` (exact from the
+        ConvSpec geometry -- the flat GEMM schedules Fh*Fw rows for
+        Oh*Ow useful sites, every tap);
+      * phase pays its scheduled taps (ragged-phase padding slots
+        included: T * TK >= Kh*Kw) and the host-side residue-interleave
+        assembly (ASSEMBLY_PASSES rematerializations of the phase-major
+        output tensor, traffic implicit-GEMM never spends).
+
+    Crossover intuition (DESIGN.md Sec. 2.10): high-stride geometries
+    (AlexNet S=4/S=8) waste >90% of the flat GEMM's lanes -> phase wins;
+    low-stride small-filter geometries (ResNet/ShuffleNet S=2 K=3, any
+    S=1 dilated input grad) keep the waste near the 4x floor where the
+    flat GEMM's single unpadded residency + zero assembly traffic wins.
+    """
+    g = _geom(op, spec, x_shape, dy_shape, itemsize)
+    kh, kw = spec.filter_shape
+    useful = g.b * g.oh * g.ow * kh * kw * g.cin * g.cout
+    mac_w = MAC_COST_INTERPRET if interpret else MAC_COST_COMPILED
+
+    _, phase_cost = _analytical_best(op, spec, x_shape, dy_shape, itemsize,
+                                     budget, interpret, ep, "phase")
+    _, ig_cost = _analytical_best(op, spec, x_shape, dy_shape, itemsize,
+                                  budget, interpret, ep, "implicit_gemm")
+    if ig_cost is None:
+        return "phase"
+    if phase_cost is None:
+        return "implicit_gemm"
+
+    t, tk, ho, wo, _, _ = _phase_frame(spec, g.oh, g.ow)
+    phase_macs = g.b * t * tk * ho * wo * g.cin * g.cout
+    assembly = ASSEMBLY_PASSES * g.b * t * ho * wo * g.cin * 4
+    waste = ecoflow.predicated_mac_fraction(spec, (g.oh, g.ow))
+    ig_macs = useful / max(1e-12, 1.0 - waste)
+
+    phase_total = phase_cost + mac_w * phase_macs + assembly
+    ig_total = ig_cost + mac_w * ig_macs
+    return "implicit_gemm" if ig_total < phase_total else "phase"
 
 
 # ---------------------------------------------------------------------------
@@ -461,14 +609,17 @@ def _analytical_plan(op: str, spec: ConvSpec, x_shape, dy_shape,
 # ---------------------------------------------------------------------------
 
 # Each kernel module registers `runner(plan) -> seconds` factories here at
-# import (keyed by op); tiling itself never imports the kernels, so there
-# is no cycle.  A runner factory receives the concrete geometry and
-# returns a callable that executes the kernel at one candidate plan.
-_RUNNERS: Dict[str, Callable] = {}
+# import (keyed by (op, strategy); the strategy defaults to "phase" so
+# pre-strategy registrations keep working); tiling itself never imports
+# the kernels, so there is no cycle.  A runner factory receives the
+# concrete geometry and returns a callable that executes the kernel at
+# one candidate plan.
+_RUNNERS: Dict[tuple, Callable] = {}
 
 
-def register_autotune_runner(op: str, factory: Callable) -> None:
-    _RUNNERS[op] = factory
+def register_autotune_runner(op: str, factory: Callable,
+                             strategy: str = "phase") -> None:
+    _RUNNERS[(op, strategy)] = factory
 
 
 def _median_time_us(fn, iters: int = 5, warmup: int = 2) -> float:
@@ -500,7 +651,8 @@ def cache_path() -> pathlib.Path:
 
 
 def _cache_key(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
-               budget, interpret, ep: Optional[Epilogue] = None) -> str:
+               budget, interpret, ep: Optional[Epilogue] = None,
+               strategy: str = "phase") -> str:
     """Execution mode and budget are part of the key: an interpret-tuned
     winner (which may unroll far past MAX_TAP_UNROLL_COMPILED) must never
     be served to a compiled TPU run, and a tightened VMEM budget must
@@ -509,10 +661,15 @@ def _cache_key(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
     The epilogue descriptor is part of the key too (`|ep:<tag>`): an
     epilogue changes the kernel's block set (bias/y/z inputs, the db
     output) and hence which candidates fit and win, so an epilogue-free
-    winner must never be replayed for an epilogue-bearing launch.  Rows
-    written before the epilogue slot existed carry no suffix; the disk
-    lookup falls back to those legacy keys only for the `ep:none` case,
-    whose candidate set they were actually swept against."""
+    winner must never be replayed for an epilogue-bearing launch.
+
+    So is the strategy (`|st:<strategy>`, including the "auto" race whose
+    row records the measured winner): the two strategies' candidate sets
+    and kernels differ, so a phase-swept winner must never be replayed
+    for an implicit-GEMM launch -- and an `ECOFLOW_STRATEGY` flip must
+    re-plan, not serve the stale row.  Rows written before a dimension
+    existed carry no suffix for it; `_legacy_cache_keys` reconstructs the
+    older key forms and gates which lookups may fall back to them."""
     sh, sw = spec.stride
     ph, pw = spec.padding
     kh, kw = spec.filter_shape
@@ -523,17 +680,33 @@ def _cache_key(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
     tag = "none" if ep is None else ep.tag
     return (f"{op}|b{b}|n{nh}x{nw}|o{oh}x{ow}|k{kh}x{kw}|s{sh}x{sw}"
             f"|p{ph}x{pw}|d{dh}x{dw}|ci{cin}|co{cout}|w{itemsize}"
-            f"|vm{budget}|{mode}|ep:{tag}")
+            f"|vm{budget}|{mode}|st:{strategy}|ep:{tag}")
 
 
-def _legacy_cache_key(key: str) -> Optional[str]:
-    """The pre-epilogue form of `key` (no `|ep:` suffix), or None when the
-    epilogue is non-trivial and legacy rows must not be consulted."""
-    base, _, tag = key.rpartition("|ep:")
-    return base if tag == "none" else None
+def _legacy_cache_keys(key: str) -> tuple:
+    """Older key forms of `key`, most recent generation first:
+
+      * pre-strategy rows (`...|ep:<tag>`, no `|st:`) -- swept against
+        the phase kernels, so served ONLY for `st:phase` lookups;
+      * pre-epilogue rows (no suffix at all) -- additionally gated to
+        `ep:none`, whose candidate set they were actually swept against.
+
+    Empty for implicit-GEMM / auto lookups: no legacy sweep ever timed
+    those kernels."""
+    head, _, tag = key.rpartition("|ep:")
+    stem, _, st = head.rpartition("|st:")
+    if st != "phase":
+        return ()
+    legacy = (f"{stem}|ep:{tag}",)
+    if tag == "none":
+        legacy += (stem,)
+    return legacy
 
 
 _MEM_CACHE: Dict[str, TilePlan] = {}
+# Strategy the "auto" autotune race picked, keyed by the |st:auto cache
+# key (the TilePlan itself lives in _MEM_CACHE under the same key).
+_MEM_STRATEGY: Dict[str, str] = {}
 
 
 def _load_disk_cache(path: pathlib.Path) -> dict:
@@ -615,12 +788,39 @@ def _call_runner_factory(factory: Callable, spec: ConvSpec, x_shape,
     return factory(spec, x_shape, dy_shape)
 
 
+def _sweep(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize, budget,
+           interpret, factory: Callable, ep: Optional[Epilogue],
+           strategy: str):
+    """Time every feasible candidate of one (op, strategy) through its
+    runner: (best TilePlan, best us), or (None, inf) when every candidate
+    failed to lower/run."""
+    g = _geom(op, spec, x_shape, dy_shape, itemsize)
+    run = _call_runner_factory(factory, spec, x_shape, dy_shape, ep)
+    best_plan, best_us = None, math.inf
+    for ci_t, co_t, sp_t, u, pu in _candidates(op, g, strategy):
+        if _score(op, g, ci_t, co_t, sp_t, u, pu, budget,
+                  interpret, ep=ep, strategy=strategy) is None:
+            continue
+        plan = TilePlan(cin_tile=ci_t, cout_tile=co_t, spatial_tile=sp_t,
+                        tap_unroll=u, phase_unroll=pu,
+                        grid_order=_GRID_ORDERS[_model_key(op, strategy)],
+                        source="autotune")
+        try:
+            us = _median_time_us(lambda p=plan: run(p))
+        except Exception:   # candidate failed to lower/run: skip it
+            continue
+        if us < best_us:
+            best_plan, best_us = plan, us
+    return best_plan, best_us
+
+
 def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
                    budget, interpret, path: pathlib.Path,
                    runner_factory: Optional[Callable],
-                   ep: Optional[Epilogue] = None) -> TilePlan:
+                   ep: Optional[Epilogue] = None,
+                   strategy: str = "phase") -> TilePlan:
     key = _cache_key(op, spec, x_shape, dy_shape, itemsize, budget,
-                     interpret, ep)
+                     interpret, ep, strategy)
     if key in _MEM_CACHE:
         return _MEM_CACHE[key]
     disk = _load_disk_cache(path)
@@ -629,44 +829,84 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
         if plan is not None:
             _MEM_CACHE[key] = plan
             return plan
-    legacy = _legacy_cache_key(key)
-    if legacy is not None and legacy in disk:
-        # Row written before the epilogue slot existed; valid only for
-        # the epilogue-free candidate set (`_legacy_cache_key` gates).
-        plan = _plan_from_cache_rec(op, disk[legacy])
-        if plan is not None:
-            _MEM_CACHE[key] = plan
-            return plan
-    factory = runner_factory or _RUNNERS.get(op)
+    for legacy in _legacy_cache_keys(key):
+        if legacy in disk:
+            # Row written before the strategy / epilogue dimension
+            # existed; `_legacy_cache_keys` gates which lookups may be
+            # served one (phase-only, and ep:none for the oldest form).
+            plan = _plan_from_cache_rec(op, disk[legacy])
+            if plan is not None:
+                _MEM_CACHE[key] = plan
+                return plan
+    factory = runner_factory or _RUNNERS.get((op, strategy))
     if factory is None:
         # No runner registered: analytical fallback, through the memo
         # (a distinct mode string so a later call with the runner's
         # module imported still sweeps instead of replaying this plan).
         return _planned(op, spec, x_shape, dy_shape, itemsize, budget,
-                        "autotune:analytical-fallback", interpret, ep)
-    g = _geom(op, spec, x_shape, dy_shape, itemsize)
-    run = _call_runner_factory(factory, spec, x_shape, dy_shape, ep)
-    best_plan, best_us = None, math.inf
-    for ci_t, co_t, sp_t, u, pu in _candidates(op, g):
-        if _score(op, g, ci_t, co_t, sp_t, u, pu, budget,
-                  interpret, ep=ep) is None:
-            continue
-        plan = TilePlan(cin_tile=ci_t, cout_tile=co_t, spatial_tile=sp_t,
-                        tap_unroll=u, phase_unroll=pu,
-                        grid_order=_GRID_ORDERS[op], source="autotune")
-        try:
-            us = _median_time_us(lambda p=plan: run(p))
-        except Exception:   # candidate failed to lower/run: skip it
-            continue
-        if us < best_us:
-            best_plan, best_us = plan, us
+                        "autotune:analytical-fallback", interpret, ep,
+                        strategy)
+    best_plan, best_us = _sweep(op, spec, x_shape, dy_shape, itemsize,
+                                budget, interpret, factory, ep, strategy)
     if best_plan is None:   # every candidate failed to lower/run
         return _planned(op, spec, x_shape, dy_shape, itemsize, budget,
-                        "autotune:analytical-fallback", interpret, ep)
-    disk[key] = dict(best_plan.as_dict(), us=round(best_us, 1))
+                        "autotune:analytical-fallback", interpret, ep,
+                        strategy)
+    disk[key] = dict(best_plan.as_dict(), us=round(best_us, 1),
+                     strategy=strategy)
     _store_disk_cache(path, disk)
     _MEM_CACHE[key] = best_plan
     return best_plan
+
+
+def _autotune_strategy(op: str, spec: ConvSpec, x_shape, dy_shape,
+                       itemsize, budget, interpret, path: pathlib.Path,
+                       runner_factory: Optional[Callable],
+                       ep: Optional[Epilogue]):
+    """Empirical strategy race: sweep BOTH strategies' candidate sets
+    through their registered runners, return (winning strategy, its best
+    TilePlan), and persist ONE row under the `|st:auto` key whose
+    `strategy` field records the measured winner.  An explicit
+    `runner_factory` stands in for the phase runner only (the
+    pre-strategy contract); implicit-GEMM always sweeps through its
+    registered runner.  Strategies with no runner are skipped; when none
+    has one, the race degrades to the analytical decision."""
+    key = _cache_key(op, spec, x_shape, dy_shape, itemsize, budget,
+                     interpret, ep, "auto")
+    if key in _MEM_CACHE and key in _MEM_STRATEGY:
+        return _MEM_STRATEGY[key], _MEM_CACHE[key]
+    disk = _load_disk_cache(path)
+    if key in disk:
+        rec = disk[key]
+        plan = _plan_from_cache_rec(op, rec)
+        st = rec.get("strategy") if isinstance(rec, dict) else None
+        if plan is not None and st in STRATEGIES:
+            _MEM_CACHE[key], _MEM_STRATEGY[key] = plan, st
+            return st, plan
+    best = None   # (us, strategy, plan)
+    for strategy in STRATEGIES:
+        if not strategy_supported(op, strategy):
+            continue
+        factory = _RUNNERS.get((op, strategy))
+        if factory is None and strategy == "phase":
+            factory = runner_factory
+        if factory is None:
+            continue
+        plan, us = _sweep(op, spec, x_shape, dy_shape, itemsize, budget,
+                          interpret, factory, ep, strategy)
+        if plan is not None and (best is None or us < best[0]):
+            best = (us, strategy, plan)
+    if best is None:   # no runners at all: analytical race + memoized plan
+        strategy = _auto_strategy(op, spec, x_shape, dy_shape, itemsize,
+                                  budget, interpret, ep)
+        return strategy, _planned(op, spec, x_shape, dy_shape, itemsize,
+                                  budget, "autotune:analytical-fallback",
+                                  interpret, ep, strategy)
+    us, strategy, plan = best
+    disk[key] = dict(plan.as_dict(), us=round(us, 1), strategy=strategy)
+    _store_disk_cache(path, disk)
+    _MEM_CACHE[key], _MEM_STRATEGY[key] = plan, strategy
+    return strategy, plan
 
 
 # ---------------------------------------------------------------------------
@@ -676,7 +916,8 @@ def _autotune_plan(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize,
 @functools.lru_cache(maxsize=4096)
 def _planned(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize: int,
              budget: int, mode: str, interpret: bool,
-             ep: Optional[Epilogue] = None) -> TilePlan:
+             ep: Optional[Epilogue] = None,
+             strategy: str = "phase") -> TilePlan:
     """Memoized analytical resolution.  `kernels/ops.py` re-resolves the
     plan on EVERY conv call (so env flips take effect on the next call,
     not the first trace), which previously re-ran the Python planner each
@@ -685,9 +926,24 @@ def _planned(op: str, spec: ConvSpec, x_shape, dy_shape, itemsize: int,
     `plan_tiles` BEFORE the lookup -- so flipping `ECOFLOW_VMEM_BUDGET`
     or `ECOFLOW_TILING` still re-plans instead of replaying a winner
     scored against stale constraints.  `ep` (a frozen `Epilogue`, or
-    None) keys too: the epilogue's extra blocks shift the working set."""
+    None) keys too: the epilogue's extra blocks shift the working set.
+    So does `strategy` (resolved from ECOFLOW_STRATEGY before the
+    lookup): the strategies' candidate sets and models differ, so a flip
+    re-plans instead of serving the other strategy's tiles."""
     return _analytical_plan(op, spec, x_shape, dy_shape, itemsize,
-                            budget, interpret, ep)
+                            budget, interpret, ep, strategy)
+
+
+@functools.lru_cache(maxsize=4096)
+def _auto_strategy(op: str, spec: ConvSpec, x_shape, dy_shape,
+                   itemsize: int, budget: int, interpret: bool,
+                   ep: Optional[Epilogue] = None) -> str:
+    """Memoized analytical strategy race (the `ECOFLOW_STRATEGY=auto`
+    default path, resolved per geometry on every conv call)."""
+    if not strategy_supported(op, "implicit_gemm"):
+        return "phase"
+    return _strategy_race(op, spec, x_shape, dy_shape, itemsize, budget,
+                          interpret, ep)
 
 
 def plan_cache_info():
@@ -738,3 +994,73 @@ def plan_tiles(op: str, spec: ConvSpec, *, x_shape, dy_shape,
                               epilogue)
     return _planned(op, spec, x_shape, dy_shape, itemsize, vmem_budget,
                     mode, interpret, epilogue)
+
+
+def plan_strategy(op: str, spec: ConvSpec, *, x_shape, dy_shape,
+                  itemsize: int = 4, vmem_budget: Optional[int] = None,
+                  interpret: bool = False, mode: Optional[str] = None,
+                  runner_factory: Optional[Callable] = None,
+                  tile_cache_path=None,
+                  epilogue: Optional[Epilogue] = None,
+                  strategy: Optional[str] = None
+                  ) -> tuple[str, TilePlan]:
+    """Select the kernel STRATEGY and its tiles for one launch:
+    `("phase" | "implicit_gemm", TilePlan)`.
+
+    Same contract and parameters as `plan_tiles` (which this subsumes --
+    `plan_tiles` is the strategy-pinned phase view), plus:
+
+    strategy -- "phase" | "implicit_gemm" | "auto" | None.  None reads
+                ECOFLOW_STRATEGY (default "auto").  "auto" races the two
+                strategies: analytically via the predicated-lane waste
+                term against the phase path's scheduled taps + assembly
+                traffic (`_strategy_race`), or empirically when
+                `mode="autotune"` -- both strategies' candidate sets
+                swept through their registered runners, the winner
+                persisted with a `strategy` field in its cache row.  A
+                forced strategy skips the race but still falls back to
+                phase decomposition for ops implicit-GEMM does not
+                support (everything except the standalone input
+                gradient; the fused dual-gradient backward stays
+                phase-decomposed).
+
+    The returned strategy names the kernel family the caller must
+    launch; the TilePlan is valid for that family only.  Every cache
+    layer (the analytical memo, the in-memory autotune cache, the JSON
+    rows) keys on the strategy, so an env flip re-plans.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+    x_shape, dy_shape = tuple(map(int, x_shape)), tuple(map(int, dy_shape))
+    if epilogue is not None and epilogue.is_identity:
+        epilogue = None
+    if strategy is None:
+        strategy = os.environ.get("ECOFLOW_STRATEGY", "auto")
+    if strategy not in STRATEGIES + ("auto",):
+        raise ValueError(f"unknown strategy {strategy!r} (set explicitly "
+                         f"or via ECOFLOW_STRATEGY); expected one of "
+                         f"{STRATEGIES + ('auto',)}")
+    if strategy != "phase" and not strategy_supported(op, "implicit_gemm"):
+        strategy = "phase"   # per-op fallback: no implicit-GEMM kernel
+    if vmem_budget is None:
+        vmem_budget = int(os.environ.get("ECOFLOW_VMEM_BUDGET",
+                                         DEFAULT_VMEM_BUDGET))
+    if mode is None:
+        mode = os.environ.get("ECOFLOW_TILING", "analytical")
+    if mode == "autotune":
+        path = pathlib.Path(tile_cache_path) if tile_cache_path \
+            else cache_path()
+        if strategy == "auto":
+            return _autotune_strategy(op, spec, x_shape, dy_shape,
+                                      itemsize, vmem_budget, interpret,
+                                      path, runner_factory, epilogue)
+        return strategy, _autotune_plan(op, spec, x_shape, dy_shape,
+                                        itemsize, vmem_budget, interpret,
+                                        path, runner_factory, epilogue,
+                                        strategy)
+    if strategy == "auto":
+        strategy = _auto_strategy(op, spec, x_shape, dy_shape, itemsize,
+                                  vmem_budget, interpret, epilogue)
+    return strategy, _planned(op, spec, x_shape, dy_shape, itemsize,
+                              vmem_budget, mode, interpret, epilogue,
+                              strategy)

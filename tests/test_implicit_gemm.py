@@ -1,0 +1,303 @@
+"""Predicated implicit-GEMM input-gradient family (DESIGN.md Sec. 2.10).
+
+Property-based parity grid of `tconv_implicit_gemm_pallas` against the
+reference adjoint, the dense `xla_zero_free` decomposition, and the
+pallas phase kernel across (stride, dilation, K, ragged channels, B > 1)
+-- standalone transposed-conv forward AND the input gradient inside a
+full `jax.grad` -- plus the structural pins the one-launch invariant
+rests on: exactly ONE `pallas_call`, no scatter, no `rhs_dilation` conv
+anywhere outside the kernel (the predicate is realized structurally
+in-register; zeros exist only in VMEM, never in HBM), and the strategy
+planner's analytical crossover + autotune override on the bench
+geometries.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import conv as cconv
+from repro.core import ecoflow
+from repro.core.spec import ConvSpec, Epilogue
+from repro.kernels import ops as kops
+from repro.kernels import tiling
+from repro.kernels.implicit_gemm import tconv_implicit_gemm_pallas
+from repro.kernels.tconv_phase import tconv_fused_pallas
+
+from conftest import (assert_allclose, count_pallas_calls,
+                      walk_eqns_outside_pallas)
+
+
+def _case(seed, B, O, K, S, P, D, Ci, Co, slack=0):
+    rng = np.random.default_rng(seed)
+    spec = ConvSpec.make(stride=S, padding=P, filter_shape=K, dilation=D)
+    nh, nw = spec.input_size((O, O))
+    nh, nw = nh + slack, nw + slack
+    dy = jnp.asarray(rng.normal(size=(B, O, O, Co)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, K, Ci, Co)), jnp.float32)
+    return spec, dy, w, (nh, nw)
+
+
+# ---------------------------------------------------------------------------
+# parity grid
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), s=st.integers(1, 4),
+       d=st.integers(1, 3), k=st.integers(1, 4), p=st.integers(0, 1),
+       b=st.integers(1, 3), ci=st.sampled_from([3, 5, 8]),
+       co=st.sampled_from([3, 4, 7]), o=st.integers(2, 5),
+       slack=st.integers(0, 2))
+def test_implicit_gemm_vs_phase_and_reference(seed, s, d, k, p, b, ci,
+                                              co, o, slack):
+    if p >= ecoflow_min_pad_exclusive(k, d):
+        p = 0
+    spec, dy, w, n_out = _case(seed, b, o, k, s, p, d, ci, co,
+                               slack=min(slack, s - 1))
+    want_ref = ecoflow.transposed_conv_zero_free(
+        dy, w, stride=spec.stride, padding=spec.padding, n_out=n_out,
+        dilation=spec.dilation)
+    want_phase = tconv_fused_pallas(
+        dy, w, stride=spec.stride, padding=spec.padding, n_out=n_out,
+        dilation=spec.dilation, interpret=True)
+    got = tconv_implicit_gemm_pallas(
+        dy, w, stride=spec.stride, padding=spec.padding, n_out=n_out,
+        dilation=spec.dilation, cin_tile=min(4, ci), cout_tile=min(4, co),
+        tap_unroll=min(3, k * k), interpret=True)
+    assert_allclose(got, want_ref, rtol=1e-3, atol=1e-3)
+    assert_allclose(got, want_phase, rtol=1e-3, atol=1e-3)
+
+
+def ecoflow_min_pad_exclusive(k, d):
+    """Largest pad p with full_size still positive for an O>=2 output at
+    any stride: keep p below the dilated half-filter so the geometry
+    stays valid across the sampled grid."""
+    return max(1, (d * (k - 1) + 1) // 2 + 1)
+
+
+@pytest.mark.parametrize("s,d,k,p", [(2, 1, 3, 1), (4, 1, 11, 2),
+                                     (1, 2, 3, 1), (2, 1, 4, 1),
+                                     (3, 2, 3, 0)])
+def test_input_grad_parity_through_jax_grad(s, d, k, p):
+    """jax.grad through the pallas backend under a FORCED implicit-GEMM
+    strategy equals the reference gradients -- the strategy routing sits
+    inside the conv custom-VJP without touching its contract."""
+    rng = np.random.default_rng(7)
+    spec = ConvSpec.make(stride=s, padding=p, filter_shape=k, dilation=d)
+    n = spec.input_size((4, 4))[0]
+    x = jnp.asarray(rng.normal(size=(2, n, n, 5)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, k, 5, 6)), jnp.float32)
+
+    def loss(backend):
+        def f(x_, w_):
+            y = cconv.ecoflow_conv(x_, w_, s, p, backend, d)
+            return jnp.sum(y * jnp.cos(y))
+        return f
+
+    gx_r, gw_r = jax.grad(loss("reference"), argnums=(0, 1))(x, w)
+    strategies = [None, "implicit_gemm", "phase"]
+    for strategy in strategies:
+        plan_kw = {} if strategy is None else {"strategy": strategy}
+        orig = kops.tconv_phase
+        try:
+            if strategy is not None:
+                def pinned(*a, **kw):
+                    kw["strategy"] = strategy
+                    return orig(*a, **kw)
+                kops.tconv_phase = pinned
+            gx_p, gw_p = jax.grad(loss("pallas"), argnums=(0, 1))(x, w)
+        finally:
+            kops.tconv_phase = orig
+        assert_allclose(gx_p, gx_r, rtol=1e-3, atol=1e-3)
+        assert_allclose(gw_p, gw_r, rtol=1e-3, atol=1e-3)
+
+
+def test_epilogue_parity_both_strategies(rng):
+    """The fused act(scale * tconv + bias) epilogue produces identical
+    results through both kernel families."""
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=3)
+    n_out = spec.input_size((4, 4))
+    dy = jnp.asarray(rng.normal(size=(2, 4, 4, 6)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 5, 6)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(5,)), jnp.float32)
+    for ep in (Epilogue(activation="relu", bias=True),
+               Epilogue(activation="tanh", scale=0.5),
+               Epilogue(activation="leaky_relu", bias=True, scale=2.0)):
+        bias = b if ep.bias else None
+        kw = dict(stride=(2, 2), padding=(1, 1), n_out=n_out,
+                  dilation=(1, 1), bias=bias, epilogue=ep, interpret=True)
+        want = tconv_fused_pallas(dy, w, **kw)
+        got = tconv_implicit_gemm_pallas(dy, w, cin_tile=3, cout_tile=3,
+                                         tap_unroll=3, **kw)
+        assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_bf16_output_dtype():
+    """The kernel accumulates fp32 and casts back to the operand dtype."""
+    rng = np.random.default_rng(11)
+    dy = jnp.asarray(rng.normal(size=(1, 4, 4, 4)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 4)), jnp.bfloat16)
+    out = tconv_implicit_gemm_pallas(dy, w, stride=(2, 2), padding=(1, 1),
+                                     n_out=(7, 7), interpret=True)
+    assert out.dtype == jnp.bfloat16
+    want = tconv_fused_pallas(dy, w, stride=(2, 2), padding=(1, 1),
+                              n_out=(7, 7), interpret=True)
+    assert_allclose(out.astype(jnp.float32), want.astype(jnp.float32),
+                    rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# structural pins
+# ---------------------------------------------------------------------------
+
+def _structural_pins(fn, *args):
+    """ONE pallas_call; no scatter and no rhs-dilated conv outside it --
+    the predicate is structural (in-register zero interleave), never a
+    materialized HBM dilation or an index scatter."""
+    assert count_pallas_calls(fn, *args) == 1
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    for eqn in walk_eqns_outside_pallas(jaxpr.jaxpr):
+        assert "scatter" not in eqn.primitive.name, eqn.primitive.name
+        if eqn.primitive.name == "conv_general_dilated":
+            assert tuple(eqn.params.get("rhs_dilation")
+                         or (1, 1)) == (1, 1), eqn
+            assert tuple(eqn.params.get("lhs_dilation")
+                         or (1, 1)) == (1, 1), eqn
+
+
+@pytest.mark.parametrize("s,d,k", [(2, 1, 3), (4, 1, 11), (1, 2, 3),
+                                   (3, 2, 2)])
+def test_single_launch_no_scatter_no_dilated_conv(s, d, k):
+    rng = np.random.default_rng(5)
+    spec = ConvSpec.make(stride=s, padding=1 if k > 1 else 0,
+                         filter_shape=k, dilation=d)
+    n_out = spec.input_size((3, 3))
+    dy = jnp.asarray(rng.normal(size=(2, 3, 3, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, k, 4, 4)), jnp.float32)
+    _structural_pins(
+        lambda dy_, w_: tconv_implicit_gemm_pallas(
+            dy_, w_, stride=spec.stride, padding=spec.padding,
+            n_out=n_out, dilation=spec.dilation, interpret=True),
+        dy, w)
+
+
+def test_backend_single_launch_under_forced_strategy(monkeypatch):
+    """Through the full pallas ConvBackend route (`ecoflow_conv_transpose`)
+    the forced implicit-GEMM strategy still lowers to exactly ONE
+    launch -- the jaxpr pin the strategy refactor must not disturb."""
+    monkeypatch.setenv("ECOFLOW_STRATEGY", "implicit_gemm")
+    rng = np.random.default_rng(6)
+    dy = jnp.asarray(rng.normal(size=(2, 5, 5, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)), jnp.float32)
+    _structural_pins(
+        lambda dy_, w_: cconv.ecoflow_conv_transpose(
+            dy_, w_, 2, 1, n_out=(9, 9), backend="pallas"), dy, w)
+    got = cconv.ecoflow_conv_transpose(dy, w, 2, 1, n_out=(9, 9),
+                                       backend="pallas")
+    want = cconv.ecoflow_conv_transpose(dy, w, 2, 1, n_out=(9, 9),
+                                        backend="reference")
+    assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# strategy selection: analytical crossover + autotune override
+# ---------------------------------------------------------------------------
+
+def _layer_race(L, **kw):
+    spec = ConvSpec.make(stride=L.stride, padding=L.padding,
+                         filter_shape=L.k, dilation=L.dilation)
+    st_, _ = tiling.plan_strategy(
+        "input_grad", spec,
+        x_shape=(L.batch, L.n_in, L.n_in, L.c_in),
+        dy_shape=(L.batch, L.n_out, L.n_out, L.m), **kw)
+    return st_
+
+
+def test_analytical_crossover_on_paper_geometries():
+    """The acceptance pin: under the analytical model, at least one
+    Table 5/7 geometry plans implicit-GEMM and at least one other plans
+    phase decomposition -- the high-waste AlexNet S=4 stem (94% masked
+    lanes) goes phase, the S=1 dilated ASPP layers go implicit-GEMM."""
+    from repro.core import dataflow_sim as ds
+    for interpret in (True, False):
+        kw = dict(interpret=interpret, strategy="auto")
+        picks = {L.name: _layer_race(L, **kw)
+                 for L in (list(ds.TABLE5_LAYERS)
+                           + list(ds.TABLE7_GAN_LAYERS)
+                           + list(ds.DILATED_LAYERS))}
+        assert picks["alexnet-CONV1"] == "phase", picks
+        assert picks["deeplab-ASPP-d2"] == "implicit_gemm", picks
+        assert set(picks.values()) == {"phase", "implicit_gemm"}, picks
+
+
+def test_autotune_overrides_analytical_choice(tmp_path):
+    """The empirical race can override the analytical pick in EITHER
+    direction: rig the runners so the analytically-losing strategy times
+    faster and the autotuned plan follows the measurement, persisting
+    the measured winner in its `|st:auto` row."""
+    spec = ConvSpec.make(stride=4, padding=2, filter_shape=11)
+    x_shape = (1, 21, 21, 4)
+    dy_shape = (1, 4, 4, 4)
+    analytical = tiling._auto_strategy("input_grad", spec, x_shape,
+                                       dy_shape, 4,
+                                       tiling.DEFAULT_VMEM_BUDGET, True)
+    other = ("phase" if analytical == "implicit_gemm"
+             else "implicit_gemm")
+
+    import repro.kernels.tiling as t
+
+    saved_runners = dict(t._RUNNERS)
+    saved_median = t._median_time_us
+    cache = tmp_path / "c.json"
+    try:
+        rig = {analytical: 100.0, other: 1.0}
+
+        def median(thunk):
+            thunk()
+            return median.current
+
+        t._median_time_us = median
+
+        def factory_for(strategy):
+            def factory(spec_, x_s, dy_s, epilogue=None):
+                def run(plan):
+                    median.current = rig[strategy]
+                    return None
+                return run
+            return factory
+
+        t._RUNNERS.clear()
+        t._RUNNERS[("input_grad", "phase")] = factory_for("phase")
+        t._RUNNERS[("input_grad", "implicit_gemm")] = \
+            factory_for("implicit_gemm")
+        t._MEM_CACHE.clear()
+        t._MEM_STRATEGY.clear()
+        st_, plan = tiling.plan_strategy(
+            "input_grad", spec, x_shape=x_shape, dy_shape=dy_shape,
+            interpret=True, mode="autotune", tile_cache_path=cache,
+            strategy="auto")
+        assert st_ == other, \
+            "measured race must override the analytical pick"
+        doc = json.loads(cache.read_text())
+        (key, rec), = doc.items()
+        assert "|st:auto|" in key and rec["strategy"] == other
+
+        # ... and the other direction.
+        rig[analytical], rig[other] = 1.0, 100.0
+        t._MEM_CACHE.clear()
+        t._MEM_STRATEGY.clear()
+        cache.unlink()
+        st_, _ = tiling.plan_strategy(
+            "input_grad", spec, x_shape=x_shape, dy_shape=dy_shape,
+            interpret=True, mode="autotune", tile_cache_path=cache,
+            strategy="auto")
+        assert st_ == analytical
+    finally:
+        t._RUNNERS.clear()
+        t._RUNNERS.update(saved_runners)
+        t._median_time_us = saved_median

@@ -114,3 +114,73 @@ def test_useful_taps_is_zero_free(sh, sw, kh, kw):
     property the phase decomposition relies on."""
     spec = ConvSpec.make(stride=(sh, sw), filter_shape=(kh, kw))
     assert spec.useful_taps() == kh * kw
+
+
+# ---------------------------------------------------------------------------
+# Predicated-lane fraction of the implicit-GEMM lowering (Sec. 2.10)
+# ---------------------------------------------------------------------------
+
+def _brute_predicated_frac(o: int, k: int, s: int, d: int) -> float:
+    """Brute-force masked-lane fraction of the flat implicit GEMM: for
+    every tap (kx, ky), count the full-frame output sites (r, c) whose
+    contributing dy index (r - kx*d)/s x (c - ky*d)/s is integral and
+    in-bounds; everything else is a predicated-off lane."""
+    spec = ConvSpec.make(stride=s, padding=0, filter_shape=k, dilation=d)
+    fh, fw = spec.full_size((o, o))
+    live = 0
+    for kx in range(k):
+        for ky in range(k):
+            for r in range(fh):
+                for c in range(fw):
+                    ih, iw = r - kx * d, c - ky * d
+                    if (ih >= 0 and iw >= 0 and ih % s == 0
+                            and iw % s == 0 and ih // s < o
+                            and iw // s < o):
+                        live += 1
+    return 1.0 - live / (k * k * fh * fw)
+
+
+@pytest.mark.parametrize("o,k,s,d", [(4, 3, 2, 1), (5, 11, 4, 1),
+                                     (3, 3, 1, 2), (4, 4, 2, 1),
+                                     (3, 3, 3, 2), (6, 1, 2, 1),
+                                     (4, 2, 2, 3)])
+def test_predicated_mac_fraction_brute_force(o, k, s, d):
+    """`predicated_mac_fraction` is EXACT: each tap contributes exactly
+    o live sites per axis (r = kx*d + i*s, max index kx*d + (o-1)*s <=
+    Fh-1 always in frame), so the fraction is tap-independent and equals
+    1 - (Oh*Ow)/(Fh*Fw) with no halo correction term."""
+    spec = ConvSpec.make(stride=s, padding=0, filter_shape=k, dilation=d)
+    exact = _brute_predicated_frac(o, k, s, d)
+    assert ecoflow.predicated_mac_fraction(spec, (o, o)) == pytest.approx(
+        exact, abs=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(o=st.integers(1, 6), k=st.integers(1, 4), s=st.integers(1, 4),
+       d=st.integers(1, 3))
+def test_predicated_mac_fraction_properties(o, k, s, d):
+    """Range and monotonicity properties: the fraction lives in [0, 1),
+    is 0 exactly when the full frame IS the output frame (S=1, K=1), and
+    never decreases when the stride grows (more inserted zeros)."""
+    spec = ConvSpec.make(stride=s, padding=0, filter_shape=k, dilation=d)
+    f = ecoflow.predicated_mac_fraction(spec, (o, o))
+    assert 0.0 <= f < 1.0
+    if s == 1 and k == 1:
+        assert f == 0.0
+    spec2 = ConvSpec.make(stride=s + 1, padding=0, filter_shape=k,
+                          dilation=d)
+    if o > 1:
+        assert ecoflow.predicated_mac_fraction(spec2, (o, o)) >= f
+
+
+def test_predicated_lane_fraction_sim_consistency():
+    """`dataflow_sim.predicated_lane_fraction` delegates to the same
+    closed form the strategy planner charges -- the two accountings can
+    never drift apart."""
+    from repro.core import dataflow_sim as ds
+    for L in list(ds.TABLE5_LAYERS) + list(ds.DILATED_LAYERS):
+        spec = ConvSpec.make(stride=L.stride, padding=L.padding,
+                             filter_shape=L.k, dilation=L.dilation)
+        assert ds.predicated_lane_fraction(L) == pytest.approx(
+            ecoflow.predicated_mac_fraction(spec, (L.n_out, L.n_out)),
+            abs=1e-12)

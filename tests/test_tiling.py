@@ -264,7 +264,9 @@ def test_autotune_reads_legacy_keyless_rows(tmp_path):
     cache = tmp_path / "tile_cache.json"
     key = tiling._cache_key("filter_grad", spec, x_shape, dy_shape, 4,
                             tiling.DEFAULT_VMEM_BUDGET, True, None)
-    legacy_key, _, tag = key.rpartition("|ep:")
+    # A pre-epilogue row predates the |st:/|ep: suffixes entirely.
+    pre_strategy, _, tag = key.replace("|st:phase|", "|").rpartition("|ep:")
+    legacy_key = pre_strategy
     assert tag == "none"
     legacy_rec = {"cin_tile": 4, "cout_tile": 4, "spatial_tile": 2,
                   "tap_unroll": 1, "phase_unroll": 1,
@@ -424,3 +426,194 @@ def test_malformed_cache_record_warns_and_retunes(tmp_path):
     assert len(calls) > n, "malformed row should re-sweep"
     assert plan.source == "autotune"
     assert plan.cin_tile == good.cin_tile
+
+
+# ---------------------------------------------------------------------------
+# Strategy planner (`plan_strategy`, DESIGN.md Sec. 2.10)
+# ---------------------------------------------------------------------------
+
+def test_cache_key_includes_strategy():
+    """The strategy segment keys the cache: a phase-swept winner must
+    never be replayed for an implicit-GEMM launch, and the `|st:` slot
+    sits BEFORE `|ep:` so the epilogue tag keeps its suffix position."""
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 9, 5, 4, 8)
+    keys = {st: tiling._cache_key("input_grad", spec, x_shape, dy_shape,
+                                  4, 1 << 23, True, None, st)
+            for st in ("phase", "implicit_gemm", "auto")}
+    assert len(set(keys.values())) == 3
+    for st, key in keys.items():
+        assert f"|st:{st}|" in key
+        assert key.endswith("|ep:none")
+
+
+def test_legacy_rows_served_only_to_phase_lookups():
+    """`_legacy_cache_keys`: pre-strategy and pre-epilogue key forms are
+    reconstructed ONLY for `st:phase` lookups -- the legacy rows were
+    swept against the phase kernels, so an implicit-GEMM (or auto)
+    lookup gets no fallback."""
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 9, 4, 4, 4)
+    phase_key = tiling._cache_key("input_grad", spec, x_shape, dy_shape,
+                                  4, 1 << 23, True, None, "phase")
+    legacy = tiling._legacy_cache_keys(phase_key)
+    assert len(legacy) == 2
+    assert legacy[0] == phase_key.replace("|st:phase|", "|")
+    assert legacy[1] == legacy[0].rpartition("|ep:")[0]
+    for st in ("implicit_gemm", "auto"):
+        key = tiling._cache_key("input_grad", spec, x_shape, dy_shape,
+                                4, 1 << 23, True, None, st)
+        assert tiling._legacy_cache_keys(key) == ()
+
+
+def test_strategy_env_flip_replans(monkeypatch):
+    """Flipping ECOFLOW_STRATEGY re-plans on the next call instead of
+    serving the other strategy's memoized plan: the strategy is part of
+    the `_planned` lru key, and the returned plan actually differs
+    (implicit-GEMM plans carry no phase axis)."""
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=3)
+    x_shape, dy_shape = _shapes(2, 9, 5, 16, 32)
+    kw = dict(x_shape=x_shape, dy_shape=dy_shape, interpret=True)
+
+    monkeypatch.setenv("ECOFLOW_STRATEGY", "phase")
+    st_p, plan_p = tiling.plan_strategy("input_grad", spec, **kw)
+    assert st_p == "phase"
+    assert plan_p.grid_order == tiling._GRID_ORDERS["input_grad"]
+
+    monkeypatch.setenv("ECOFLOW_STRATEGY", "implicit_gemm")
+    st_g, plan_g = tiling.plan_strategy("input_grad", spec, **kw)
+    assert st_g == "implicit_gemm"
+    assert plan_g.grid_order == \
+        tiling._GRID_ORDERS["input_grad:implicit_gemm"]
+    assert "phase" not in plan_g.grid_order
+    assert plan_g.phase_unroll == 1
+
+    # back to phase: served again (memoized per strategy, not clobbered)
+    monkeypatch.setenv("ECOFLOW_STRATEGY", "phase")
+    st_p2, plan_p2 = tiling.plan_strategy("input_grad", spec, **kw)
+    assert (st_p2, plan_p2) == (st_p, plan_p)
+
+    monkeypatch.setenv("ECOFLOW_STRATEGY", "bogus")
+    with pytest.raises(ValueError, match="ECOFLOW_STRATEGY"):
+        tiling.plan_strategy("input_grad", spec, **kw)
+
+
+def test_plan_strategy_unsupported_op_falls_back_to_phase():
+    """Ops the implicit-GEMM family does not cover (the fused
+    dual-gradient backwards, forward, filter_grad) silently plan phase
+    even when implicit_gemm is requested -- the per-op fallback that
+    keeps the fused backward launches phase-decomposed."""
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=3)
+    x_shape, dy_shape = _shapes(1, 9, 5, 8, 8)
+    for op in ("forward", "filter_grad", "backward", "ct_backward"):
+        st, plan = tiling.plan_strategy(op, spec, x_shape=x_shape,
+                                        dy_shape=dy_shape, interpret=True,
+                                        strategy="implicit_gemm")
+        assert st == "phase", op
+        assert plan.grid_order == tiling._GRID_ORDERS[op]
+
+
+def test_strategy_cache_roundtrip_and_isolation(tmp_path):
+    """Autotune rows are strategy-keyed end to end: a phase row plus
+    both legacy forms in the cache must NOT be served to an
+    implicit-GEMM lookup (it sweeps its own candidates), and the auto
+    race persists ONE `|st:auto` row whose `strategy` field records the
+    winner and is replayed as (strategy, plan)."""
+    spec = ConvSpec.make(stride=2, padding=0, filter_shape=2)
+    x_shape, dy_shape = _shapes(1, 8, 4, 4, 4)
+    cache = tmp_path / "tile_cache.json"
+    phase_key = tiling._cache_key("input_grad", spec, x_shape, dy_shape,
+                                  4, tiling.DEFAULT_VMEM_BUDGET, True,
+                                  None, "phase")
+    pre_strategy = phase_key.replace("|st:phase|", "|")
+    rec = {"cin_tile": 4, "cout_tile": 4, "spatial_tile": 8,
+           "tap_unroll": 1, "phase_unroll": 1,
+           "grid_order": ["batch", "phase", "cin", "cout", "tap"],
+           "source": "autotune", "us": 1.0}
+    cache.write_text(json.dumps({
+        phase_key: rec, pre_strategy: rec,
+        pre_strategy.rpartition("|ep:")[0]: rec}))
+
+    calls = []
+
+    def factory(spec_, x_s, dy_s, epilogue=None):
+        def run(plan):
+            calls.append(plan)
+            return None
+        return run
+
+    kw = dict(x_shape=x_shape, dy_shape=dy_shape, mode="autotune",
+              interpret=True, tile_cache_path=cache)
+    tiling._MEM_CACHE.clear()
+    tiling._MEM_STRATEGY.clear()
+
+    st, plan = tiling.plan_strategy("input_grad", spec, strategy="phase",
+                                    runner_factory=factory, **kw)
+    assert not calls, "phase lookup should be served its cached row"
+    assert (st, plan.source) == ("phase", "cache")
+
+    ig_runner = tiling._RUNNERS.get(("input_grad", "implicit_gemm"))
+    saved = dict(tiling._RUNNERS)
+    tiling._RUNNERS.clear()
+    try:
+        tiling._RUNNERS[("input_grad", "implicit_gemm")] = factory
+        st, plan = tiling.plan_strategy("input_grad", spec,
+                                        strategy="implicit_gemm", **kw)
+        assert calls, "implicit-GEMM lookup must not be served phase rows"
+        assert (st, plan.source) == ("implicit_gemm", "autotune")
+        doc = json.loads(cache.read_text())
+        ig_key = phase_key.replace("|st:phase|", "|st:implicit_gemm|")
+        assert doc[ig_key]["strategy"] == "implicit_gemm"
+
+        # auto race: both runners registered, one |st:auto row persisted
+        tiling._RUNNERS[("input_grad", "phase")] = factory
+        tiling._MEM_CACHE.clear()
+        tiling._MEM_STRATEGY.clear()
+        st, plan = tiling.plan_strategy("input_grad", spec,
+                                        strategy="auto", **kw)
+        assert st in tiling.STRATEGIES
+        auto_key = phase_key.replace("|st:phase|", "|st:auto|")
+        doc = json.loads(cache.read_text())
+        assert doc[auto_key]["strategy"] == st
+        # replay from disk: same (strategy, plan) without a sweep
+        tiling._MEM_CACHE.clear()
+        tiling._MEM_STRATEGY.clear()
+        n = len(calls)
+        st2, plan2 = tiling.plan_strategy("input_grad", spec,
+                                          strategy="auto", **kw)
+        assert len(calls) == n
+        assert st2 == st and plan2.source == "cache"
+        tiles = lambda p: (p.cin_tile, p.cout_tile, p.spatial_tile,
+                           p.tap_unroll, p.phase_unroll, p.grid_order)
+        assert tiles(plan2) == tiles(plan)
+    finally:
+        tiling._RUNNERS.clear()
+        tiling._RUNNERS.update(saved)
+        if ig_runner is not None:
+            tiling._RUNNERS[("input_grad", "implicit_gemm")] = ig_runner
+
+
+def test_analytical_race_crossover_on_bench_geometries():
+    """The analytical strategy model reproduces the paper's crossover on
+    the Table 5 / Table 7 geometries: the high-waste AlexNet S=4 stem
+    plans phase decomposition while at least one S<=2 / dilated layer
+    plans implicit-GEMM -- in BOTH execution modes."""
+    from repro.core import dataflow_sim as ds
+    layers = {L.name: L for L in (list(ds.TABLE5_LAYERS)
+                                  + list(ds.TABLE7_GAN_LAYERS)
+                                  + list(ds.DILATED_LAYERS))}
+
+    def race(L, interpret):
+        spec = ConvSpec.make(stride=L.stride, padding=L.padding,
+                             filter_shape=L.k, dilation=L.dilation)
+        st, _ = tiling.plan_strategy(
+            "input_grad", spec,
+            x_shape=(L.batch, L.n_in, L.n_in, L.c_in),
+            dy_shape=(L.batch, L.n_out, L.n_out, L.m),
+            interpret=interpret, strategy="auto")
+        return st
+
+    for interpret in (True, False):
+        picks = {name: race(L, interpret) for name, L in layers.items()}
+        assert picks["alexnet-CONV1"] == "phase", picks
+        assert "implicit_gemm" in picks.values(), picks
