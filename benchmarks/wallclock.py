@@ -236,6 +236,61 @@ MULTIDEV_TRAIN_CASES = [
 # (the committed rows ran under the same cap).
 _MULTIDEV_MAX_ITERS = 7
 
+# Serving rows (DESIGN.md Sec. 2.11): the geometry-bucketed
+# `ConvServeEngine` end to end -- admission queue, slot-batch assembly,
+# jitted launch, host materialization -- per backend arm (each arm runs a
+# single-rung ladder so the timing isolates the backend), reporting
+# request p50/p99 latency and sustained requests/s.  Each case also runs
+# a FAULT-MODE arm: the full degradation ladder under a seeded 5%
+# kernel-fault schedule on the fast rungs, gated on bounded degradation
+# (every admitted request completes; every fallback is accounted to an
+# injected fault).  (name, kind, config).
+SERVE_CASES = [
+    ("serve-gan-gen", "gan_gen",
+     {"z_dim": 16, "base": 8, "out_ch": 3, "slot_batch": 2,
+      "requests": 8}),
+    ("serve-aspp", "aspp",
+     {"in_ch": 3, "width": 8, "n_classes": 4, "image": 8,
+      "slot_batch": 2, "requests": 8}),
+]
+_SERVE_FAULT_RATE = 0.05
+_SERVE_MAX_ITERS = 7    # interpret-mode cap, same rationale as multidev
+
+
+def _serve_engine(kind, cfg, ladder, injector=None):
+    """One `ConvServeEngine` for a serve bench arm, warmed up (tile
+    plans + every ladder rung pre-compiled so the timed sweeps measure
+    serving, not compilation).  Returns (engine, payload_shape)."""
+    from repro.serve.conv_engine import ConvServeEngine
+    if kind == "gan_gen":
+        from repro.models import gan
+        params = gan.generator_init(jax.random.PRNGKey(0),
+                                    z_dim=cfg["z_dim"], base=cfg["base"],
+                                    out_ch=cfg["out_ch"])
+        eng = ConvServeEngine(gan_params=params,
+                              slot_batch=cfg["slot_batch"],
+                              queue_limit=max(64, cfg["requests"]),
+                              ladder=ladder, injector=injector)
+        payload_shape = (cfg["z_dim"],)
+    elif kind == "aspp":
+        from repro.models import vision
+        params = vision.atrous_head_init(
+            jax.random.PRNGKey(0), in_ch=cfg["in_ch"], width=cfg["width"],
+            n_classes=cfg["n_classes"])
+        eng = ConvServeEngine(aspp_params=params,
+                              slot_batch=cfg["slot_batch"],
+                              queue_limit=max(64, cfg["requests"]),
+                              ladder=ladder, injector=injector)
+        payload_shape = (cfg["image"], cfg["image"], cfg["in_ch"])
+    else:
+        raise ValueError(f"unknown serve kind {kind!r}")
+    eng.warmup([(kind, payload_shape)])
+    bucket = eng._bucket(kind, payload_shape)
+    dummy = np.zeros((eng.slot_batch,) + payload_shape, np.float32)
+    for rung in ladder:
+        np.asarray(eng._jitted(bucket, rung)(dummy))
+    return eng, payload_shape
+
 
 def _multidev_measure(payload: dict) -> dict:
     """Subprocess body for one (case, device-count) multidev row: build
@@ -400,7 +455,7 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                        dilated_cases=None, strided_dilated_cases=None,
                        train_cases=None, epilogue_cases=None,
                        tconv_epilogue_cases=None, multidev_cases=None,
-                       json_path=None, name_filter=None,
+                       serve_cases=None, json_path=None, name_filter=None,
                        records_out=None):
     """Time tconv + filter-grad + the FUSED dual-gradient backward
     through the xla_zero_free and pallas backends for each geometry --
@@ -754,6 +809,84 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                     (f"wallclock.train_step_mdev.{bname}.{name}-d{n_dev}",
                      round(t_s[bname], 1), derived))
             records.append(rec)
+    # Serving rows: the ConvServeEngine end to end (admission -> bucket
+    # -> jitted launch -> host result), one single-rung-ladder engine per
+    # backend arm so the arm isolates the backend, sweeps interleaved
+    # like every other family; plus the fault-mode arm (full ladder, 5%
+    # seeded kernel faults on the fast rungs) gated on bounded
+    # degradation.
+    for name, kind, cfg in flt(SERVE_CASES if serve_cases is None
+                               else serve_cases):
+        from repro.serve.conv_engine import ConvRequest
+        from repro.serve.faults import FaultInjector, FaultSchedule
+        s_iters = min(iters, _SERVE_MAX_ITERS)
+        rec = {"layer": name, "kind": kind, "config": cfg,
+               "interpret_mode": jax.default_backend() != "tpu",
+               "epilogue": "fused", "strategy": "auto",
+               "serve_us": {}, "serve_p99_us": {}, "serve_rps": {},
+               "fault": {}}
+        payloads = None
+        engines = {}
+        for bname in backends:
+            eng, pshape = _serve_engine(kind, cfg, (bname,))
+            engines[bname] = eng
+            if payloads is None:
+                payloads = [np.asarray(rng.normal(size=pshape), np.float32)
+                            for _ in range(cfg["requests"])]
+        inj = FaultInjector(FaultSchedule.seeded(
+            0, sites=[f"{kind}:pallas", f"{kind}:xla_zero_free"],
+            rate=_SERVE_FAULT_RATE, horizon=4096,
+            kinds=("kernel_exception",)))
+        eng_f, _ = _serve_engine(
+            kind, cfg, ("pallas", "xla_zero_free", "reference"),
+            injector=inj)
+        engines["fault"] = eng_f
+        walls = {k: 0.0 for k in engines}
+        for _ in range(s_iters):
+            for bname, eng in engines.items():
+                reqs = [ConvRequest(None, kind, p) for p in payloads]
+                t0 = time.perf_counter()
+                res = eng.serve(reqs)
+                walls[bname] += time.perf_counter() - t0
+                if len(res) != len(reqs):
+                    raise RuntimeError(
+                        f"{name}/{bname}: {len(reqs) - len(res)} of "
+                        f"{len(reqs)} requests lost")
+        for bname in backends:
+            h = engines[bname].health()
+            rec["serve_us"][bname] = round(h["p50_us"], 1)
+            rec["serve_p99_us"][bname] = round(h["p99_us"], 1)
+            rec["serve_rps"][bname] = round(
+                s_iters * cfg["requests"] / walls[bname], 1)
+            rows.append((f"wallclock.serve.{bname}.{name}",
+                         rec["serve_us"][bname],
+                         f"p99={rec['serve_p99_us'][bname]}"
+                         f";rps={rec['serve_rps'][bname]}"))
+        # Bounded-degradation gate: every admitted request completed
+        # (checked per sweep above) and every fallback is accounted to an
+        # injected fault -- the ladder degrades, it never leaks work.
+        h = eng_f.health()
+        if h["fallbacks"] > h["kernel_faults"]:
+            raise RuntimeError(
+                f"{name}/fault: {h['fallbacks']} fallbacks but only "
+                f"{h['kernel_faults']} injected faults -- degradation "
+                f"is not bounded by the schedule")
+        rec["fault"] = {
+            "rate": _SERVE_FAULT_RATE,
+            "p50_us": round(h["p50_us"], 1),
+            "p99_us": round(h["p99_us"], 1),
+            "rps": round(s_iters * cfg["requests"] / walls["fault"], 1),
+            "completed": h["completed"],
+            "kernel_faults": h["kernel_faults"],
+            "fallbacks": h["fallbacks"],
+            "quarantines": h["quarantines"],
+        }
+        rows.append((f"wallclock.serve.fault.{name}",
+                     rec["fault"]["p50_us"],
+                     f"faults={h['kernel_faults']}"
+                     f";fallbacks={h['fallbacks']}"
+                     f";completed={h['completed']}"))
+        records.append(rec)
     if records_out is not None:
         records_out.extend(records)
     if write_json:
@@ -781,7 +914,15 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                      "predicated implicit-GEMM; 'auto' on train rows "
                      "where it resolves per layer) and `winner` the "
                      "measured head-to-head of the two forced-strategy "
-                     "pallas_* arms on the input-grad families",
+                     "pallas_* arms on the input-grad families; "
+                     "`serve-*` rows time the geometry-bucketed "
+                     "ConvServeEngine end to end (admission -> slot "
+                     "batch -> jitted launch -> host result), one "
+                     "single-rung ladder per backend arm "
+                     "(`serve_us`=p50, plus p99 and requests/s), and "
+                     "`fault` re-times the full degradation ladder "
+                     "under a seeded 5% kernel-fault schedule, gated "
+                     "on bounded degradation",
              "cases": records}, indent=2) + "\n")
         rows.append(("wallclock.conv_backend.json", str(path), ""))
     return rows
@@ -816,6 +957,10 @@ _GATE_FIELDS = {
     "backward_ep_us": "pallas_unfused",
     "tconv_ep_us": "xla_zero_free",
     "ct_backward_ep_us": "pallas_unfused",
+    # Serving p50: the pallas arm gates against the xla_zero_free arm of
+    # the same row -- a ratio regression means the fused kernels lost
+    # ground inside the identical engine path.
+    "serve_us": "xla_zero_free",
 }
 
 
@@ -846,7 +991,9 @@ def delta_gate(threshold=1.5, iters=21, warmup=2):
     # host/timing-dependent, not geometry -- like `tiling`, they must
     # not trip the drift check when a model retune flips them.
     timing_keys = set(_GATE_FIELDS) | {"tiling", "interpret_mode",
-                                       "strategy", "winner"}
+                                       "strategy", "winner",
+                                       "serve_p99_us", "serve_rps",
+                                       "fault"}
     for rec in records:
         base = committed.get(rec["layer"])
         if base is None or base.get("interpret_mode") != \
@@ -929,6 +1076,13 @@ SMOKE_TCONV_EPILOGUE_CASES = [
     ("smoke-tconv-ep-tanh", 4, 3, 2, 4, 4,
      Epilogue(activation="tanh")),
 ]
+# One tiny serve row: exercises admission, bucketing, the per-arm
+# single-rung ladders, AND the fault-mode full-ladder arm end to end.
+SMOKE_SERVE_CASES = [
+    ("smoke-serve-gan-gen", "gan_gen",
+     {"z_dim": 8, "base": 4, "out_ch": 3, "slot_batch": 1,
+      "requests": 2}),
+]
 
 
 def _record_schema(doc) -> set[frozenset]:
@@ -959,6 +1113,7 @@ def smoke():
             epilogue_cases=SMOKE_EPILOGUE_CASES,
             tconv_epilogue_cases=SMOKE_TCONV_EPILOGUE_CASES,
             multidev_cases=SMOKE_MULTIDEV_CASES,
+            serve_cases=SMOKE_SERVE_CASES,
             json_path=smoke_json)
         got = _record_schema(json.loads(smoke_json.read_text()))
         committed_doc = json.loads(BENCH_JSON.read_text())
@@ -977,7 +1132,7 @@ def smoke():
     finally:
         smoke_json.unlink(missing_ok=True)
     rows.append(("wallclock.smoke.schema", "ok",
-                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES + SMOKE_MULTIDEV_CASES + SMOKE_EPILOGUE_CASES + SMOKE_TCONV_EPILOGUE_CASES)}"
+                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES + SMOKE_MULTIDEV_CASES + SMOKE_EPILOGUE_CASES + SMOKE_TCONV_EPILOGUE_CASES + SMOKE_SERVE_CASES)}"
                  " families"))
     return rows
 

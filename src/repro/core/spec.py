@@ -38,9 +38,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, Optional, Sequence, Union
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
-BackendLike = Union[None, bool, str, "ConvBackend"]
+# A backend designator: None (default), legacy use_pallas bool, a name, a
+# ConvBackend, or a SEQUENCE of designators -- the last resolves through
+# `fallback_backend` into a graceful-degradation ladder that tries each
+# entry in order (DESIGN.md Sec. 2.11).
+BackendLike = Union[None, bool, str, "ConvBackend",
+                    Sequence[Union[None, bool, str, "ConvBackend"]]]
 
 DEFAULT_BACKEND = "xla_zero_free"
 
@@ -436,10 +441,17 @@ def available_backends() -> tuple[str, ...]:
 
 
 def resolve_backend(backend: BackendLike) -> ConvBackend:
-    """Name / bool / None / ConvBackend -> ConvBackend."""
+    """Name / bool / None / ConvBackend / sequence-of-those -> ConvBackend.
+
+    A tuple or list resolves through `fallback_backend`: a degradation
+    ladder trying each entry in order.  Tuples of names stay hashable, so
+    a ladder can ride through `jax.jit` static arguments and
+    `jax.custom_vjp` nondiff argnums exactly like a plain name."""
     _ensure_default_backends()
     if isinstance(backend, ConvBackend):
         return backend
+    if isinstance(backend, (tuple, list)):
+        return fallback_backend(tuple(backend))
     if backend is None:
         name = DEFAULT_BACKEND
     elif isinstance(backend, bool):  # legacy use_pallas flag
@@ -452,6 +464,99 @@ def resolve_backend(backend: BackendLike) -> ConvBackend:
         raise ValueError(
             f"unknown conv backend {name!r}; available: "
             f"{', '.join(available_backends())}") from None
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: a fallback ladder over backends (DESIGN.md
+# Sec. 2.11).  `ConvServeEngine` drives its per-bucket ladder explicitly
+# (it needs circuit-breaker state around each rung); this seam is the
+# same semantics for every OTHER call site -- pass a tuple of backend
+# names anywhere a backend goes and a failing fused launch degrades to
+# the next rung instead of killing the computation.
+# ---------------------------------------------------------------------------
+
+_FALLBACK_CACHE: Dict[tuple, ConvBackend] = {}
+
+
+def fallback_backend(chain: Sequence[BackendLike], *,
+                     on_fallback: Optional[Callable] = None) -> ConvBackend:
+    """A `ConvBackend` that tries each backend in `chain` in order.
+
+    Every op (plain, fused, and epilogue-fused) attempts the rungs left
+    to right; an exception from rung i invokes
+    ``on_fallback(backend_name, op_name, exc)`` (when given) and falls
+    through to rung i+1.  When every rung fails the LAST exception
+    propagates -- the ladder never silently swallows a total failure.
+
+    Exceptions are caught EAGERLY, per call: under `jax.jit` a rung that
+    raises at trace time degrades, but a rung whose failure only
+    manifests at run time on device does not (trace-time dispatch cannot
+    see it).  The serving engine therefore keeps per-attempt jitted
+    functions and walks the ladder itself; this seam covers eager and
+    trace-time failures for everyone else.
+
+    Ladders without an `on_fallback` observer are memoized per chain, so
+    repeated `resolve_backend(("pallas", "reference"))` calls return the
+    SAME object -- `dispatch_backend`'s `_SHARDED_CACHE` (keyed on
+    `id(base)`) and jit static-argument caching both stay effective."""
+    entries: Tuple[BackendLike, ...] = tuple(chain)
+    if not entries:
+        raise ValueError("fallback chain must name at least one backend")
+
+    cache_key = None
+    if on_fallback is None:
+        try:
+            cache_key = tuple(
+                e if isinstance(e, (str, bool, type(None))) else id(e)
+                for e in entries)
+        except TypeError:  # pragma: no cover - entries above always hashable
+            cache_key = None
+        hit = _FALLBACK_CACHE.get(cache_key) if cache_key else None
+        if hit is not None:
+            return hit
+
+    backends = tuple(resolve_backend(b) for b in entries)
+
+    def _run(op_name, call):
+        last_exc = None
+        for be in backends:
+            try:
+                return call(be)
+            except Exception as exc:  # noqa: BLE001 - ladder catches all
+                last_exc = exc
+                if on_fallback is not None:
+                    on_fallback(be.name, op_name, exc)
+        raise last_exc
+
+    ladder = ConvBackend(
+        name=">".join(be.name for be in backends),
+        forward=lambda x, w, spec: _run(
+            "forward", lambda be: be.forward(x, w, spec)),
+        input_grad=lambda dy, w, spec, n_out: _run(
+            "input_grad", lambda be: be.input_grad(dy, w, spec, n_out)),
+        filter_grad=lambda x, dy, spec: _run(
+            "filter_grad", lambda be: be.filter_grad(x, dy, spec)),
+        # Fused slots route through each rung's own METHOD (not the raw
+        # fused callable): a rung without a fused kernel contributes its
+        # two-launch composition instead of being skipped.
+        fused_backward=lambda x, dy, w, spec, n_out: _run(
+            "backward", lambda be: be.backward(x, dy, w, spec, n_out)),
+        fused_ct_backward=lambda g, dy, w, spec: _run(
+            "ct_backward", lambda be: be.ct_backward(g, dy, w, spec)),
+        fused_forward_ep=lambda x, w, bias, spec, ep: _run(
+            "forward_ep", lambda be: be.forward_ep(x, w, bias, spec, ep)),
+        fused_input_grad_ep=lambda dy, w, bias, spec, n_out, ep: _run(
+            "input_grad_ep",
+            lambda be: be.input_grad_ep(dy, w, bias, spec, n_out, ep)),
+        fused_backward_ep=lambda x, y, dy, w, spec, n_out, ep: _run(
+            "backward_ep",
+            lambda be: be.backward_ep(x, y, dy, w, spec, n_out, ep)),
+        fused_ct_backward_ep=lambda g, z, dy, w, spec, ep: _run(
+            "ct_backward_ep",
+            lambda be: be.ct_backward_ep(g, z, dy, w, spec, ep)))
+    if cache_key is not None:
+        _FALLBACK_CACHE[cache_key] = ladder
+    return ladder
 
 
 # ---------------------------------------------------------------------------

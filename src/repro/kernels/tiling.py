@@ -721,10 +721,15 @@ def _load_disk_cache(path: pathlib.Path) -> dict:
         text = path.read_text()
     except OSError:
         return {}
-    try:
-        doc = json.loads(text)
-    except ValueError:
-        doc = None
+    except UnicodeDecodeError:
+        # Exists but is not even text (torn binary copy): same corrupt-
+        # cache policy as a JSON parse failure below.
+        text, doc = None, None
+    if text is not None:
+        try:
+            doc = json.loads(text)
+        except ValueError:
+            doc = None
     if not isinstance(doc, dict):
         warnings.warn(
             f"corrupt autotune tile cache at {path} (not a JSON object); "
@@ -1064,3 +1069,80 @@ def plan_strategy(op: str, spec: ConvSpec, *, x_shape, dy_shape,
     return strategy, _planned(op, spec, x_shape, dy_shape, itemsize,
                               vmem_budget, mode, interpret, epilogue,
                               strategy)
+
+
+def warmup_plans(entries, *, tile_cache_path=None, itemsize: int = 4,
+                 vmem_budget: Optional[int] = None,
+                 interpret: bool = False) -> dict:
+    """Serving-startup warmup: resolve `(strategy, TilePlan)` for every
+    launch a request bucket will make, WITHOUT ever timing a kernel.
+
+    `entries` is an iterable of ``(op, spec, x_shape, dy_shape)`` or
+    ``(op, spec, x_shape, dy_shape, epilogue)`` tuples -- the models'
+    `*_plan_requests` helpers produce them per bucket.  Resolution order
+    per entry, against the shipped `ECOFLOW_TILE_CACHE` artifact at
+    `tile_cache_path` (default `cache_path()`):
+
+      1. the artifact's ``|st:auto`` row -- the measured strategy-race
+         winner, strategy field and tiles both taken from the row;
+      2. the analytical strategy pick, then that strategy's pinned
+         artifact row for the tiles if one exists;
+      3. the analytical planner (`_planned` memo) otherwise.
+
+    A corrupt artifact (torn file, malformed row) follows the PR 7
+    policy -- `RuntimeWarning` and fall through to the analytical path;
+    warmup never fails engine startup and never runs an autotune sweep.
+    Artifact hits are primed into the in-memory autotune caches, so a
+    serve process running `ECOFLOW_TILING=autotune` replays the shipped
+    rows instead of sweeping on the first request.
+
+    Returns ``{cache_key: {"op", "strategy", "plan", "source"}}`` with
+    ``source`` in ``{"artifact", "analytical"}``.
+    """
+    if vmem_budget is None:
+        vmem_budget = int(os.environ.get("ECOFLOW_VMEM_BUDGET",
+                                         DEFAULT_VMEM_BUDGET))
+    path = pathlib.Path(tile_cache_path) if tile_cache_path \
+        else cache_path()
+    disk = _load_disk_cache(path)   # corrupt artifact -> warn + {}
+    out = {}
+    for entry in entries:
+        op, spec, x_shape, dy_shape = entry[:4]
+        ep = entry[4] if len(entry) > 4 else None
+        if op not in OPS:
+            raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+        if ep is not None and ep.is_identity:
+            ep = None
+        x_shape = tuple(map(int, x_shape))
+        dy_shape = tuple(map(int, dy_shape))
+
+        strategy = plan = None
+        source = "artifact"
+        key_auto = _cache_key(op, spec, x_shape, dy_shape, itemsize,
+                              vmem_budget, interpret, ep, "auto")
+        rec = disk.get(key_auto)
+        if isinstance(rec, dict):
+            p = _plan_from_cache_rec(op, rec)   # warns on a torn row
+            st = rec.get("strategy")
+            if p is not None and st in STRATEGIES:
+                strategy, plan = st, p
+                _MEM_CACHE[key_auto] = plan
+                _MEM_STRATEGY[key_auto] = strategy
+        if plan is None:
+            strategy = _auto_strategy(op, spec, x_shape, dy_shape,
+                                      itemsize, vmem_budget, interpret, ep)
+            key_st = _cache_key(op, spec, x_shape, dy_shape, itemsize,
+                                vmem_budget, interpret, ep, strategy)
+            rec = disk.get(key_st)
+            if isinstance(rec, dict):
+                plan = _plan_from_cache_rec(op, rec)
+            if plan is not None:
+                _MEM_CACHE[key_st] = plan
+            else:
+                plan = _planned(op, spec, x_shape, dy_shape, itemsize,
+                                vmem_budget, "analytical", interpret, ep,
+                                strategy)
+                source = "analytical"
+        out[key_auto] = {"op": op, "strategy": strategy, "plan": plan,
+                         "source": source}
+    return out

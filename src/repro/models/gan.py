@@ -13,11 +13,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv import ecoflow_conv, ecoflow_conv_transpose
-from repro.core.spec import Epilogue
+from repro.core.spec import ConvSpec, Epilogue
 
 _RELU = Epilogue(activation="relu")
 _TANH = Epilogue(activation="tanh")
 _LEAKY = Epilogue(activation="leaky_relu", slope=0.2)
+
+# The generator's upsampling ladder: (param name, tconv-input spatial
+# size, output spatial size, fused epilogue).  `generator_apply` and
+# `generator_plan_requests` both read this, so the serving warmup plans
+# exactly the launches the forward pass makes.
+GENERATOR_LAYERS = (("t1", (4, 4), (8, 8), _RELU),
+                    ("t2", (8, 8), (16, 16), _RELU),
+                    ("t3", (16, 16), (32, 32), _TANH))
 
 
 def _w(rng, k, cin, cout):
@@ -63,6 +71,26 @@ def generator_apply(params, z, *, backend=None, fuse_epilogue=True):
     x = jnp.tanh(ecoflow_conv_transpose(x, params["t3"], 2, 1,
                                         n_out=(32, 32), backend=backend))
     return x
+
+
+def generator_plan_requests(params, batch, *, fuse_epilogue=True):
+    """Tile-planning warmup entries for one serving bucket of the
+    generator: one `"input_grad"` entry per transposed-conv layer (the
+    zero-free transposed conv IS the generator's forward pass), in the
+    `(op, spec, x_shape, dy_shape, epilogue)` form
+    `kernels.tiling.warmup_plans` consumes.  `x_shape` is the upsampled
+    OUTPUT side and `dy_shape` the tconv input, matching the
+    input-gradient formulation the filters are stored in."""
+    entries = []
+    for name, in_hw, out_hw, ep in GENERATOR_LAYERS:
+        w = params[name]
+        spec = ConvSpec.make(stride=2, padding=1,
+                             filter_shape=tuple(w.shape[:2]))
+        entries.append(("input_grad", spec,
+                        (batch, out_hw[0], out_hw[1], int(w.shape[2])),
+                        (batch, in_hw[0], in_hw[1], int(w.shape[3])),
+                        ep if fuse_epilogue else None))
+    return entries
 
 
 def discriminator_init(rng, *, in_ch=3, base=64):

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv import ecoflow_conv, ecoflow_dilated_conv
-from repro.core.spec import Epilogue
+from repro.core.spec import ConvSpec, Epilogue
 
 _RELU = Epilogue(activation="relu")
 
@@ -85,6 +85,30 @@ def atrous_head_apply(params, images, *, rates=(1, 2, 4), backend=None,
             images, params[f"rate{r}"], 1, r, r, backend)) for r in rates]
     h = jnp.concatenate(feats, axis=-1)
     return ecoflow_conv(h, params["fuse"], 1, 0, backend)
+
+
+def atrous_plan_requests(params, image_shape, *, rates=(1, 2, 4),
+                         fuse_epilogue=True):
+    """Tile-planning warmup entries for one serving bucket of the atrous
+    head: one `"forward"` entry per dilated 3x3 branch plus the 1x1 fuse
+    conv, in the `(op, spec, x_shape, dy_shape, epilogue)` form
+    `kernels.tiling.warmup_plans` consumes.  `image_shape` is the
+    bucket's padded batch shape (B, H, W, C); every branch is
+    same-padded, so all output shapes stay (B, H, W, .)."""
+    b, h, w, c = (int(s) for s in image_shape)
+    entries = []
+    for r in rates:
+        wt = params[f"rate{r}"]
+        spec = ConvSpec.make(stride=1, padding=r,
+                             filter_shape=tuple(wt.shape[:2]), dilation=r)
+        entries.append(("forward", spec, (b, h, w, c),
+                        (b, h, w, int(wt.shape[3])),
+                        _RELU if fuse_epilogue else None))
+    fuse = params["fuse"]
+    spec = ConvSpec.make(stride=1, padding=0, filter_shape=1)
+    entries.append(("forward", spec, (b, h, w, int(fuse.shape[2])),
+                    (b, h, w, int(fuse.shape[3])), None))
+    return entries
 
 
 def atrous_seg_loss(params, images, labels, *, rates=(1, 2, 4),

@@ -43,6 +43,11 @@ class ServeEngine:
             lambda p, t: self.lm.prefill(p, t, max_len))
         self._decode = jax.jit(self.lm.decode_step)
         self.greedy = greedy
+        # generate() statistics: "refills" counts requests pulled into a
+        # slot freed MID-FLIGHT (the continuous-batching property the
+        # regression test pins); "prefills" counts batch (re)prefills.
+        self.stats: Dict[str, int] = {"refills": 0, "prefills": 0,
+                                      "decode_steps": 0}
 
     def _run(self, fn, *args):
         if self.mesh is not None:
@@ -51,40 +56,63 @@ class ServeEngine:
         return fn(*args)
 
     def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Process a list of requests with continuous batching."""
+        """Process a list of requests with continuous batching.
+
+        Slots free as sequences finish (EOS / length) and are refilled
+        from the queue IMMEDIATELY -- mid-flight, not only between
+        cohorts.  The KV cache keeps one shared position scalar (see
+        `lm.prefill`), so a refill re-prefills the whole batch over each
+        live slot's history (prompt + tokens generated so far,
+        right-aligned): under greedy decoding the prefill's last-position
+        argmax is exactly the next decode token, so continuing slots
+        resume where they left off while the new request starts in the
+        freed slot."""
         queue = list(requests)
         results: Dict[int, List[int]] = {}
-        while queue:
-            active = queue[:self.batch]
-            queue = queue[self.batch:]
-            # Left-align prompts into one padded prefill (same length
-            # bucket; production would use multiple buckets).
-            plen = max(len(r.prompt) for r in active)
-            toks = np.zeros((self.batch, plen), np.int32)
+        active: List[Optional[Request]] = [None] * self.batch
+        cache = None
+        last = None
+
+        def absorb(arr) -> None:
+            """Append one predicted token per live slot; retire slots
+            that hit EOS or their length budget."""
             for i, r in enumerate(active):
-                toks[i, plen - len(r.prompt):] = r.prompt  # right-aligned
-            logits, cache = self._run(self._prefill, self.params,
-                                      jnp.asarray(toks))
-            last = jnp.argmax(logits[:, 0], axis=-1)
-            steps = max(r.max_new_tokens for r in active)
-            done = np.zeros(self.batch, bool)
-            for i, r in enumerate(active):
-                r.out.append(int(last[i]))
-            for _ in range(steps - 1):
+                if r is None:
+                    continue
+                tok = int(arr[i])
+                if len(r.out) < r.max_new_tokens:
+                    r.out.append(tok)
+                if len(r.out) >= r.max_new_tokens or (
+                        r.eos_id is not None and r.out
+                        and r.out[-1] == r.eos_id):
+                    results[r.uid] = r.out
+                    active[i] = None
+
+        while queue or any(r is not None for r in active):
+            midflight = any(r is not None for r in active)
+            took = 0
+            for i in range(self.batch):
+                if active[i] is None and queue:
+                    active[i] = queue.pop(0)
+                    took += 1
+            if took:
+                if midflight:
+                    self.stats["refills"] += took
+                # (Re)prefill the whole batch over per-slot histories;
+                # empty slots carry a single pad token.
+                hists = [list(r.prompt) + r.out if r is not None else [0]
+                         for r in active]
+                plen = max(len(h) for h in hists)
+                toks = np.zeros((self.batch, plen), np.int32)
+                for i, h in enumerate(hists):
+                    toks[i, plen - len(h):] = h   # right-aligned
+                logits, cache = self._run(self._prefill, self.params,
+                                          jnp.asarray(toks))
+                self.stats["prefills"] += 1
+            else:
                 logits, cache = self._run(self._decode, self.params, cache,
                                           last[:, None].astype(jnp.int32))
-                last = jnp.argmax(logits[:, 0], axis=-1)
-                arr = np.asarray(last)
-                for i, r in enumerate(active):
-                    if done[i] or len(r.out) >= r.max_new_tokens:
-                        done[i] = True
-                        continue
-                    tok = int(arr[i])
-                    r.out.append(tok)
-                    if r.eos_id is not None and tok == r.eos_id:
-                        done[i] = True
-                if done.all():
-                    break
-            for r in active:
-                results[r.uid] = r.out
+                self.stats["decode_steps"] += 1
+            last = jnp.argmax(logits[:, 0], axis=-1)
+            absorb(np.asarray(last))
         return results

@@ -1,0 +1,246 @@
+"""Deterministic fault injection for the conv serving / training stack.
+
+Serving at the edge (HUGE2-class deployments) and elastic training share
+one failure model: a kernel path misbehaves -- a launch raises, an output
+comes back NaN/Inf, a tile-cache artifact is torn, a shard straggles, a
+device disappears -- and the engine must degrade instead of dying.  This
+module is the single source of those failures for tests and benchmarks:
+
+  * `FaultSchedule.seeded(seed, ...)` precomputes, from one RNG seed,
+    WHICH invocation of WHICH site fires WHICH fault.  The schedule is a
+    pure function of its arguments, so a test that replays the same seed
+    sees byte-identical failure timing -- no flaky probabilistic
+    injection, no time-of-day dependence.
+  * `FaultInjector` walks a schedule at run time: each `step(site)`
+    advances that site's invocation counter and returns the scheduled
+    event (if any); `raise_or_delay` converts launch-class events into
+    exceptions / latency, and `poison` applies output-corruption events
+    host-side.  Every fired event is recorded for assertions.
+  * `inject_backend` wraps a `repro.core.spec.ConvBackend` so every conv
+    op consults the injector -- the hook the graceful-degradation ladder
+    (`core/spec.py::fallback_backend`) and `ConvServeEngine` are tested
+    against.
+  * `corrupt_tile_cache` mangles an `ECOFLOW_TILE_CACHE` artifact in the
+    ways a real deployment sees (truncation, garbage, a torn row), to
+    prove the warn-and-replan policy end to end.
+
+`train/fault_tolerance.py` builds its host-loss schedules on the same
+`FaultSchedule`, so serving and training replay failures from one seeded
+source (DESIGN.md Sec. 2.11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Launch-class kinds surface as exceptions/latency BEFORE the kernel
+# output exists; output-class kinds corrupt the produced values.
+LAUNCH_KINDS = ("kernel_exception", "device_loss", "latency_spike")
+OUTPUT_KINDS = ("nan_output", "inf_output")
+FAULT_KINDS = LAUNCH_KINDS + OUTPUT_KINDS
+
+
+class InjectedFault(RuntimeError):
+    """Base class of every injected failure (site/index/kind attached)."""
+
+    def __init__(self, site: str, index: int, kind: str):
+        super().__init__(f"injected {kind} at {site}#{index}")
+        self.site, self.index, self.kind = site, index, kind
+
+
+class InjectedKernelFault(InjectedFault):
+    """A kernel launch that raised (Mosaic lowering error, OOM, ...)."""
+
+
+class InjectedDeviceLoss(InjectedFault):
+    """A device that disappeared mid-request (host eviction, preemption)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled failure: the `index`-th invocation of `site` fires
+    `kind`.  `magnitude` is the latency-spike duration in seconds (other
+    kinds ignore it)."""
+    site: str
+    index: int
+    kind: str
+    magnitude: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; expected "
+                             f"one of {FAULT_KINDS}")
+
+
+class FaultSchedule:
+    """An immutable set of `FaultEvent`s, indexed by (site, index).
+
+    Build explicitly from events (exact placement for state-machine
+    tests) or via `seeded` (rate-driven, deterministic in the seed)."""
+
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        self.events: Tuple[FaultEvent, ...] = tuple(events)
+        self._by_key: Dict[Tuple[str, int], FaultEvent] = {
+            (e.site, e.index): e for e in self.events}
+
+    @classmethod
+    def seeded(cls, seed: int, *, sites: Sequence[str], rate: float,
+               horizon: int = 256, kinds: Sequence[str] = FAULT_KINDS,
+               magnitude: float = 0.0) -> "FaultSchedule":
+        """Rate-driven schedule: for each site, each invocation index
+        below `horizon` fires with probability `rate`, drawing the kind
+        uniformly from `kinds`.  A pure function of the arguments -- the
+        same seed replays the same schedule exactly."""
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {rate}")
+        for k in kinds:
+            if k not in FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {k!r}")
+        rng = np.random.default_rng(seed)
+        events = []
+        for site in sites:
+            fire = rng.random(horizon) < rate
+            pick = rng.integers(0, len(kinds), horizon)
+            for i in np.nonzero(fire)[0]:
+                events.append(FaultEvent(site, int(i), kinds[int(pick[i])],
+                                         magnitude))
+        return cls(events)
+
+    def lookup(self, site: str, index: int) -> Optional[FaultEvent]:
+        return self._by_key.get((site, index))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+class FaultInjector:
+    """Replays a `FaultSchedule` against live invocation counters.
+
+    One injector instance per engine/test run: counters start at zero, so
+    the run sees the schedule from its beginning.  `fired` records every
+    event actually hit, in order -- tests assert against it."""
+
+    def __init__(self, schedule: FaultSchedule):
+        self.schedule = schedule
+        self._counters: Dict[str, int] = defaultdict(int)
+        self.fired: List[FaultEvent] = []
+
+    def step(self, site: str) -> Optional[FaultEvent]:
+        """Advance `site`'s invocation counter; return the scheduled
+        event for the index just consumed (recorded), or None."""
+        i = self._counters[site]
+        self._counters[site] = i + 1
+        ev = self.schedule.lookup(site, i)
+        if ev is not None:
+            self.fired.append(ev)
+        return ev
+
+    def raise_or_delay(self, site: str) -> Optional[FaultEvent]:
+        """Consume one invocation of `site` and act on launch-class
+        events: kernel exceptions and device losses raise, latency
+        spikes sleep.  Output-class events are RETURNED (the caller
+        applies them to the produced value via `poison`); None means the
+        invocation is clean."""
+        ev = self.step(site)
+        if ev is None:
+            return None
+        if ev.kind == "kernel_exception":
+            raise InjectedKernelFault(ev.site, ev.index, ev.kind)
+        if ev.kind == "device_loss":
+            raise InjectedDeviceLoss(ev.site, ev.index, ev.kind)
+        if ev.kind == "latency_spike":
+            time.sleep(max(0.0, ev.magnitude))
+            return None
+        return ev
+
+    def poison(self, ev: Optional[FaultEvent], value):
+        """Apply an output-class event to a host array: stamp NaN/Inf
+        into the first element of every batch row (enough to trip any
+        finite-ness guard, cheap to produce).  No-op for None."""
+        if ev is None or ev.kind not in OUTPUT_KINDS:
+            return value
+        out = np.array(value, copy=True)
+        bad = np.nan if ev.kind == "nan_output" else np.inf
+        flat = out.reshape(out.shape[0], -1) if out.ndim > 1 \
+            else out.reshape(1, -1)
+        flat[:, 0] = bad
+        return out.reshape(value.shape) if out.ndim > 1 else out[0]
+
+
+def inject_backend(base, injector: FaultInjector, *, prefix=None):
+    """Wrap a `ConvBackend` so every op consults `injector` first.
+
+    Site names are `<prefix>.<op>` (prefix defaults to the backend
+    name).  Launch-class events fire before the base op runs;
+    output-class events poison the op's (host-materialized) result.
+    Used to test the `core/spec.py::fallback_backend` degradation seam
+    with real kernel paths underneath."""
+    from repro.core.spec import ConvBackend, resolve_backend
+
+    be = resolve_backend(base)
+    pre = prefix if prefix is not None else be.name
+
+    def wrap(op_name, call):
+        def op(*args):
+            ev = injector.raise_or_delay(f"{pre}.{op_name}")
+            out = call(*args)
+            if ev is not None:
+                if isinstance(out, tuple):
+                    out = tuple(
+                        o if o is None else injector.poison(ev, np.asarray(o))
+                        for o in out)
+                else:
+                    out = injector.poison(ev, np.asarray(out))
+            return out
+        return op
+
+    return ConvBackend(
+        name=f"{be.name}@inject",
+        forward=wrap("forward", be.forward),
+        input_grad=wrap("input_grad", be.input_grad),
+        filter_grad=wrap("filter_grad", be.filter_grad),
+        fused_backward=wrap("backward", be.backward),
+        fused_ct_backward=wrap("ct_backward", be.ct_backward),
+        fused_forward_ep=wrap("forward_ep", be.forward_ep),
+        fused_input_grad_ep=wrap("input_grad_ep", be.input_grad_ep),
+        fused_backward_ep=wrap("backward_ep", be.backward_ep),
+        fused_ct_backward_ep=wrap("ct_backward_ep", be.ct_backward_ep))
+
+
+def corrupt_tile_cache(path, mode: str = "truncate", seed: int = 0) -> None:
+    """Mangle an ECOFLOW_TILE_CACHE artifact the way real deployments
+    see it break -- the warmup/planner side must warn and re-plan
+    (kernels/tiling.py's load policy), never crash:
+
+      * "truncate"  -- cut the file mid-document (pre-atomic-write crash);
+      * "garbage"   -- overwrite with non-JSON bytes (torn copy);
+      * "torn_row"  -- keep valid JSON but replace one row's plan fields
+                       with nonsense (partial hand edit / version skew).
+    """
+    import pathlib
+    p = pathlib.Path(path)
+    if mode == "truncate":
+        text = p.read_text() if p.exists() else json.dumps(
+            {"x": {"cin_tile": 8}})
+        p.write_text(text[:max(1, len(text) // 2)])
+    elif mode == "garbage":
+        p.write_bytes(b"\x00\xffnot-json\x13" * 7)
+    elif mode == "torn_row":
+        try:
+            doc = json.loads(p.read_text())
+        except (OSError, ValueError):
+            doc = {}
+        if not isinstance(doc, dict) or not doc:
+            doc = {"seed-row": {}}
+        rng = np.random.default_rng(seed)
+        key = sorted(doc)[int(rng.integers(len(doc)))]
+        doc[key] = {"cin_tile": "not-an-int"}
+        p.write_text(json.dumps(doc))
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}; expected "
+                         f"truncate | garbage | torn_row")

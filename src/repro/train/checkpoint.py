@@ -22,6 +22,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -76,18 +77,81 @@ def available_steps(ckpt_dir: str):
     return out
 
 
+def step_intact(ckpt_dir: str, step: int) -> bool:
+    """True when step_<N> is fully readable: the manifest parses with
+    its expected keys and every leaf file loads with the recorded shape.
+    A checkpoint written through `save` always passes (the directory is
+    published atomically); a torn copy, a partially-deleted step, or a
+    leaf truncated by a disk-full crash fails."""
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    try:
+        with open(os.path.join(final, "manifest.json")) as f:
+            meta = json.load(f)
+        leaves = meta["leaves"]
+        for i, rec in enumerate(leaves):
+            arr = np.load(os.path.join(final, f"leaf_{i}.npy"),
+                          allow_pickle=False)
+            if tuple(arr.shape) != tuple(rec["shape"]):
+                return False
+    except Exception:   # noqa: BLE001 - any unreadability means corrupt
+        return False
+    return True
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest INTACT step.  The LATEST pointer is consulted first, but a
+    corrupt (or stale) candidate is skipped with a `RuntimeWarning` and
+    the next-newest intact step is returned instead -- the same
+    warn-and-fall-back policy as the tile cache (kernels/tiling.py):
+    restart resumes from the best usable state, never crashes on a torn
+    file, and never silently trains from scratch."""
+    candidates = sorted(available_steps(ckpt_dir), reverse=True)
     path = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(path):
-        steps = available_steps(ckpt_dir)
-        return max(steps) if steps else None
-    with open(path) as f:
-        return int(f.read().strip())
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                pointed = int(f.read().strip())
+            candidates = [pointed] + [s for s in candidates if s != pointed]
+        except (OSError, ValueError):
+            warnings.warn(
+                f"unreadable LATEST pointer in {ckpt_dir}; falling back "
+                f"to the newest intact step directory",
+                RuntimeWarning, stacklevel=2)
+    for s in candidates:
+        if step_intact(ckpt_dir, s):
+            return s
+        warnings.warn(
+            f"checkpoint step_{s} in {ckpt_dir} is truncated or "
+            f"partially written; skipping it for the newest intact step",
+            RuntimeWarning, stacklevel=2)
+    return None
 
 
-def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None):
+def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None, *,
+            fallback: bool = True):
     """Restore into the structure of `like`, placing each leaf with the
-    given shardings (mesh-resharding restore)."""
+    given shardings (mesh-resharding restore).
+
+    A truncated or partially-written step_<N> is skipped with a
+    `RuntimeWarning` and the newest intact EARLIER step restores instead
+    (`fallback=False` raises `RuntimeError` for callers that need the
+    exact step).  With no intact step at all, `FileNotFoundError`."""
+    if not step_intact(ckpt_dir, step):
+        if not fallback:
+            raise RuntimeError(
+                f"checkpoint step_{step} in {ckpt_dir} is truncated or "
+                f"partially written and fallback is disabled")
+        intact = [s for s in sorted(available_steps(ckpt_dir))
+                  if s != step and step_intact(ckpt_dir, s)]
+        if not intact:
+            raise FileNotFoundError(
+                f"checkpoint step_{step} in {ckpt_dir} is corrupt and no "
+                f"intact step exists to fall back to")
+        warnings.warn(
+            f"checkpoint step_{step} in {ckpt_dir} is truncated or "
+            f"partially written; restoring newest intact step_{intact[-1]} "
+            f"instead", RuntimeWarning, stacklevel=2)
+        step = intact[-1]
     final = os.path.join(ckpt_dir, f"step_{step}")
     like_leaves, treedef = _flatten(like)
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
@@ -95,8 +159,9 @@ def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None):
     out = []
     for i, (ref, shd) in enumerate(zip(like_leaves, shard_leaves)):
         arr = np.load(os.path.join(final, f"leaf_{i}.npy"))
-        assert tuple(arr.shape) == tuple(ref.shape), \
-            f"leaf {i}: ckpt {arr.shape} vs expected {ref.shape}"
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"leaf {i}: ckpt {arr.shape} vs expected {ref.shape}")
         if shd is not None:
             out.append(jax.device_put(arr, shd))
         else:

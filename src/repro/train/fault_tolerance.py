@@ -28,6 +28,13 @@ def elastic_mesh(devices: Optional[Sequence] = None, *,
     deployments drain failed hosts.
     """
     devices = list(devices if devices is not None else jax.devices())
+    if not devices:
+        # Every host failed: surface the condition explicitly -- a
+        # zero-device Mesh would only blow up later, deep inside jit.
+        raise ValueError("elastic_mesh: no surviving devices")
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel must be >= 1, "
+                         f"got {model_parallel}")
     mp = model_parallel
     while mp > 1 and len(devices) % mp:
         mp //= 2
@@ -45,3 +52,23 @@ def survivors(mesh: Mesh, failed_host_ids: Sequence[int],
         if host not in failed_host_ids:
             out.append(d)
     return out
+
+
+def host_failure_schedule(seed: int, *, n_hosts: int, n_steps: int,
+                          rate: float = 0.02) -> dict:
+    """Deterministic host-loss schedule for elastic-training drills,
+    built on the SAME seeded registry the serving engine injects from
+    (`serve.faults.FaultSchedule`): one seed replays identical failure
+    timing across a serving test and a training drill.
+
+    Returns ``{step: [host_id, ...]}`` -- feed each step's losses to
+    `survivors` + `elastic_mesh` to rebuild the mesh mid-run."""
+    from repro.serve.faults import FaultSchedule
+
+    sched = FaultSchedule.seeded(
+        seed, sites=[f"host:{h}" for h in range(n_hosts)], rate=rate,
+        horizon=n_steps, kinds=("device_loss",))
+    out: dict = {}
+    for ev in sched.events:
+        out.setdefault(ev.index, []).append(int(ev.site.split(":")[1]))
+    return {step: sorted(hosts) for step, hosts in sorted(out.items())}

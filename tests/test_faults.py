@@ -1,0 +1,226 @@
+"""Deterministic fault injection + the backend degradation seam.
+
+Covers `serve/faults.py` (seeded schedules replay exactly; injectors
+raise/delay/poison on schedule), the `core/spec.py::fallback_backend`
+ladder (a failing rung degrades, the observer sees it, a fully-failing
+ladder re-raises), the tile-cache corruption helper against
+`kernels.tiling.warmup_plans` (warn-and-replan, never crash), and the
+shared host-failure schedule in `train/fault_tolerance.py`.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import assert_allclose
+from repro.core.spec import ConvSpec, fallback_backend, resolve_backend
+from repro.serve.faults import (FAULT_KINDS, FaultEvent, FaultInjector,
+                                FaultSchedule, InjectedKernelFault,
+                                corrupt_tile_cache, inject_backend)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def test_seeded_schedule_replays_exactly():
+    kw = dict(sites=["a:pallas", "b:pallas"], rate=0.3, horizon=64)
+    s1 = FaultSchedule.seeded(7, **kw)
+    s2 = FaultSchedule.seeded(7, **kw)
+    assert s1.events == s2.events
+    assert len(s1) > 0
+    # a different seed produces a different schedule (holds for these
+    # fixed seeds; both draws are pure functions of their seed)
+    s3 = FaultSchedule.seeded(8, **kw)
+    assert s1.events != s3.events
+
+
+def test_seeded_schedule_validation():
+    with pytest.raises(ValueError):
+        FaultSchedule.seeded(0, sites=["s"], rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSchedule.seeded(0, sites=["s"], rate=0.5, kinds=("bogus",))
+    with pytest.raises(ValueError):
+        FaultEvent("s", 0, "bogus")
+
+
+def test_injector_counters_and_fired_log():
+    sched = FaultSchedule([FaultEvent("s", 1, "nan_output"),
+                           FaultEvent("t", 0, "inf_output")])
+    inj = FaultInjector(sched)
+    assert inj.step("s") is None              # s#0 clean
+    ev = inj.step("s")                        # s#1 fires
+    assert ev is not None and ev.kind == "nan_output"
+    assert inj.step("s") is None              # s#2 clean (past horizon)
+    assert inj.step("t").kind == "inf_output"
+    assert [e.kind for e in inj.fired] == ["nan_output", "inf_output"]
+
+
+def test_raise_or_delay_and_poison():
+    sched = FaultSchedule([FaultEvent("s", 0, "kernel_exception"),
+                           FaultEvent("s", 1, "nan_output"),
+                           FaultEvent("s", 2, "latency_spike",
+                                      magnitude=0.0)])
+    inj = FaultInjector(sched)
+    with pytest.raises(InjectedKernelFault):
+        inj.raise_or_delay("s")
+    ev = inj.raise_or_delay("s")              # output-class: returned
+    assert ev.kind == "nan_output"
+    out = inj.poison(ev, np.ones((2, 3), np.float32))
+    assert np.isnan(out[0, 0]) and np.isnan(out[1, 0])
+    assert out[0, 1] == 1.0                   # only one element per row
+    assert inj.raise_or_delay("s") is None    # latency spike: slept, clean
+    assert inj.poison(None, np.ones(3)) is not None  # no-op path
+
+
+# ---------------------------------------------------------------------------
+# The spec.py degradation seam
+# ---------------------------------------------------------------------------
+
+def _geom(rng):
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=4)
+    x = rng.standard_normal((2, 8, 8, 3), np.float32)
+    w = rng.standard_normal((4, 4, 3, 5), np.float32)
+    return spec, jax.numpy.asarray(x), jax.numpy.asarray(w)
+
+
+def test_fallback_backend_degrades_and_notifies(rng):
+    spec, x, w = _geom(rng)
+    # A rung that ALWAYS raises (kernel_exception on every invocation).
+    always = FaultInjector(FaultSchedule.seeded(
+        3, sites=[f"xla_zero_free.{op}" for op in
+                  ("forward", "input_grad", "filter_grad", "backward",
+                   "ct_backward", "forward_ep", "input_grad_ep",
+                   "backward_ep", "ct_backward_ep")],
+        rate=1.0, horizon=512, kinds=("kernel_exception",)))
+    broken = inject_backend("xla_zero_free", always)
+    seen = []
+    ladder = fallback_backend(
+        (broken, "reference"),
+        on_fallback=lambda name, op, exc: seen.append((name, op)))
+    y = ladder.forward(x, w, spec)
+    ref = resolve_backend("reference").forward(x, w, spec)
+    assert_allclose(y, ref)
+    assert seen == [("xla_zero_free@inject", "forward")]
+    # fused method routing: a rung without fused kernels still serves
+    dx, dw = ladder.backward(x, ref, w, spec, (8, 8))
+    assert dx.shape == x.shape and dw.shape == w.shape
+    assert ("xla_zero_free@inject", "backward") in seen
+
+
+def test_fallback_backend_exhausted_reraises(rng):
+    spec, x, w = _geom(rng)
+    always = FaultInjector(FaultSchedule.seeded(
+        3, sites=["reference.forward"], rate=1.0, horizon=64,
+        kinds=("kernel_exception",)))
+    broken = inject_backend("reference", always)
+    ladder = fallback_backend((broken,))
+    with pytest.raises(InjectedKernelFault):
+        ladder.forward(x, w, spec)
+    with pytest.raises(ValueError):
+        fallback_backend(())
+
+
+def test_resolve_backend_accepts_tuple_and_memoizes(rng):
+    spec, x, w = _geom(rng)
+    a = resolve_backend(("pallas", "xla_zero_free", "reference"))
+    b = resolve_backend(("pallas", "xla_zero_free", "reference"))
+    assert a is b                  # memoized: stable identity for caches
+    assert a.name == "pallas>xla_zero_free>reference"
+    assert_allclose(a.forward(x, w, spec),
+                    resolve_backend("reference").forward(x, w, spec))
+
+
+def test_inject_backend_poisons_outputs(rng):
+    spec, x, w = _geom(rng)
+    inj = FaultInjector(FaultSchedule([
+        FaultEvent("reference.forward", 0, "inf_output")]))
+    be = inject_backend("reference", inj)
+    y = np.asarray(be.forward(x, w, spec))
+    assert not np.all(np.isfinite(y))
+    y2 = np.asarray(be.forward(x, w, spec))   # next invocation clean
+    assert np.all(np.isfinite(y2))
+
+
+# ---------------------------------------------------------------------------
+# Tile-cache corruption vs the warmup path
+# ---------------------------------------------------------------------------
+
+def _warmup_entries():
+    spec = ConvSpec.make(stride=2, padding=1, filter_shape=4)
+    return [("input_grad", spec, (2, 8, 8, 3), (2, 4, 4, 5))]
+
+
+@pytest.mark.parametrize("mode", ["truncate", "garbage", "torn_row"])
+def test_corrupt_tile_cache_warn_and_replan(tmp_path, mode):
+    from repro.kernels import tiling
+    path = tmp_path / "tile_cache.json"
+    # seed a valid artifact first so every corruption mode has a victim
+    entry = _warmup_entries()[0]
+    st, plan = tiling.plan_strategy(entry[0], entry[1],
+                                    x_shape=entry[2], dy_shape=entry[3])
+    key = tiling._cache_key(entry[0], entry[1], entry[2], entry[3], 4,
+                            tiling.DEFAULT_VMEM_BUDGET, False, None, "auto")
+    path.write_text(__import__("json").dumps(
+        {key: dict(plan.as_dict(), strategy=st)}))
+    corrupt_tile_cache(path, mode)
+    with pytest.warns(RuntimeWarning):
+        plans = tiling.warmup_plans(_warmup_entries(), tile_cache_path=path)
+    assert len(plans) == 1
+    (info,) = plans.values()
+    assert info["source"] == "analytical"
+    assert info["strategy"] in tiling.STRATEGIES
+    with pytest.raises(ValueError):
+        corrupt_tile_cache(path, "bogus")
+
+
+def test_warmup_plans_replays_artifact(tmp_path):
+    from repro.kernels import tiling
+    path = tmp_path / "tile_cache.json"
+    entry = _warmup_entries()[0]
+    st, plan = tiling.plan_strategy(entry[0], entry[1],
+                                    x_shape=entry[2], dy_shape=entry[3])
+    key = tiling._cache_key(entry[0], entry[1], entry[2], entry[3], 4,
+                            tiling.DEFAULT_VMEM_BUDGET, False, None, "auto")
+    path.write_text(__import__("json").dumps(
+        {key: dict(plan.as_dict(), strategy=st, us=12.0)}))
+    plans = tiling.warmup_plans(_warmup_entries(), tile_cache_path=path)
+    (info,) = plans.values()
+    assert info["source"] == "artifact"
+    assert info["strategy"] == st
+    assert info["plan"].cin_tile == plan.cin_tile
+
+
+def test_warmup_plans_missing_artifact_is_analytical(tmp_path):
+    from repro.kernels import tiling
+    plans = tiling.warmup_plans(
+        _warmup_entries(), tile_cache_path=tmp_path / "absent.json")
+    (info,) = plans.values()
+    assert info["source"] == "analytical"
+    assert info["plan"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Shared schedule: training host losses from the same registry
+# ---------------------------------------------------------------------------
+
+def test_host_failure_schedule_deterministic():
+    from repro.train.fault_tolerance import host_failure_schedule
+    a = host_failure_schedule(11, n_hosts=4, n_steps=50, rate=0.1)
+    b = host_failure_schedule(11, n_hosts=4, n_steps=50, rate=0.1)
+    assert a == b
+    assert a                                   # fires at rate 0.1 over 200
+    for step, hosts in a.items():
+        assert 0 <= step < 50
+        assert hosts == sorted(hosts)
+        assert all(0 <= h < 4 for h in hosts)
+
+
+def test_fault_kinds_closed_set():
+    # the engine, the bench fault arm, and the docs all enumerate kinds;
+    # growing the set must be a conscious change
+    assert set(FAULT_KINDS) == {"kernel_exception", "device_loss",
+                                "latency_spike", "nan_output",
+                                "inf_output"}

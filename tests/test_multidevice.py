@@ -170,6 +170,39 @@ def test_elastic_restore_across_meshes():
     """)
 
 
+def test_elastic_mesh_non_power_of_two_survivors():
+    """Losing 2 of 8 devices leaves 6: the TP axis halves until it
+    divides the survivor count (16 -> 2 here, keeping TP a divisor of
+    the original power-of-two layout), and every survivor is used."""
+    _run("""
+    import jax
+    from repro.train.fault_tolerance import elastic_mesh, survivors
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devs = jax.devices()
+    assert len(devs) == 8
+    m6 = elastic_mesh(devs[:6], model_parallel=16)
+    assert m6.shape["model"] == 2 and m6.shape["data"] == 3
+    assert m6.devices.size == 6
+    # 5 survivors: no even split exists, TP collapses to 1 (pure DP)
+    m5 = elastic_mesh(devs[:5], model_parallel=4)
+    assert m5.shape["model"] == 1 and m5.shape["data"] == 5
+    # mp already divides: unchanged
+    m8 = elastic_mesh(devs, model_parallel=4)
+    assert m8.shape["model"] == 4 and m8.shape["data"] == 2
+    # mp larger than the whole device set halves down into range
+    m_big = elastic_mesh(devs[:6], model_parallel=64)
+    assert m_big.shape["model"] == 2 and m_big.shape["data"] == 3
+    # survivors() on a multi-host mesh: drop host 0 of 4x2-hosts
+    mesh8 = Mesh(np.asarray(devs).reshape(4, 2), ("data", "model"))
+    surv = survivors(mesh8, [0], devices_per_host=2)
+    assert len(surv) == 6
+    assert all(d.id >= 2 for d in surv)
+    print("ok")
+    """)
+
+
 def test_mini_dryrun_lower_compile():
     """A miniature of the production dry-run: lower+compile a smoke arch
     on a (4,2) mesh with the exact production sharding logic, then check

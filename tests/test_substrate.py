@@ -204,8 +204,70 @@ def test_restore_shape_mismatch_raises(tmp_path):
     bad = {"params": {"w": jax.ShapeDtypeStruct((5, 5), jnp.float32),
                       "b": jax.ShapeDtypeStruct((4,), jnp.float32)},
            "opt": {"count": jax.ShapeDtypeStruct((), jnp.int32)}}
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         ckpt.restore(d, 1, bad)
+
+
+def _truncate_leaf(d, step, nbytes=16):
+    p = os.path.join(d, f"step_{step}", "leaf_0.npy")
+    with open(p, "r+b") as f:
+        f.truncate(nbytes)
+
+
+def _like(t):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+
+
+def test_latest_step_skips_truncated(tmp_path):
+    """A leaf truncated by a disk-full crash: latest_step warns and
+    returns the newest INTACT step instead of the torn one."""
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree(1))
+    ckpt.save(d, 2, _tree(2))
+    _truncate_leaf(d, 2)
+    with pytest.warns(RuntimeWarning, match="step_2"):
+        assert ckpt.latest_step(d) == 1
+    # torn manifest counts as corrupt too
+    with open(os.path.join(d, "step_1", "manifest.json"), "w") as f:
+        f.write('{"step": 1, "leav')
+    with pytest.warns(RuntimeWarning):
+        assert ckpt.latest_step(d) is None
+
+
+def test_restore_falls_back_to_intact(tmp_path):
+    d = str(tmp_path)
+    t1, t2 = _tree(1), _tree(2)
+    ckpt.save(d, 1, t1)
+    ckpt.save(d, 2, t2)
+    _truncate_leaf(d, 2)
+    with pytest.warns(RuntimeWarning, match="step_1"):
+        out = ckpt.restore(d, 2, _like(t2))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(t1["params"]["w"]))
+    # callers that need the exact step can refuse the fallback
+    with pytest.raises(RuntimeError, match="truncated"):
+        ckpt.restore(d, 2, _like(t2), fallback=False)
+
+
+def test_restore_no_intact_step_raises(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 3, _tree())
+    _truncate_leaf(d, 3)
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(d, 3, _like(_tree()))
+
+
+def test_latest_step_unreadable_pointer(tmp_path):
+    """A garbage LATEST pointer warns and falls back to the newest
+    intact step directory rather than crashing the restart."""
+    d = str(tmp_path)
+    ckpt.save(d, 4, _tree())
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("not-a-step")
+    with pytest.warns(RuntimeWarning, match="LATEST"):
+        assert ckpt.latest_step(d) == 4
+    assert ckpt.step_intact(d, 4)
+    assert not ckpt.step_intact(d, 99)
 
 
 # ---------------------------------------------------------------------------

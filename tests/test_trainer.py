@@ -68,6 +68,37 @@ def test_elastic_mesh_shrink():
     # at 8 devices in tests/test_multidevice.py
 
 
+def test_elastic_mesh_edge_cases():
+    # all hosts failed: explicit error, not a zero-device mesh that
+    # detonates later inside jit
+    with pytest.raises(ValueError, match="no surviving devices"):
+        elastic_mesh([])
+    # a nonsensical TP request fails loudly too
+    with pytest.raises(ValueError, match="model_parallel"):
+        elastic_mesh(jax.devices()[:1], model_parallel=0)
+    with pytest.raises(ValueError, match="model_parallel"):
+        elastic_mesh(jax.devices()[:1], model_parallel=-2)
+    # model_parallel far beyond the device set halves down to fit
+    m = elastic_mesh(jax.devices()[:1], model_parallel=1024)
+    assert m.shape["model"] == 1 and m.shape["data"] == 1
+
+
+def test_survivors_edge_cases():
+    from jax.sharding import Mesh
+    from repro.train.fault_tolerance import survivors
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    # the lone device lives on host 0
+    assert len(survivors(mesh, [])) == 1
+    assert len(survivors(mesh, [1], devices_per_host=1)) == 1
+    # every host failed -> empty survivor set, which elastic_mesh rejects
+    surv = survivors(mesh, [0], devices_per_host=1)
+    assert surv == []
+    with pytest.raises(ValueError, match="no surviving devices"):
+        elastic_mesh(surv)
+
+
 def test_serve_engine_greedy_matches_manual():
     cfg = get_smoke_config("qwen2_1_5b")
     lm = LM(cfg)
