@@ -8,16 +8,19 @@ the wall-clock microbenchmarks and the (arch x shape) roofline table.
         # backward, the epilogue-fused direct/transposed families, the
         # CNN/GAN train-step rows with epilogue fusion on and off,
         # one 2-forced-device shard_map train-step row in a subprocess,
-        # and one serve-* row through the geometry-bucketed
-        # ConvServeEngine incl. its fault-mode degradation-ladder arm)
+        # one serve-* row through the geometry-bucketed ConvServeEngine
+        # incl. its fault-mode degradation-ladder arm, and one
+        # elastic-train-* row: guarded-vs-unguarded ConvTrainer step +
+        # a 2-device RunSupervisor recovery drill in a subprocess)
         # + BENCH_conv.json schema-drift guard
   PYTHONPATH=src python -m benchmarks.run --delta-gate   # CI: re-time
         # the committed geometries, fail if a pallas/baseline ratio
         # regressed > 1.5x vs the corresponding BENCH_conv.json row
         # (incl. fused-backward/two-launch, epilogue-fused/unfused,
         # train-step, the per-device-count mdev-* train-step ratios,
-        # each re-timed in its own forced-device subprocess, and the
-        # serve-* engine p50 ratios)
+        # each re-timed in its own forced-device subprocess, the
+        # serve-* engine p50 ratios, and the elastic-train-*
+        # guarded/unguarded step-overhead ratios)
   PYTHONPATH=src python -m benchmarks.run --filter shufflenet
         # single-row rerun (substring match; never rewrites the JSON)
   PYTHONPATH=src python -m benchmarks.run --filter strategy=implicit_gemm
@@ -47,19 +50,22 @@ def main() -> None:
                          "(incl. fused backward, epilogue-fused "
                          "direct/transposed families, train-step rows "
                          "with epilogue fusion on/off, a 2-device "
-                         "shard_map train-step row, and a serve-* row "
+                         "shard_map train-step row, a serve-* row "
                          "through the ConvServeEngine with its "
-                         "fault-mode degradation-ladder arm) through "
-                         "the real backend entry points, failing on "
-                         "BENCH_conv.json schema drift")
+                         "fault-mode degradation-ladder arm, and an "
+                         "elastic-train-* row with a RunSupervisor "
+                         "recovery drill) through the real backend "
+                         "entry points, failing on BENCH_conv.json "
+                         "schema drift")
     ap.add_argument("--delta-gate", action="store_true",
                     help="CI perf gate: re-time the committed "
                          "BENCH_conv.json geometries and fail if any "
                          "pallas/baseline ratio (incl. fused-backward/"
                          "two-launch, epilogue fused/unfused, "
                          "train-step, per-device-count mdev-* "
-                         "train-step, and serve-* engine p50) "
-                         "regressed > 1.5x")
+                         "train-step, serve-* engine p50, and the "
+                         "elastic-train-* guarded/unguarded step "
+                         "overhead) regressed > 1.5x")
     ap.add_argument("--filter", metavar="SUBSTR", default=None,
                     help="run only conv-backend rows whose case name "
                          "contains SUBSTR (cheap single-row rerun during "

@@ -256,6 +256,35 @@ SERVE_CASES = [
 _SERVE_FAULT_RATE = 0.05
 _SERVE_MAX_ITERS = 7    # interpret-mode cap, same rationale as multidev
 
+# Elastic-training rows (DESIGN.md Sec. 2.12): two arms per case.
+#   * `train_step_guard_us` -- the ConvTrainer's GUARDED jitted step
+#     (in-graph all-finite flag over updated params + loss) vs the same
+#     step unguarded, interleaved on the pallas backend; the
+#     guarded/unguarded ratio is what the delta gate pins (the guard is
+#     contractually cheap -- same launch count, a few XLA reductions).
+#   * `recovery` -- a seeded supervisor drill in a SUBPROCESS with
+#     `n_devices` forced host devices split over `hosts` hosts: the run
+#     loses a host and hits injected NaN steps per the fixed
+#     `fault_seed` (host losses from `host_failure_schedule`, NaN steps
+#     from `faults.training_schedule` -- the same registry), and the
+#     row records steps lost, recompiles, and recovery wallclock.  Run
+#     once per bench (it is an accounting row, not a timing sweep); the
+#     drill uses the xla_zero_free backend so the row measures the
+#     recovery machinery, not interpret-mode kernel time.
+ELASTIC_TRAIN_CASES = [
+    ("elastic-train-cnn", "cnn",
+     {"widths": [4], "batch": 8, "image": 8, "n_classes": 4,
+      "total_steps": 8, "ckpt_every": 2, "backend": "xla_zero_free",
+      "n_devices": 8, "hosts": 2, "fault_seed": 4,
+      "host_rate": 0.12, "nan_rate": 0.2}),
+    ("elastic-train-gan-gen", "gan_gen",
+     {"base": 4, "z_dim": 8, "batch": 8,
+      "total_steps": 8, "ckpt_every": 2, "backend": "xla_zero_free",
+      "n_devices": 8, "hosts": 2, "fault_seed": 4,
+      "host_rate": 0.12, "nan_rate": 0.2}),
+]
+_ELASTIC_MAX_ITERS = 7   # guard-arm cap, same rationale as multidev
+
 
 def _serve_engine(kind, cfg, ladder, injector=None):
     """One `ConvServeEngine` for a serve bench arm, warmed up (tile
@@ -412,6 +441,104 @@ def _train_step_fns(kind, cfg, backends, rng, fuse_epilogue=False,
     return fns
 
 
+# ConvTrainerConfig fields an elastic bench config may carry; the rest
+# of the config dict (n_devices, hosts, fault_seed, ...) is drill-level.
+_ELASTIC_TRAINER_KEYS = ("widths", "image", "channels", "n_classes",
+                         "z_dim", "base", "batch", "total_steps", "lr",
+                         "stride", "ckpt_every", "backend")
+
+
+def _elastic_trainer_cfg(kind, cfg, **overrides):
+    from repro.train.conv_trainer import ConvTrainerConfig
+    kw = {k: cfg[k] for k in _ELASTIC_TRAINER_KEYS if k in cfg}
+    if "widths" in kw:
+        kw["widths"] = tuple(kw["widths"])
+    kw.update(overrides)
+    return ConvTrainerConfig(workload=kind, fuse_epilogue=True, **kw)
+
+
+def _guard_step_fns(kind, cfg):
+    """Zero-arg jitted callables for the guarded vs unguarded
+    ConvTrainer step on the pallas backend, shared state/batch --
+    the interleaved pair behind `train_step_guard_us`."""
+    from repro.train.conv_trainer import ConvTrainer
+    tcfg = _elastic_trainer_cfg(kind, cfg, backend="pallas",
+                                ckpt_dir=None)
+    trainer = ConvTrainer(tcfg)
+    state = trainer.init_state()
+    data = trainer._put_batch(trainer.data.batch_at(0))
+    lr = np.float32(tcfg.lr)
+    fns = {}
+    for label, guarded in (("pallas", True), ("pallas_unguarded", False)):
+        f = jax.jit(trainer.build_step(guarded=guarded))
+        fns[label] = lambda f=f: f(state, data, lr)
+    return fns
+
+
+def _elastic_recovery_measure(payload: dict) -> dict:
+    """Subprocess body for one elastic-recovery drill: run the
+    RunSupervisor storm (seeded host loss + seeded NaN steps) on the
+    forced host devices and report the recovery accounting."""
+    import tempfile
+    from repro.serve.faults import FaultInjector, training_schedule
+    from repro.train.fault_tolerance import host_failure_schedule
+    from repro.train.supervisor import RunSupervisor
+    kind, cfg = payload["kind"], payload["config"]
+    n_dev, hosts = cfg["n_devices"], cfg["hosts"]
+    host_sched = host_failure_schedule(
+        cfg["fault_seed"], n_hosts=hosts, n_steps=cfg["total_steps"],
+        rate=cfg["host_rate"])
+    inj = FaultInjector(training_schedule(
+        cfg["fault_seed"], workload=kind, n_steps=4 * cfg["total_steps"],
+        rate=cfg["nan_rate"], kinds=("nan_output",)))
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = _elastic_trainer_cfg(kind, cfg, ckpt_dir=d)
+        sup = RunSupervisor(tcfg, devices_per_host=n_dev // hosts,
+                            model_parallel=2, host_schedule=host_sched,
+                            injector=inj)
+        t0 = time.perf_counter()
+        out = sup.run()
+        wall = time.perf_counter() - t0
+    rep = out["report"]
+    return {"steps_lost": rep["steps_lost"],
+            "recompiles": rep["recompiles"],
+            "recovery_wallclock_s": round(rep["recovery_wallclock_s"], 3),
+            "host_losses": rep["host_losses"],
+            "nonfinite_steps": rep["guard"]["nonfinite_steps"],
+            "meshes": rep["meshes"],
+            "completed_steps": (out["history"][-1]["step"]
+                                if out["history"] else 0),
+            "drill_wall_s": round(wall, 3)}
+
+
+def _elastic_recovery(kind, cfg) -> dict:
+    """Run `_elastic_recovery_measure` in a subprocess with the host
+    device count forced to the case's `n_devices` (same launcher
+    pattern as `_multidev_time`)."""
+    payload = json.dumps({"kind": kind, "config": cfg})
+    root = BENCH_JSON.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count"
+                          f"={cfg['n_devices']}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [str(root / "src"), str(root),
+                    env.get("PYTHONPATH", "")] if p)
+    code = ("import sys, json\n"
+            "from benchmarks.wallclock import _elastic_recovery_measure\n"
+            "print(json.dumps(_elastic_recovery_measure("
+            "json.loads(sys.stdin.read()))))\n")
+    proc = subprocess.run([sys.executable, "-c", code], input=payload,
+                          capture_output=True, text=True, cwd=str(root),
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"elastic recovery drill child (kind={kind}) failed:\n"
+            f"{proc.stdout}\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 def _plan_dict(op, spec, x_shape, dy_shape, epilogue=None):
     """The planner's decision for one (op, geometry) -- recorded per
     BENCH_conv.json row so the perf trajectory is attributable to the
@@ -455,7 +582,8 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                        dilated_cases=None, strided_dilated_cases=None,
                        train_cases=None, epilogue_cases=None,
                        tconv_epilogue_cases=None, multidev_cases=None,
-                       serve_cases=None, json_path=None, name_filter=None,
+                       serve_cases=None, elastic_cases=None,
+                       json_path=None, name_filter=None,
                        records_out=None):
     """Time tconv + filter-grad + the FUSED dual-gradient backward
     through the xla_zero_free and pallas backends for each geometry --
@@ -887,6 +1015,32 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                      f";fallbacks={h['fallbacks']}"
                      f";completed={h['completed']}"))
         records.append(rec)
+    # Elastic-training rows (DESIGN.md Sec. 2.12): the guarded vs
+    # unguarded ConvTrainer step interleaved on pallas (the gated
+    # overhead ratio), plus ONE seeded supervisor recovery drill in a
+    # forced-device subprocess (accounting, not a timing sweep).
+    for name, kind, cfg in flt(ELASTIC_TRAIN_CASES if elastic_cases
+                               is None else elastic_cases):
+        rec = {"layer": name, "kind": kind, "config": cfg,
+               "interpret_mode": jax.default_backend() != "tpu",
+               "epilogue": "fused", "strategy": "auto",
+               "train_step_guard_us": {}, "recovery": {}}
+        t_g = _time_interleaved(_guard_step_fns(kind, cfg),
+                                iters=min(iters, _ELASTIC_MAX_ITERS),
+                                warmup=warmup)
+        for label in ("pallas", "pallas_unguarded"):
+            rec["train_step_guard_us"][label] = round(t_g[label], 1)
+        rows.append((f"wallclock.elastic_train.guard.{name}",
+                     rec["train_step_guard_us"]["pallas"],
+                     f"guard_overhead="
+                     f"{t_g['pallas'] / t_g['pallas_unguarded']:.2f}x"))
+        rec["recovery"] = _elastic_recovery(kind, cfg)
+        rows.append((f"wallclock.elastic_train.recovery.{name}",
+                     rec["recovery"]["recovery_wallclock_s"],
+                     f"steps_lost={rec['recovery']['steps_lost']}"
+                     f";recompiles={rec['recovery']['recompiles']}"
+                     f";completed={rec['recovery']['completed_steps']}"))
+        records.append(rec)
     if records_out is not None:
         records_out.extend(records)
     if write_json:
@@ -922,7 +1076,15 @@ def conv_backend_bench(iters=5, warmup=1, write_json=True, cases=None,
                      "(`serve_us`=p50, plus p99 and requests/s), and "
                      "`fault` re-times the full degradation ladder "
                      "under a seeded 5% kernel-fault schedule, gated "
-                     "on bounded degradation",
+                     "on bounded degradation; `elastic-train-*` rows "
+                     "time the ConvTrainer's GUARDED jitted step (in-"
+                     "graph all-finite flag, same launch count) against "
+                     "the `pallas_unguarded` step -- the gated guard-"
+                     "overhead ratio -- and `recovery` records one "
+                     "seeded RunSupervisor drill (host loss + NaN "
+                     "steps at the row's fault_seed, forced-device "
+                     "subprocess): steps lost, recompiles, recovery "
+                     "wallclock",
              "cases": records}, indent=2) + "\n")
         rows.append(("wallclock.conv_backend.json", str(path), ""))
     return rows
@@ -961,6 +1123,11 @@ _GATE_FIELDS = {
     # the same row -- a ratio regression means the fused kernels lost
     # ground inside the identical engine path.
     "serve_us": "xla_zero_free",
+    # Elastic training: the guarded step gates against the SAME step
+    # unguarded -- the numerics guard is contractually a few fused XLA
+    # reductions (same launch count), so a ratio regression means the
+    # guard grew a real cost.
+    "train_step_guard_us": "pallas_unguarded",
 }
 
 
@@ -990,10 +1157,11 @@ def delta_gate(threshold=1.5, iters=21, warmup=2):
     # `strategy` (planner pick) and `winner` (measured race) are
     # host/timing-dependent, not geometry -- like `tiling`, they must
     # not trip the drift check when a model retune flips them.
+    # `recovery` is wallclock/host-dependent accounting, like `fault`.
     timing_keys = set(_GATE_FIELDS) | {"tiling", "interpret_mode",
                                        "strategy", "winner",
                                        "serve_p99_us", "serve_rps",
-                                       "fault"}
+                                       "fault", "recovery"}
     for rec in records:
         base = committed.get(rec["layer"])
         if base is None or base.get("interpret_mode") != \
@@ -1083,6 +1251,15 @@ SMOKE_SERVE_CASES = [
      {"z_dim": 8, "base": 4, "out_ch": 3, "slot_batch": 1,
       "requests": 2}),
 ]
+# One tiny elastic-training row: guarded-vs-unguarded step plus a
+# 2-device / 2-host supervisor recovery drill in a subprocess.
+SMOKE_ELASTIC_CASES = [
+    ("smoke-elastic-train-cnn", "cnn",
+     {"widths": [4], "batch": 4, "image": 8, "n_classes": 4,
+      "total_steps": 4, "ckpt_every": 2, "backend": "xla_zero_free",
+      "n_devices": 2, "hosts": 2, "fault_seed": 4,
+      "host_rate": 0.12, "nan_rate": 0.2}),
+]
 
 
 def _record_schema(doc) -> set[frozenset]:
@@ -1114,6 +1291,7 @@ def smoke():
             tconv_epilogue_cases=SMOKE_TCONV_EPILOGUE_CASES,
             multidev_cases=SMOKE_MULTIDEV_CASES,
             serve_cases=SMOKE_SERVE_CASES,
+            elastic_cases=SMOKE_ELASTIC_CASES,
             json_path=smoke_json)
         got = _record_schema(json.loads(smoke_json.read_text()))
         committed_doc = json.loads(BENCH_JSON.read_text())
@@ -1132,7 +1310,7 @@ def smoke():
     finally:
         smoke_json.unlink(missing_ok=True)
     rows.append(("wallclock.smoke.schema", "ok",
-                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES + SMOKE_MULTIDEV_CASES + SMOKE_EPILOGUE_CASES + SMOKE_TCONV_EPILOGUE_CASES + SMOKE_SERVE_CASES)}"
+                 f"{len(SMOKE_CASES + SMOKE_DILATED_CASES + SMOKE_STRIDED_DILATED_CASES + SMOKE_TRAIN_CASES + SMOKE_MULTIDEV_CASES + SMOKE_EPILOGUE_CASES + SMOKE_TCONV_EPILOGUE_CASES + SMOKE_SERVE_CASES + SMOKE_ELASTIC_CASES)}"
                  " families"))
     return rows
 

@@ -85,3 +85,19 @@ def sgd_step(params, x, labels, *, lr=0.05, stride=2, backend=None,
         fuse_epilogue=fuse_epilogue)
     new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
     return new, loss
+
+
+def guarded_sgd_step(params, x, labels, *, lr=0.05, stride=2, backend=None,
+                     fuse_epilogue=True):
+    """`sgd_step` + the in-graph numerics guard: (new_params, loss,
+    all_finite), where `all_finite` is a scalar bool over the UPDATED
+    params and the loss, computed inside the same jit (cheap XLA
+    reductions -- the guarded step is jaxpr-pinned to the same
+    `pallas_call` count as the unguarded one, DESIGN.md Sec. 2.12).
+    `lr` may be a traced scalar, so shrink-lr retries reuse the
+    compiled step."""
+    from repro.models.layers import tree_all_finite
+
+    new, loss = sgd_step(params, x, labels, lr=lr, stride=stride,
+                         backend=backend, fuse_epilogue=fuse_epilogue)
+    return new, loss, tree_all_finite(new, loss)

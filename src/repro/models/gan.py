@@ -159,3 +159,75 @@ def gen_sgd_step(g_params, d_params, z, *, lr=0.05, backend=None,
     loss, grads = jax.value_and_grad(g_loss)(g_params)
     new = jax.tree_util.tree_map(lambda p, g: p - lr * g, g_params, grads)
     return new, loss
+
+
+def gan_init(rng, *, z_dim=64, base=64, ch=3):
+    """The full GAN training state pytree: {"g": ..., "d": ...}.
+    One checkpointable unit for ConvTrainer (DESIGN.md Sec. 2.12)."""
+    kg, kd = jax.random.split(rng)
+    return {"g": generator_init(kg, z_dim=z_dim, base=base, out_ch=ch),
+            "d": discriminator_init(kd, in_ch=ch, base=base)}
+
+
+def gan_sgd_step(state, z, real, *, lr=0.05, backend=None,
+                 fuse_epilogue=True):
+    """One simultaneous GAN step on the {"g", "d"} state pytree:
+    (new_state, g_loss, d_loss).  Both gradients evaluate against the
+    PRE-step opposite network (simultaneous gradient descent), so the
+    update is a pure function of (state, z, real) -- the determinism
+    the elastic resume drills rely on.  Mesh-aware like `cnn.sgd_step`:
+    under `sharding.use_mesh` every conv dispatches to shard_map'd
+    launches with the batch pinned to "dp"."""
+    from repro.parallel import sharding
+
+    z = sharding.shard(z, "dp", None)
+    real = sharding.shard(real, "dp", None, None, None)
+    g_params, d_params = state["g"], state["d"]
+
+    def g_loss_fn(gp):
+        fake = generator_apply(gp, z, backend=backend,
+                               fuse_epilogue=fuse_epilogue)
+        d_fake = discriminator_apply(d_params, fake, backend=backend,
+                                     fuse_epilogue=fuse_epilogue)
+        return jax.nn.softplus(-d_fake).mean()
+
+    def d_loss_fn(dp):
+        fake = generator_apply(g_params, z, backend=backend,
+                               fuse_epilogue=fuse_epilogue)
+        d_fake = discriminator_apply(dp, fake, backend=backend,
+                                     fuse_epilogue=fuse_epilogue)
+        d_real = discriminator_apply(dp, real, backend=backend,
+                                     fuse_epilogue=fuse_epilogue)
+        sp = jax.nn.softplus
+        return sp(-d_real).mean() + sp(d_fake).mean()
+
+    g_loss, g_grads = jax.value_and_grad(g_loss_fn)(g_params)
+    d_loss, d_grads = jax.value_and_grad(d_loss_fn)(d_params)
+    upd = lambda p, g: jax.tree_util.tree_map(
+        lambda a, b: a - lr * b, p, g)
+    return ({"g": upd(g_params, g_grads), "d": upd(d_params, d_grads)},
+            g_loss, d_loss)
+
+
+def guarded_gen_sgd_step(g_params, d_params, z, *, lr=0.05, backend=None,
+                         fuse_epilogue=True):
+    """`gen_sgd_step` + in-graph all-finite flag:
+    (new_g_params, g_loss, all_finite).  Same jit, same launch count
+    (DESIGN.md Sec. 2.12); `lr` may be a traced scalar."""
+    from repro.models.layers import tree_all_finite
+
+    new, loss = gen_sgd_step(g_params, d_params, z, lr=lr,
+                             backend=backend, fuse_epilogue=fuse_epilogue)
+    return new, loss, tree_all_finite(new, loss)
+
+
+def guarded_gan_sgd_step(state, z, real, *, lr=0.05, backend=None,
+                         fuse_epilogue=True):
+    """`gan_sgd_step` + in-graph all-finite flag:
+    (new_state, g_loss, d_loss, all_finite)."""
+    from repro.models.layers import tree_all_finite
+
+    new, g_loss, d_loss = gan_sgd_step(state, z, real, lr=lr,
+                                       backend=backend,
+                                       fuse_epilogue=fuse_epilogue)
+    return new, g_loss, d_loss, tree_all_finite(new, g_loss, d_loss)

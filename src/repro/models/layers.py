@@ -330,3 +330,23 @@ def chunked_xent(params, x, labels, cfg: ModelConfig):
 
     (tot, cnt), _ = lax.scan(chunk_loss, (0.0, 0.0), (xc, lc))
     return tot / jnp.maximum(cnt, 1.0)
+
+
+def tree_all_finite(*trees) -> jax.Array:
+    """Scalar bool: every inexact leaf of every given pytree is finite.
+
+    The in-graph numerics guard (DESIGN.md Sec. 2.12): a handful of
+    `isfinite(...).all()` reductions folded into the SAME jitted step --
+    cheap XLA element-wise + reduce ops, no extra kernel launch per conv
+    layer -- so a guarded step costs one fused tail, not a second pass
+    over the model.  Integer leaves (labels, counters) are skipped."""
+    flags = []
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            leaf = jnp.asarray(leaf)
+            if jnp.issubdtype(leaf.dtype, jnp.inexact):
+                flags.append(jnp.isfinite(leaf).all())
+    out = jnp.asarray(True)
+    for f in flags:
+        out = jnp.logical_and(out, f)
+    return out

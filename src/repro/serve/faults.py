@@ -172,6 +172,50 @@ class FaultInjector:
         return out.reshape(value.shape) if out.ndim > 1 else out[0]
 
 
+def train_site(workload: str) -> str:
+    """Canonical fault-site name for a training workload's step loop
+    (`train.cnn`, `train.gan`, `train.gan_gen`): the ConvTrainer
+    consults this site once per step ATTEMPT, so retries advance the
+    same counter the schedule was seeded against."""
+    return f"train.{workload}"
+
+
+def training_schedule(seed: int, *, workload: str, n_steps: int,
+                      rate: float = 0.02,
+                      kinds: Sequence[str] = ("nan_output",
+                                              "latency_spike",
+                                              "kernel_exception"),
+                      magnitude: float = 0.0) -> FaultSchedule:
+    """Seeded per-step fault schedule for a training run, on the SAME
+    registry the serving engine and `host_failure_schedule` draw from:
+    one seed replays identical failure timing across a serving test and
+    a training drill (DESIGN.md Sec. 2.11/2.12).  Defaults exclude
+    `device_loss` -- host losses come from `host_failure_schedule` so
+    the two axes of the storm stay independently seedable."""
+    return FaultSchedule.seeded(
+        seed, sites=[train_site(workload)], rate=rate, horizon=n_steps,
+        kinds=kinds, magnitude=magnitude)
+
+
+def poison_batch(injector: FaultInjector, ev: Optional[FaultEvent],
+                 batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Apply an output-class event to a host batch dict: stamp NaN/Inf
+    into the first float array (inputs / latents) -- enough for the
+    forward pass to propagate non-finites into loss and grads, so the
+    trainer's REAL in-graph guard trips instead of a test-only seam.
+    Launch-class events and None pass the batch through untouched."""
+    if ev is None or ev.kind not in OUTPUT_KINDS:
+        return batch
+    out = dict(batch)
+    for key in sorted(out):
+        v = out[key]
+        if isinstance(v, np.ndarray) and \
+                np.issubdtype(v.dtype, np.floating):
+            out[key] = injector.poison(ev, v)
+            break
+    return out
+
+
 def inject_backend(base, injector: FaultInjector, *, prefix=None):
     """Wrap a `ConvBackend` so every op consults `injector` first.
 

@@ -59,8 +59,19 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep_last: int = 3):
 
 
 def _prune(ckpt_dir: str, keep_last: int):
+    """Drop old steps, counting `keep_last` over INTACT steps only: torn
+    newer directories (a crashed async write, a truncated copy) must not
+    push the newest restorable checkpoint out of the retention window."""
+    if not keep_last:
+        return
     steps = sorted(available_steps(ckpt_dir))
-    for s in steps[:-keep_last] if keep_last else []:
+    intact = [s for s in steps if step_intact(ckpt_dir, s)]
+    keep = set(intact[-keep_last:])
+    for s in steps:
+        if s in keep or s > min(keep, default=-1):
+            # Torn steps newer than the oldest kept intact step stay too:
+            # they may still be mid-write by a concurrent saver.
+            continue
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
 
 
@@ -158,37 +169,59 @@ def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None, *,
                     if shardings is not None else [None] * len(like_leaves))
     out = []
     for i, (ref, shd) in enumerate(zip(like_leaves, shard_leaves)):
-        arr = np.load(os.path.join(final, f"leaf_{i}.npy"))
+        arr = np.load(os.path.join(final, f"leaf_{i}.npy"),
+                      allow_pickle=False)
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"leaf {i}: ckpt {arr.shape} vs expected {ref.shape}")
+        arr = arr.astype(ref.dtype)   # both branches: a resharding
+        # restore must not silently keep the checkpoint dtype either
         if shd is not None:
             out.append(jax.device_put(arr, shd))
         else:
-            out.append(jax.device_put(arr.astype(ref.dtype)))
+            out.append(jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 class AsyncCheckpointer:
-    """Snapshot-to-host synchronously, write in a background thread."""
+    """Snapshot-to-host synchronously, write in a background thread.
+
+    A failure in the background write (disk full, permission flip, torn
+    filesystem) is NOT swallowed: it is captured and re-raised on the
+    next `wait()` / `save_async()`, so the trainer finds out a
+    checkpoint it believes exists was never published, while the step
+    that overlapped the write still completes."""
 
     def __init__(self, ckpt_dir: str, keep_last: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep_last = keep_last
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write to {self.ckpt_dir} failed"
+            ) from err
 
     def save_async(self, step: int, tree: Any):
         self.wait()
         # Synchronous device->host snapshot (consistent state) ...
         host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
                                  tree)
-        # ... asynchronous disk write.
-        self._thread = threading.Thread(
-            target=save, args=(self.ckpt_dir, step, host_tree),
-            kwargs={"keep_last": self.keep_last}, daemon=True)
+
+        # ... asynchronous disk write; exceptions are parked for the
+        # next wait()/save_async() instead of dying with the thread.
+        def _write():
+            try:
+                save(self.ckpt_dir, step, host_tree,
+                     keep_last=self.keep_last)
+            except BaseException as e:   # noqa: BLE001 - must propagate
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()

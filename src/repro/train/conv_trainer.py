@@ -1,0 +1,382 @@
+"""ConvTrainer: the training-side counterpart of the serving engine's
+fault-tolerance layer (DESIGN.md Sec. 2.12).
+
+Runs the paper's CNN-classification and GAN workloads on ANY mesh
+through the mesh-aware model steps (Sec. 2.9), with:
+
+  * checkpoint/resume on the atomic `train/checkpoint.py` format and
+    deterministic data skip-ahead (`data/pipeline.py::ConvDataset` --
+    batches are pure functions of (seed, step), so an interrupted run
+    resumes bit-identically and an elastic restart replays the exact
+    same stream on a different mesh);
+  * an IN-GRAPH numerics guard: each jitted step additionally returns a
+    scalar all-finite flag over the updated params + loss
+    (`models/layers.py::tree_all_finite` -- cheap XLA reductions folded
+    into the same launch plan; the guarded step is jaxpr-pinned to the
+    same `pallas_call` count as the unguarded one);
+  * a non-finite policy owned by the shared `StepGuard`: rollback to
+    the last good in-memory state (steps never donate, so rollback is
+    keeping the previous pytree), per-layer blame localization run
+    EAGERLY on the reference backend only on the failure path, then
+    bounded retry / skip / shrink-lr before giving up;
+  * seeded fault consultation: one `serve.faults.FaultInjector` site
+    (`train.<workload>`) is stepped once per step ATTEMPT --
+    launch-class events raise / delay, output-class events poison the
+    host batch so the REAL guard trips (no test-only seam).
+
+The run-level recovery loop (host loss -> survivors -> `elastic_mesh`
+-> re-sharded restore -> continue) lives in `train/supervisor.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.data.pipeline import ConvDataset
+from repro.models import cnn, gan
+from repro.parallel import sharding as sh
+from repro.serve import faults
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import StepGuard
+
+WORKLOADS = ("cnn", "gan", "gan_gen")
+
+
+class NonFiniteStepError(RuntimeError):
+    """The bounded non-finite retry policy gave up: the step produced
+    non-finite updates `max_retries`+ times in a row with clean data,
+    which means the loss surface (or a kernel) is broken -- retrying
+    further would hide a real bug.  Carries the per-layer blame."""
+
+    def __init__(self, step: int, blame: Sequence[str]):
+        super().__init__(
+            f"step {step} non-finite after bounded retries; "
+            f"non-finite grads in: {list(blame)}")
+        self.step = step
+        self.blame = tuple(blame)
+
+
+@dataclasses.dataclass
+class ConvTrainerConfig:
+    workload: str = "cnn"            # cnn | gan | gan_gen
+    total_steps: int = 8
+    lr: float = 0.05
+    backend: Optional[str] = None    # reference | xla_zero_free | pallas
+    fuse_epilogue: bool = True
+    stride: int = 2                  # CNN downsampling stride
+    # model geometry (JSON-stable scalars/lists so bench configs can
+    # carry a ConvTrainerConfig verbatim)
+    widths: Sequence[int] = (8, 16)
+    image: int = 12
+    channels: int = 3
+    n_classes: int = 10
+    z_dim: int = 16
+    base: int = 8
+    batch: int = 8
+    seed: int = 0
+    # checkpointing
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 4
+    keep_last: int = 3
+    async_checkpoint: bool = False
+    # guard / fault policy
+    guard: bool = True
+    step_timeout_s: Optional[float] = None
+    max_retries: int = 2
+    nonfinite_policy: str = "skip"   # skip | shrink_lr
+    lr_shrink: float = 0.5
+    blame: bool = True               # eager per-layer localization
+
+    def __post_init__(self):
+        if self.workload not in WORKLOADS:
+            raise ValueError(f"workload must be one of {WORKLOADS}, "
+                             f"got {self.workload!r}")
+
+
+_BATCH_KEYS = {"cnn": ("x", "labels"), "gan": ("z", "real"),
+               "gan_gen": ("z",)}
+
+
+class ConvTrainer:
+    """One conv training run on one (fixed) mesh.  Mesh changes are a
+    supervisor concern: the supervisor builds a fresh ConvTrainer per
+    elastic mesh and the checkpoint format re-shards on restore."""
+
+    def __init__(self, tcfg: ConvTrainerConfig, *,
+                 mesh: Optional[Mesh] = None,
+                 injector: Optional["faults.FaultInjector"] = None):
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.injector = injector
+        self.data = ConvDataset(
+            kind=tcfg.workload, batch=tcfg.batch, image=tcfg.image,
+            channels=tcfg.channels, n_classes=tcfg.n_classes,
+            z_dim=tcfg.z_dim, seed=tcfg.seed)
+        self.guard = StepGuard(
+            step_timeout_s=tcfg.step_timeout_s,
+            max_retries=tcfg.max_retries,
+            nonfinite_policy=tcfg.nonfinite_policy,
+            lr_shrink=tcfg.lr_shrink)
+        self._ckptr = (ckpt.AsyncCheckpointer(tcfg.ckpt_dir,
+                                              tcfg.keep_last)
+                       if tcfg.ckpt_dir and tcfg.async_checkpoint
+                       else None)
+        self._site = faults.train_site(tcfg.workload)
+        # NO donation: rollback after a non-finite step is simply
+        # keeping the previous state pytree alive.
+        self._jit = jax.jit(self.build_step(guarded=tcfg.guard))
+        self.blames: List[Dict[str, Any]] = []
+        # Monotonic time of this trainer's first COMPLETED step (jit +
+        # restore included); the supervisor reads it for recovery-cost
+        # accounting even when the run later dies mid-segment.
+        self.first_step_wall: Optional[float] = None
+
+    # -- step construction ---------------------------------------------------
+    def build_step(self, *, guarded: bool) -> Callable:
+        """`(state, data_tuple, lr) -> (new_state, metrics, finite)` for
+        this workload.  `lr` is a traced scalar, so shrink-lr retries
+        reuse the compiled step.  With `guarded=False` the finite flag
+        is a constant True and the body is exactly today's unguarded
+        model step (the benchmark's overhead baseline)."""
+        t = self.tcfg
+        be, fe = t.backend, t.fuse_epilogue
+        if t.workload == "cnn":
+            def fn(state, data, lr):
+                x, labels = data
+                if guarded:
+                    new, loss, fin = cnn.guarded_sgd_step(
+                        state, x, labels, lr=lr, stride=t.stride,
+                        backend=be, fuse_epilogue=fe)
+                else:
+                    new, loss = cnn.sgd_step(
+                        state, x, labels, lr=lr, stride=t.stride,
+                        backend=be, fuse_epilogue=fe)
+                    fin = jnp.asarray(True)
+                return new, {"loss": loss}, fin
+        elif t.workload == "gan_gen":
+            def fn(state, data, lr):
+                (z,) = data
+                if guarded:
+                    new_g, loss, fin = gan.guarded_gen_sgd_step(
+                        state["g"], state["d"], z, lr=lr, backend=be,
+                        fuse_epilogue=fe)
+                else:
+                    new_g, loss = gan.gen_sgd_step(
+                        state["g"], state["d"], z, lr=lr, backend=be,
+                        fuse_epilogue=fe)
+                    fin = jnp.asarray(True)
+                return ({"g": new_g, "d": state["d"]}, {"loss": loss},
+                        fin)
+        else:   # gan: simultaneous G+D step on the {"g","d"} pytree
+            def fn(state, data, lr):
+                z, real = data
+                if guarded:
+                    new, g_loss, d_loss, fin = gan.guarded_gan_sgd_step(
+                        state, z, real, lr=lr, backend=be,
+                        fuse_epilogue=fe)
+                else:
+                    new, g_loss, d_loss = gan.gan_sgd_step(
+                        state, z, real, lr=lr, backend=be,
+                        fuse_epilogue=fe)
+                    fin = jnp.asarray(True)
+                return new, {"loss": g_loss, "d_loss": d_loss}, fin
+        return fn
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self):
+        t = self.tcfg
+        key = jax.random.PRNGKey(t.seed)
+        if t.workload == "cnn":
+            state = cnn.simple_cnn_init(
+                key, in_ch=t.channels, widths=tuple(t.widths),
+                n_classes=t.n_classes)
+        else:
+            state = gan.gan_init(key, z_dim=t.z_dim, base=t.base,
+                                 ch=t.channels)
+        if self.mesh is not None:
+            with self.mesh, sh.use_mesh(self.mesh):
+                state = jax.device_put(
+                    state, sh.tree_shardings(state, self.mesh))
+        return state
+
+    def maybe_restore(self) -> Tuple[Any, int]:
+        """(state, start_step): the latest INTACT checkpoint re-sharded
+        onto THIS trainer's mesh (torn steps fall back with a
+        RuntimeWarning inside `checkpoint.latest_step`/`restore`), or
+        the seeded init at step 0."""
+        state = self.init_state()
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return state, 0
+        step = ckpt.latest_step(d)
+        if step is None:
+            return state, 0
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+        shardings = None
+        if self.mesh is not None:
+            with self.mesh, sh.use_mesh(self.mesh):
+                shardings = sh.tree_shardings(like, self.mesh)
+        return ckpt.restore(d, step, like, shardings), step
+
+    def save(self, step: int, state, *, blocking: bool = False):
+        if not self.tcfg.ckpt_dir:
+            return
+        if self._ckptr is not None and not blocking:
+            self._ckptr.save_async(step, state)
+        else:
+            if self._ckptr is not None:
+                self._ckptr.wait()
+            ckpt.save(self.tcfg.ckpt_dir, step, state,
+                      keep_last=self.tcfg.keep_last)
+
+    # -- data placement ------------------------------------------------------
+    def _put_batch(self, batch: Dict[str, np.ndarray]) -> tuple:
+        arrs = [np.asarray(batch[k])
+                for k in _BATCH_KEYS[self.tcfg.workload]]
+        if self.mesh is None:
+            return tuple(jnp.asarray(a) for a in arrs)
+        with self.mesh, sh.use_mesh(self.mesh):
+            return tuple(
+                jax.device_put(a, NamedSharding(
+                    self.mesh,
+                    sh.batch_pspec(self.mesh, a.ndim, 0, a.shape[0])))
+                for a in arrs)
+
+    # -- blame localization (failure path only) ------------------------------
+    def localize_nonfinite(self, state, batch) -> List[str]:
+        """Which layer's grad went non-finite: recompute the gradients
+        EAGERLY (no jit) on the reference backend from host copies and
+        name the offending leaves.  This runs only after the in-graph
+        guard already tripped, so its cost is off the hot path."""
+        t = self.tcfg
+        host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                            state)
+
+        if t.workload == "cnn":
+            x = jnp.asarray(batch["x"])
+            labels = jnp.asarray(batch["labels"])
+            grads = jax.grad(lambda p: cnn.cnn_loss(
+                p, x, labels, stride=t.stride, backend="reference",
+                fuse_epilogue=False))(host)
+        elif t.workload == "gan_gen":
+            z = jnp.asarray(batch["z"])
+
+            def g_loss(gp):
+                fake = gan.generator_apply(gp, z, backend="reference",
+                                           fuse_epilogue=False)
+                d_fake = gan.discriminator_apply(
+                    host["d"], fake, backend="reference",
+                    fuse_epilogue=False)
+                return jax.nn.softplus(-d_fake).mean()
+
+            grads = {"g": jax.grad(g_loss)(host["g"])}
+        else:
+            z = jnp.asarray(batch["z"])
+            real = jnp.asarray(batch["real"])
+
+            def both(st):
+                g_loss, d_loss = gan.gan_losses(
+                    st["g"], st["d"], z, real, backend="reference",
+                    fuse_epilogue=False)
+                return g_loss + d_loss
+
+            grads = jax.grad(both)(host)
+
+        bad = []
+        for path, leaf in jax.tree_util.tree_flatten_with_path(grads)[0]:
+            if not np.all(np.isfinite(np.asarray(leaf))):
+                bad.append(jax.tree_util.keystr(path))
+        return sorted(bad)
+
+    # -- loop ----------------------------------------------------------------
+    def _run_step(self, state, data, lr):
+        if self.mesh is None:
+            return self._jit(state, data, lr)
+        with self.mesh, sh.use_mesh(self.mesh):
+            return self._jit(state, data, lr)
+
+    def run(self, *, fail_hook: Optional[Callable[[int], None]] = None
+            ) -> Dict[str, Any]:
+        """Train to total_steps, resuming from the latest intact
+        checkpoint.  `fail_hook(step)` is the supervisor's seam: called
+        once per step BEFORE the attempt, it raises `HostFailure` (or
+        any injected fault) to simulate losing part of the mesh.
+
+        Returns state/history plus the guard stats and
+        `first_step_wall` -- the monotonic time at which the first step
+        of THIS trainer completed (jit + restore included), which the
+        supervisor uses to account recovery wallclock."""
+        t = self.tcfg
+        state, start = self.maybe_restore()
+        history: List[Dict[str, Any]] = []
+        lr_scale = 1.0
+        first_step_wall: Optional[float] = None
+        step = start
+        while step < t.total_steps:
+            if fail_hook is not None:
+                fail_hook(step)
+            batch = self.data.batch_at(step)   # deterministic skip-ahead
+            ev = None
+            if self.injector is not None:
+                # Launch-class events raise/delay here; output-class
+                # events poison the HOST batch so the real in-graph
+                # guard trips on device.
+                try:
+                    ev = self.injector.raise_or_delay(self._site)
+                except faults.InjectedFault as e:
+                    e.train_step = step   # the supervisor accounts
+                    raise                 # steps lost by TRAIN step
+                batch = faults.poison_batch(self.injector, ev, batch)
+            data = self._put_batch(batch)
+            self.guard.start_step()
+            new_state, metrics, finite = self._run_step(
+                state, data, jnp.float32(t.lr * lr_scale))
+            straggled = False
+            if bool(np.asarray(finite)):
+                state = new_state           # commit
+                self.guard.good_step()
+                lr_scale = 1.0
+                straggled = self.guard.straggled()
+                if first_step_wall is None:
+                    first_step_wall = time.monotonic()
+                    self.first_step_wall = first_step_wall
+                history.append({"step": step + 1,
+                                "loss": float(np.asarray(
+                                    metrics["loss"]))})
+                if straggled:
+                    # Straggler watchdog: checkpoint now so a slow host
+                    # can be evicted without losing work.
+                    self.save(step + 1, state, blocking=True)
+                elif t.ckpt_dir and (step + 1) % t.ckpt_every == 0:
+                    self.save(step + 1, state)
+                step += 1
+                continue
+            # Non-finite: new_state is DISCARDED (rollback = the old
+            # pytree), blame is localized eagerly, and the shared guard
+            # decides between retry / skip / shrink-lr / give-up.
+            blame = (self.localize_nonfinite(state, batch)
+                     if t.blame else [])
+            self.blames.append({"step": step, "grads": blame,
+                                "injected": ev is not None})
+            decision = self.guard.nonfinite()
+            if decision.action == "give_up":
+                raise NonFiniteStepError(step, blame)
+            if decision.action == "skip":
+                step += 1
+                continue
+            lr_scale = decision.lr_scale    # retry the SAME step
+        if t.ckpt_dir:
+            self.save(t.total_steps, state, blocking=True)
+        if self._ckptr is not None:
+            self._ckptr.wait()
+        return {"state": state, "history": history,
+                "start_step": start, "guard_stats": dict(self.guard.stats),
+                "blames": list(self.blames),
+                "first_step_wall": first_step_wall}

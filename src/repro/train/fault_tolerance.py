@@ -1,22 +1,40 @@
-"""Fault-tolerance utilities: elastic re-meshing and restart orchestration.
+"""Fault-tolerance utilities: elastic re-meshing, the shared per-step
+guard, and restart orchestration.
 
-The policies (DESIGN.md Sec. 6):
+The policies (DESIGN.md Sec. 6 and Sec. 2.12):
   * node failure   -> restart from the latest atomic checkpoint; data
     pipeline skip-ahead is free because batches are pure functions of step.
   * shrink/grow    -> `elastic_mesh` builds the largest valid (data, model)
     mesh from surviving devices; checkpoint restore re-shards every leaf
     onto the new mesh (leaves are stored unsharded).
-  * stragglers     -> Trainer's step-timeout watchdog forces an early
-    checkpoint so a slow host can be evicted without losing work.
+  * stragglers     -> the `StepGuard` step-timeout watchdog forces an
+    early checkpoint so a slow host can be evicted without losing work.
+  * bad numerics   -> `StepGuard` also owns the bounded non-finite retry
+    policy (rollback + retry, then skip or shrink-lr, then give up) the
+    LM `Trainer` and the conv `ConvTrainer` share instead of diverging
+    copies.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from typing import Optional, Sequence
 
 import numpy as np
 
 import jax
 from jax.sharding import Mesh
+
+
+class HostFailure(RuntimeError):
+    """Raised (by a schedule hook / the injector mapping) when hosts are
+    lost at a step; the run supervisor catches it, rebuilds the mesh
+    from survivors, and resumes from the latest intact checkpoint."""
+
+    def __init__(self, step: int, hosts: Sequence[int]):
+        super().__init__(f"lost host(s) {sorted(hosts)} at step {step}")
+        self.step = int(step)
+        self.hosts = tuple(sorted(int(h) for h in hosts))
 
 
 def elastic_mesh(devices: Optional[Sequence] = None, *,
@@ -52,6 +70,97 @@ def survivors(mesh: Mesh, failed_host_ids: Sequence[int],
         if host not in failed_host_ids:
             out.append(d)
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardDecision:
+    """What to do after a non-finite step: `action` in
+    retry | skip | give_up; `lr_scale` applies to retries only."""
+    action: str
+    lr_scale: float = 1.0
+
+
+class StepGuard:
+    """The per-step guard the LM `Trainer` and `ConvTrainer` share: one
+    straggler watchdog plus one bounded non-finite retry state machine
+    (DESIGN.md Sec. 2.12).
+
+    Straggler side: `start_step()` before the step, `straggled()` after
+    -- True when the step exceeded `step_timeout_s` (the caller forces a
+    blocking checkpoint so the slow host can be evicted without losing
+    work).
+
+    Numerics side: on a non-finite step the caller rolls back to its
+    last good in-memory state (steps are non-donating, so "rollback" is
+    keeping the old pytree) and asks `nonfinite()` what to do next:
+
+      failure 1              -> retry the SAME step at full lr (the
+                                dominant transient case: a poisoned
+                                batch, a one-off kernel glitch);
+      failure 2..max_retries -> policy: "skip" abandons the step and
+                                moves on; "shrink_lr" retries at
+                                lr * lr_shrink**(failures-1);
+      failure > max_retries  -> give_up (the caller raises -- the loss
+                                surface itself is producing non-finite
+                                updates and retrying is hiding a bug).
+
+    `good_step()` resets the per-step attempt counter; `stats` counts
+    every decision for tests/benchmarks."""
+
+    def __init__(self, *, step_timeout_s: Optional[float] = None,
+                 max_retries: int = 2, nonfinite_policy: str = "skip",
+                 lr_shrink: float = 0.5):
+        if nonfinite_policy not in ("skip", "shrink_lr"):
+            raise ValueError(
+                f"nonfinite_policy must be 'skip' or 'shrink_lr', "
+                f"got {nonfinite_policy!r}")
+        if max_retries < 1:
+            raise ValueError(f"max_retries must be >= 1, got {max_retries}")
+        self.step_timeout_s = step_timeout_s
+        self.max_retries = max_retries
+        self.nonfinite_policy = nonfinite_policy
+        self.lr_shrink = lr_shrink
+        self._t0: Optional[float] = None
+        self._failures = 0
+        self.stats = {"stragglers": 0, "nonfinite_steps": 0,
+                      "retries": 0, "skips": 0, "lr_shrinks": 0,
+                      "give_ups": 0}
+
+    # -- straggler watchdog --------------------------------------------------
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def straggled(self) -> bool:
+        if self.step_timeout_s is None or self._t0 is None:
+            return False
+        if time.monotonic() - self._t0 > self.step_timeout_s:
+            self.stats["stragglers"] += 1
+            return True
+        return False
+
+    # -- non-finite policy ---------------------------------------------------
+    def nonfinite(self) -> GuardDecision:
+        self._failures += 1
+        n = self._failures
+        if n == 1:
+            self.stats["nonfinite_steps"] += 1
+        if n > self.max_retries:
+            self.stats["give_ups"] += 1
+            self._failures = 0
+            return GuardDecision("give_up")
+        if n == 1:
+            self.stats["retries"] += 1
+            return GuardDecision("retry", 1.0)
+        if self.nonfinite_policy == "skip":
+            self.stats["skips"] += 1
+            self._failures = 0
+            return GuardDecision("skip")
+        self.stats["retries"] += 1
+        self.stats["lr_shrinks"] += 1
+        return GuardDecision("retry", self.lr_shrink ** (n - 1))
+
+    def good_step(self):
+        self._failures = 0
 
 
 def host_failure_schedule(seed: int, *, n_hosts: int, n_steps: int,

@@ -1,0 +1,185 @@
+"""RunSupervisor: drives a whole conv training run under the seeded
+fault registry, surviving host loss by elastic re-meshing (DESIGN.md
+Sec. 2.12).
+
+The recovery protocol, per caught failure:
+
+  1. classify -- a `HostFailure` (from the host-loss schedule hook) or
+     an `InjectedDeviceLoss` (from the per-step injector site) names
+     which hosts died; an `InjectedKernelFault` keeps the mesh;
+  2. shrink   -- `fault_tolerance.survivors` drops the dead hosts'
+     devices and `elastic_mesh` builds the largest valid (data, model)
+     mesh from what remains (model axis halves until it divides);
+  3. restore  -- a FRESH `ConvTrainer` on the new mesh restores the
+     latest intact checkpoint, re-sharded leaf-by-leaf onto the shrunk
+     mesh (torn checkpoints fall back with a RuntimeWarning); the data
+     pipeline skips ahead for free (batches are pure in (seed, step));
+  4. account  -- steps lost (failure step minus restored step), one
+     recompile (the fresh trainer's jit), and recovery wallclock (from
+     catching the failure to the new trainer's first completed step).
+
+Non-finite steps never reach the supervisor: the trainer's in-graph
+guard + `StepGuard` policy handle rollback/retry inside the run.  The
+supervisor only restarts on faults that invalidate the mesh or the
+process, bounded by `max_recoveries`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from repro.serve.faults import (InjectedDeviceLoss, InjectedFault)
+from repro.train import checkpoint as ckpt
+from repro.train.conv_trainer import ConvTrainer, ConvTrainerConfig
+from repro.train.fault_tolerance import (HostFailure, elastic_mesh,
+                                         survivors)
+
+
+class RunSupervisor:
+    """Owns the device universe for one run: builds meshes, trainers,
+    and the recovery report.
+
+    `host_schedule` is `{step: [host_id, ...]}` (the shape
+    `fault_tolerance.host_failure_schedule` returns); each entry fires
+    once, at the first trainer step >= its key that a live trainer
+    reaches.  `injector` is threaded into every trainer, so per-step
+    faults (NaN poison, kernel exceptions, latency spikes, device
+    losses) replay from the same seeded registry across recoveries --
+    counters advance monotonically over the whole run."""
+
+    def __init__(self, tcfg: ConvTrainerConfig, *,
+                 devices: Optional[Sequence] = None,
+                 devices_per_host: int = 1, model_parallel: int = 2,
+                 host_schedule: Optional[Dict[int, List[int]]] = None,
+                 injector=None, max_recoveries: int = 8):
+        if not tcfg.ckpt_dir:
+            raise ValueError("RunSupervisor needs tcfg.ckpt_dir: "
+                             "recovery restores from checkpoints")
+        self.tcfg = tcfg
+        self.devices = list(devices if devices is not None
+                            else jax.devices())
+        self.devices_per_host = devices_per_host
+        self.model_parallel = model_parallel
+        self.host_schedule = dict(host_schedule or {})
+        self.injector = injector
+        self.max_recoveries = max_recoveries
+        self.report: Dict[str, Any] = {
+            "recoveries": [], "steps_lost": 0, "recompiles": 0,
+            "recovery_wallclock_s": 0.0, "meshes": [],
+            "host_losses": 0, "device_losses": 0, "kernel_faults": 0,
+            # StepGuard stats summed over every trainer segment (each
+            # elastic mesh gets a fresh trainer + guard)
+            "guard": {"stragglers": 0, "nonfinite_steps": 0,
+                      "retries": 0, "skips": 0, "lr_shrinks": 0,
+                      "give_ups": 0}}
+
+    def _live_hosts(self) -> List[int]:
+        return sorted({d.id // self.devices_per_host
+                       for d in self.devices})
+
+    def _hook(self):
+        """Per-step hook for the trainer: fire every pending scheduled
+        host loss whose step has arrived (>=, not ==: a step skipped by
+        the guard or lost to an earlier recovery must not defuse the
+        failure)."""
+        pending = self.host_schedule
+
+        def hook(step: int):
+            due = [s for s in pending if s <= step]
+            if not due:
+                return
+            hosts: List[int] = []
+            for s in due:
+                hosts.extend(pending.pop(s))
+            live = set(self._live_hosts())
+            hosts = sorted(set(h for h in hosts if h in live))
+            if hosts and len(hosts) < len(live):
+                raise HostFailure(step, hosts)
+            # Losing every host (or only already-dead ones) is not an
+            # elastic event -- nothing to do.
+        return hook
+
+    def _shrink(self, mesh: Mesh, dead_hosts: Sequence[int]):
+        self.devices = survivors(mesh, list(dead_hosts),
+                                 self.devices_per_host)
+
+    def run(self) -> Dict[str, Any]:
+        """Drive the run to total_steps across as many elastic meshes
+        as the storm requires; returns the final trainer output plus
+        the recovery report."""
+        t_recover_from: Optional[float] = None
+        failed_step: Optional[int] = None
+        while True:
+            mesh = elastic_mesh(self.devices,
+                                model_parallel=self.model_parallel)
+            self.report["meshes"].append(
+                {ax: int(mesh.shape[ax]) for ax in mesh.axis_names})
+            trainer = ConvTrainer(self.tcfg, mesh=mesh,
+                                  injector=self.injector)
+            if t_recover_from is not None:
+                # Recovery accounting: the fresh trainer's jit is the
+                # recompile; steps lost = failure step minus the step
+                # the intact checkpoint put us back to.
+                restored = ckpt.latest_step(self.tcfg.ckpt_dir) or 0
+                self.report["recompiles"] += 1
+                self.report["steps_lost"] += max(
+                    0, failed_step - restored)
+            try:
+                out = trainer.run(fail_hook=self._hook())
+            except HostFailure as e:
+                self._account_segment(trainer, t_recover_from)
+                self._on_failure("host_losses", e.step, mesh, e.hosts)
+                t_recover_from, failed_step = time.monotonic(), e.step
+                continue
+            except InjectedDeviceLoss as e:
+                # The injector names an invocation, not a host: map the
+                # loss to the highest-id live host (deterministic).
+                step = getattr(e, "train_step", e.index)
+                if len(self._live_hosts()) <= 1:
+                    raise   # nothing left to shrink to
+                dead = [self._live_hosts()[-1]]
+                self._account_segment(trainer, t_recover_from)
+                self._on_failure("device_losses", step, mesh, dead)
+                t_recover_from, failed_step = time.monotonic(), step
+                continue
+            except InjectedFault as e:
+                # Kernel fault: the mesh is fine -- restart the loop
+                # from the latest checkpoint on the same devices.
+                step = getattr(e, "train_step", e.index)
+                self._account_segment(trainer, t_recover_from)
+                self._on_failure("kernel_faults", step, mesh, [])
+                t_recover_from, failed_step = time.monotonic(), step
+                continue
+            self._account_segment(trainer, t_recover_from)
+            out["report"] = self.report
+            return out
+
+    def _account_segment(self, trainer: ConvTrainer,
+                         t_recover_from: Optional[float]):
+        """Close out one trainer segment: fold its guard stats into the
+        run-wide totals, and (when the segment was itself a recovery)
+        account the recovery wallclock -- failure catch -> the fresh
+        trainer's first completed step (restore + recompile + step
+        included) -- even when that trainer later dies too."""
+        for k, v in trainer.guard.stats.items():
+            self.report["guard"][k] += v
+        if t_recover_from is not None and \
+                trainer.first_step_wall is not None:
+            self.report["recovery_wallclock_s"] += (
+                trainer.first_step_wall - t_recover_from)
+
+    def _on_failure(self, kind: str, step: int, mesh: Mesh,
+                    dead_hosts: Sequence[int]):
+        if len(self.report["recoveries"]) >= self.max_recoveries:
+            raise RuntimeError(
+                f"supervisor exceeded max_recoveries="
+                f"{self.max_recoveries}")
+        self.report[kind] += 1
+        self.report["recoveries"].append(
+            {"kind": kind, "step": int(step),
+             "dead_hosts": sorted(int(h) for h in dead_hosts)})
+        if dead_hosts:
+            self._shrink(mesh, dead_hosts)

@@ -21,6 +21,7 @@ from repro.optim.optimizer import AdamWConfig, adamw_init
 from repro.launch.steps import make_train_step
 from repro.parallel import sharding as sh
 from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import StepGuard
 
 
 @dataclasses.dataclass
@@ -49,6 +50,10 @@ class Trainer:
         self._ckptr = (ckpt.AsyncCheckpointer(self.tcfg.ckpt_dir,
                                               self.tcfg.keep_last)
                        if self.tcfg.ckpt_dir else None)
+        # Shared straggler watchdog (fault_tolerance.StepGuard): the
+        # ConvTrainer runs the same implementation with the non-finite
+        # retry side enabled as well.
+        self.guard = StepGuard(step_timeout_s=self.tcfg.step_timeout_s)
 
         with mesh, sh.use_mesh(mesh):
             params_abs = jax.eval_shape(self.lm.init,
@@ -91,7 +96,7 @@ class Trainer:
                                     jax.random.PRNGKey(self.tcfg.seed))
         opt_abs = jax.eval_shape(lambda p: adamw_init(p, self.opt_cfg),
                                  params_abs)
-        state = ckpt.restore(f"{d}/step_{step}" and d, step,
+        state = ckpt.restore(d, step,
                              {"params": params_abs, "opt": opt_abs},
                              {"params": self.p_sh, "opt": self.o_sh})
         return state["params"], state["opt"], step
@@ -113,17 +118,14 @@ class Trainer:
         fault-tolerance tests to simulate a node failure."""
         params, opt, start = self.maybe_restore()
         history = []
-        t_last = time.time()
         for step in range(start, self.tcfg.total_steps):
             batch = self.dataset.batch(step)  # deterministic skip-ahead
+            self.guard.start_step()
             with self.mesh, sh.use_mesh(self.mesh):
                 params, opt, metrics = self.step_fn(params, opt, batch)
-            if self.tcfg.step_timeout_s is not None:
-                dt = time.time() - t_last
-                if dt > self.tcfg.step_timeout_s:
-                    # Straggler watchdog: surface, checkpoint, continue.
-                    self.save(step + 1, params, opt, blocking=True)
-            t_last = time.time()
+            if self.guard.straggled():
+                # Straggler watchdog: surface, checkpoint, continue.
+                self.save(step + 1, params, opt, blocking=True)
             if (step + 1) % self.tcfg.log_every == 0 or \
                     step + 1 == self.tcfg.total_steps:
                 history.append({"step": step + 1,
